@@ -1,0 +1,53 @@
+"""BEYOND-PAPER: extended dynamic-switch policy ("multi-read mode").
+
+The paper switches READ↔MAC at popcount==1.  Under the flash-ADC energy
+model, one full 6-bit MAC conversion costs ≈8.6× a 3-bit read, so
+serializing up to ~8 activated rows through the READ path still beats a
+single MAC on ENERGY — at a latency cost (reads serialize on the tile).
+
+This benchmark sweeps the switch threshold and reports the energy/latency
+frontier; threshold=1 is the paper's operating point, the energy-optimal
+threshold is derived from the cost model at runtime
+(core.dynamic_switch.energy_breakeven_rows)."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, prepared_workload
+from repro.core import baselines, build_cooccurrence, energy_breakeven_rows, simulate_batch
+from repro.core.energy import DEFAULT_RERAM
+
+THRESHOLDS = [1, 2, 4, 8, 12]
+
+
+def run() -> list:
+    rows = []
+    be = energy_breakeven_rows(DEFAULT_RERAM)
+    rows.append({
+        "name": "beyond_multiread_breakeven",
+        "us_per_call": "",
+        "derived": f"energy_breakeven_rows={be}",
+    })
+    for wl in ["software", "automotive"]:
+        num_rows, hist, ev, graph = prepared_workload(wl)
+        ev_b = ev[:256]
+        layout, base = baselines.recross_pipeline(graph, ev_b, batch_size=256)
+        for th in THRESHOLDS:
+            rep = simulate_batch(layout, ev_b, switch_threshold=th)
+            rows.append({
+                "name": f"beyond_multiread_t{th}[{wl}]",
+                "us_per_call": rep.completion_time_ns / 1e3,
+                "derived": (
+                    f"energy_vs_t1={base.energy_pj / rep.energy_pj:.3f}x;"
+                    f"time_vs_t1={base.completion_time_ns / rep.completion_time_ns:.3f}x;"
+                    f"read_frac={rep.read_fraction:.2f}"
+                ),
+            })
+    return rows
+
+
+def main():
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Shared benchmark scaffolding: workload prep + CSV emission."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+from repro.core import build_cooccurrence
+from repro.data import make_workload
+
+# scaled-down table sizes keep the suite < ~5 min on one CPU core while
+# preserving the power-law/co-occurrence statistics (scale=1.0 reproduces
+# the Table I sizes exactly)
+DEFAULT_SCALE = 0.02
+DEFAULT_QUERIES = 768
+HISTORY_FRACTION = 1 / 3  # offline co-occurrence history vs online eval split
+
+
+def prepared_workload(name: str, *, scale: float = DEFAULT_SCALE,
+                      num_queries: int = DEFAULT_QUERIES, seed: int = 0):
+    """Returns (num_rows, history_queries, eval_queries, graph)."""
+    _, rows, qs = make_workload(name, num_queries=num_queries, scale=scale, seed=seed)
+    split = int(len(qs) * HISTORY_FRACTION)
+    hist, ev = qs[:split], qs[split:]
+    graph = build_cooccurrence(hist, rows)
+    return rows, hist, ev, graph
+
+
+def emit(rows: List[Dict]) -> None:
+    """Prints ``name,us_per_call,derived`` CSV rows (benchmark contract)."""
+    for r in rows:
+        print(f"{r['name']},{r.get('us_per_call', '')},{r.get('derived', '')}")
+
+
+def time_call(fn: Callable, *args, repeats: int = 3, **kw) -> float:
+    """Median wall time of fn(*args) in microseconds."""
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(*args, **kw)
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))

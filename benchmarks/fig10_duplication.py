@@ -1,0 +1,43 @@
+"""Paper Fig. 10: access-aware allocation under area budgets
+(Dup-0/5/10/20%): execution time and energy vs the no-duplication
+simplified ReCross.  Improvement converges as duplication grows."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, prepared_workload
+from repro.core import baselines
+from repro.data.synthetic import WORKLOADS
+
+BUDGETS = [0.0, 0.05, 0.10, 0.20]
+
+
+def run() -> list:
+    rows = []
+    for wl in ["software", "automotive"]:
+        num_rows, hist, ev, graph = prepared_workload(wl)
+        ev_b = ev[:256]
+        base = None
+        for budget in BUDGETS:
+            _, rep = baselines.recross_pipeline(
+                graph, ev_b, batch_size=256, area_budget_ratio=budget
+            )
+            if base is None:
+                base = rep
+            rows.append({
+                "name": f"fig10_dup{int(budget * 100)}pct[{wl}]",
+                "us_per_call": rep.completion_time_ns / 1e3,
+                "derived": (
+                    f"speedup_vs_dup0={rep.speedup_over(base):.2f}x;"
+                    f"energy_eff_vs_dup0={rep.energy_efficiency_over(base):.2f}x;"
+                    f"stall_ns={rep.stall_ns:.0f}"
+                ),
+            })
+    return rows
+
+
+def main():
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

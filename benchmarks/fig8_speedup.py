@@ -1,0 +1,51 @@
+"""Paper Fig. 8: normalized speedup + energy efficiency of ReCross vs
+naive and nMARS, across the five Amazon-Review workloads.
+
+Paper claims (ReCross vs naive, (vs nMARS)): speedup 2.58–6.85×
+(2.60–5.48×); energy efficiency 3.60–12.55× (1.39–3.65×)."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, prepared_workload
+from repro.core import baselines, simulate_cpu_baseline
+from repro.data.synthetic import WORKLOADS
+
+
+def run(scale=None) -> list:
+    rows = []
+    for wl in WORKLOADS:
+        num_rows, hist, ev, graph = prepared_workload(wl)
+        batch = 256
+        ev_b = ev[:batch]
+        _, rx = baselines.recross_pipeline(graph, ev_b, batch_size=batch)
+        _, nv = baselines.naive_pipeline(num_rows, ev_b)
+        _, nm = baselines.nmars_pipeline(num_rows, ev_b)
+        rows.append({
+            "name": f"fig8_speedup_vs_naive[{wl}]",
+            "us_per_call": rx.completion_time_ns / 1e3,
+            "derived": f"{rx.speedup_over(nv):.2f}x",
+        })
+        rows.append({
+            "name": f"fig8_speedup_vs_nmars[{wl}]",
+            "us_per_call": nm.completion_time_ns / 1e3,
+            "derived": f"{rx.speedup_over(nm):.2f}x",
+        })
+        rows.append({
+            "name": f"fig8_energy_eff_vs_naive[{wl}]",
+            "us_per_call": "",
+            "derived": f"{rx.energy_efficiency_over(nv):.2f}x",
+        })
+        rows.append({
+            "name": f"fig8_energy_eff_vs_nmars[{wl}]",
+            "us_per_call": "",
+            "derived": f"{rx.energy_efficiency_over(nm):.2f}x",
+        })
+    return rows
+
+
+def main():
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

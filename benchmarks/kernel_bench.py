@@ -1,0 +1,76 @@
+"""Kernel micro-benchmarks: crossbar_reduce (ReCross datapath) vs
+embedding_bag (naive datapath) vs dense oracle, plus the dynamic-switch
+MAC-FLOP savings.
+
+Wall-times on this CPU container reflect interpret-mode execution (the
+kernel body run in Python), NOT TPU performance — they are emitted for
+regression tracking only; the FLOP/byte derived column is the
+hardware-independent signal."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, prepared_workload, time_call
+from repro.core import baselines, compile_queries
+from repro.core.reduction import reduce_dense_oracle, reduce_via_layout, reduction_flops
+from repro.kernels import crossbar_reduce
+
+
+def run() -> list:
+    rows = []
+    num_rows, hist, ev, graph = prepared_workload("software")
+    dim = 128
+    batch = 32
+    layout, _ = baselines.recross_pipeline(graph, ev[:256], dim=dim, batch_size=256)
+    rng = np.random.default_rng(0)
+    table = rng.normal(size=(num_rows, dim)).astype(np.float32)
+    image = jnp.asarray(
+        layout.build_image(table).reshape(layout.num_tiles, layout.tile_rows, dim)
+    )
+    cq = compile_queries(layout, ev[:batch])
+    flat = image.reshape(-1, dim)
+
+    # jit/warm the three paths
+    k_fn = jax.jit(crossbar_reduce)
+    l_fn = jax.jit(
+        lambda img, t, b: reduce_via_layout(img, t, b, tile_rows=layout.tile_rows)
+    )
+    out_k = np.asarray(k_fn(image, cq.tile_ids, cq.bitmaps))
+    out_l = np.asarray(l_fn(flat, cq.tile_ids, cq.bitmaps))
+    ref = np.asarray(reduce_dense_oracle(jnp.asarray(table), ev[:batch]))
+    assert np.allclose(out_k, ref, atol=1e-3) and np.allclose(out_l, ref, atol=1e-3)
+
+    t_kernel = time_call(lambda: k_fn(image, cq.tile_ids, cq.bitmaps).block_until_ready())
+    t_layout = time_call(lambda: l_fn(flat, cq.tile_ids, cq.bitmaps).block_until_ready())
+
+    bm = np.asarray(cq.bitmaps)
+    fl_switch = reduction_flops(bm, dim, dynamic_switch=True)
+    fl_static = reduction_flops(bm, dim, dynamic_switch=False)
+    rows.append({
+        "name": "kernel_crossbar_reduce_interpret",
+        "us_per_call": f"{t_kernel:.0f}",
+        "derived": f"batch={batch};tiles={layout.num_tiles}",
+    })
+    rows.append({
+        "name": "kernel_layout_jnp_reference",
+        "us_per_call": f"{t_layout:.0f}",
+        "derived": "pure-jnp tiled MAC",
+    })
+    rows.append({
+        "name": "kernel_dynamic_switch_flop_saving",
+        "us_per_call": "",
+        "derived": f"mac_flops={fl_static};switched={fl_switch};"
+                   f"saving={(1 - fl_switch / max(fl_static, 1)) * 100:.1f}%",
+    })
+    return rows
+
+
+def main():
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Pipeline-parallelism demo: 4 stages × 8 microbatches on placeholder
+devices, validated against sequential execution.
+
+Run: PYTHONPATH=src python examples/pipeline_parallel.py
+"""
+
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.dist.pipeline_parallel import bubble_fraction, pipelined_apply
+
+S, M, MB, D, LAYERS_PER_STAGE = 4, 8, 16, 64, 3
+
+mesh = jax.make_mesh((S,), ("stage",))
+rng = jax.random.PRNGKey(0)
+
+# stacked per-stage params: (S, layers_per_stage, D, D)
+w = jax.random.normal(rng, (S, LAYERS_PER_STAGE, D, D)) * (1.0 / np.sqrt(D))
+x = jax.random.normal(jax.random.PRNGKey(1), (M, MB, D))
+
+
+def stage_body(w_stage, h):
+    def layer(c, wl):
+        return jnp.tanh(c @ wl), None
+    out, _ = jax.lax.scan(layer, h, w_stage)
+    return out
+
+
+out_pp = jax.jit(
+    lambda ww, xx: pipelined_apply(ww, xx, stage_body, mesh)
+)(w, x)
+
+# sequential reference: all S*L layers in order
+w_flat = w.reshape(S * LAYERS_PER_STAGE, D, D)
+ref = jax.vmap(lambda xb: stage_body(w_flat, xb))(x)
+
+err = float(jnp.abs(out_pp - ref).max())
+print(f"stages={S} microbatches={M} ticks={M + S - 1} "
+      f"bubble={bubble_fraction(M, S):.1%}")
+print(f"pipeline vs sequential max |Δ| = {err:.2e}")
+assert err < 1e-5
+print("pipelined execution matches sequential ✓")

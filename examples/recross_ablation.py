@@ -1,0 +1,38 @@
+"""Ablation: which ReCross component buys what (paper §IV-B decomposition).
+
+Runs the simulator on one workload with components toggled:
+  naive → +grouping → +replication → +dynamic switch (full ReCross)
+and prints the waterfall of completion time and energy.
+
+Run: PYTHONPATH=src python examples/recross_ablation.py
+"""
+
+from repro.core import baselines, build_cooccurrence
+from repro.data import make_workload
+
+_, rows, qs = make_workload("automotive", num_queries=768, scale=0.02)
+hist, online = qs[:256], qs[256:]
+graph = build_cooccurrence(hist, rows)
+
+_, naive = baselines.naive_pipeline(rows, online)
+_, grouped = baselines.recross_pipeline(
+    graph, online, batch_size=256, replication_scheme="none", dynamic_switching=False
+)
+_, replicated = baselines.recross_pipeline(
+    graph, online, batch_size=256, replication_scheme="log", dynamic_switching=False
+)
+_, full = baselines.recross_pipeline(
+    graph, online, batch_size=256, replication_scheme="log", dynamic_switching=True
+)
+
+print(f"{'variant':<28}{'time(us)':>10}{'energy(nJ)':>12}{'speedup':>9}{'e-eff':>7}")
+for name, rep in [
+    ("naive", naive),
+    ("+ grouping (Alg.1)", grouped),
+    ("+ replication (Eq.1)", replicated),
+    ("+ dynamic switch (full)", full),
+]:
+    print(f"{name:<28}{rep.completion_time_ns/1e3:>10.2f}{rep.energy_pj/1e3:>12.2f}"
+          f"{naive.completion_time_ns/rep.completion_time_ns:>8.2f}x"
+          f"{naive.energy_pj/rep.energy_pj:>6.2f}x")
+print(f"\nread-path fraction with dynamic switch: {full.read_fraction*100:.1f}%")

@@ -1,0 +1,16 @@
+"""Serve a smoke-scale LM with continuous batching (batched requests).
+
+Demonstrates the serving stack: KV caches, slot-based continuous
+batching, per-request TTFT/latency metrics.
+
+Run: PYTHONPATH=src python examples/serve_lm.py --arch chatglm3-6b
+"""
+
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0]] + (sys.argv[1:] or ["--arch", "chatglm3-6b",
+                                                  "--requests", "6", "--slots", "3"])
+    main()

@@ -1,0 +1,94 @@
+"""End-to-end driver: train a DLRM with ReCross embedding reduction.
+
+Trains a smoke-scale DLRM on synthetic CTR data for a few hundred steps,
+with the embedding reduction running through the ReCross layout (Pallas
+kernel path), demonstrating that the paper's datapath is differentiable
+and trainable — gradients flow through crossbar_reduce's custom VJP back
+into the (permuted, replicated) table image; the logical table is
+refreshed from the image at checkpoints.
+
+Run: PYTHONPATH=src python examples/train_dlrm.py [--steps 300]
+"""
+
+import argparse
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.dlrm_recross import smoke as dlrm_smoke
+from repro.core import baselines, build_cooccurrence
+from repro.core.reduction import compile_queries
+from repro.data import zipf_queries
+from repro.models.dlrm import build_images, dlrm_forward, init_dlrm
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--lr", type=float, default=1e-2)
+    args = ap.parse_args()
+
+    cfg = dlrm_smoke()
+    rng = jax.random.PRNGKey(0)
+    params = init_dlrm(rng, cfg)
+
+    # offline phase per table
+    layouts = {}
+    for t in range(cfg.num_tables):
+        hist = zipf_queries(cfg.rows_per_table, 256, 8.0, seed=100 + t)
+        graph = build_cooccurrence(hist, cfg.rows_per_table)
+        layouts[f"t{t}"], _ = baselines.recross_pipeline(
+            graph, hist, group_size=cfg.group_size, dim=cfg.embed_dim
+        )
+    images = build_images(params, cfg, layouts)
+    # train the images directly (they ARE the device-resident table)
+    trainable = {"images": images, "bottom": params["bottom"], "top": params["top"]}
+
+    kcfg = dataclasses.replace(cfg, embedding_path="kernel")
+
+    def loss_fn(tr, dense, sparse, labels):
+        p = {"tables": params["tables"], "bottom": tr["bottom"], "top": tr["top"]}
+        logits = dlrm_forward(p, kcfg, dense, sparse, images=tr["images"])
+        return jnp.mean(
+            jnp.maximum(logits, 0) - logits * labels
+            + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+        ), logits
+
+    @jax.jit
+    def step_fn(tr, dense, sparse, labels):
+        (loss, logits), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            tr, dense, sparse, labels
+        )
+        tr = jax.tree.map(lambda p, g: p - args.lr * g.astype(p.dtype), tr, grads)
+        acc = jnp.mean((logits > 0) == (labels > 0.5))
+        return tr, loss, acc
+
+    rng_np = np.random.default_rng(0)
+    # synthetic CTR rule: label depends on overlap of two tables' hot items
+    losses = []
+    for step in range(args.steps):
+        qs = {f"t{t}": zipf_queries(cfg.rows_per_table, args.batch, 8.0,
+                                    seed=step * 7 + t) for t in range(cfg.num_tables)}
+        dense = rng_np.normal(size=(args.batch, cfg.dense_features)).astype(np.float32)
+        hot = sum((np.array([q.min() for q in qs[f"t{t}"]]) < 64).astype(np.float32)
+                  for t in range(cfg.num_tables))
+        labels = ((hot + dense[:, 0] > 1.0)).astype(np.float32)
+        sparse = {}
+        for t in range(cfg.num_tables):
+            cq = compile_queries(layouts[f"t{t}"], qs[f"t{t}"], max_tiles=32)
+            sparse[f"t{t}"] = (cq.tile_ids, cq.bitmaps)
+        trainable, loss, acc = step_fn(trainable, jnp.asarray(dense), sparse,
+                                       jnp.asarray(labels))
+        losses.append(float(loss))
+        if step % 50 == 0 or step == args.steps - 1:
+            print(f"step {step:4d} bce {float(loss):.4f} acc {float(acc):.3f}")
+    assert np.mean(losses[-20:]) < np.mean(losses[:20]), "training did not improve"
+    print("final-20 loss %.4f < first-20 loss %.4f  ✓ (trained through the "
+          "ReCross kernel datapath)" % (np.mean(losses[-20:]), np.mean(losses[:20])))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Perf hillclimb driver: run optimization variants of the three chosen
+cells and print before/after roofline terms.
+
+Usage: PYTHONPATH=src python experiments/hillclimb.py
+Results land next to the baselines in experiments/dryrun/ with variant
+suffixes; the comparison table prints at the end (pasted into
+EXPERIMENTS.md §Perf together with the hypothesis log).
+"""
+
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import json
+
+from repro.launch.dryrun import RESULTS_DIR, run_cell, run_dlrm_cell
+
+import dataclasses as _dc
+from repro.configs.base import MoEConfig
+
+RUNS = [
+    # (kind, arch, shape, variant)
+    # --- dlrm (paper-representative, collective-dominant): Eq.1 sharding
+    ("dlrm", None, None, {"name": "hotrep10", "hot_fraction": 0.10}),
+    ("dlrm", None, None, {"name": "smbag", "shardmap_bag": True}),
+    ("dlrm", None, None, {"name": "smbag_hotrep", "shardmap_bag": True, "hot_fraction": 0.10}),
+    # --- minicpm decode (collective-dominant): cache-axis + datapath iterations
+    ("lm", "minicpm-2b", "decode_32k", {"name": "cacheseq", "cache_seq_shard": True}),
+    ("lm", "minicpm-2b", "decode_32k",
+     {"name": "cacheseq_ro", "cache_seq_shard": True, "readonly_cache": True}),
+    ("lm", "minicpm-2b", "decode_32k",
+     {"name": "cacheseq_int8", "cache_seq_shard": True, "kv_quant": True}),
+    # --- granite (most collective-bound train): dispatch grouping w/ seq-cache
+    ("lm", "granite-moe-3b-a800m", "train_4k",
+     {"name": "moegroup256", "cfg_overrides": {"moe_groups": 256}}),
+]
+
+
+def summarize(rec):
+    r = rec["roofline"]
+    return (f"{rec['cell']:62s} dom={r['dominant']:10s} "
+            f"comp={r['compute_s']*1e3:9.2f}ms mem={r['memory_s']*1e3:8.2f}ms "
+            f"coll={r['collective_s']*1e3:8.2f}ms "
+            f"mem/dev={rec['memory_analysis']['per_device_total_gib']:5.1f}GiB")
+
+
+def main():
+    # re-run the dlrm baseline with the current (inline-loss) code so the
+    # hotrep comparison is same-code
+    base = run_dlrm_cell(multi_pod=False, force=True)
+    print(summarize(base))
+    for kind, arch, shape, variant in RUNS:
+        try:
+            if kind == "dlrm":
+                rec = run_dlrm_cell(multi_pod=False, variant=variant, force=True)
+            else:
+                rec = run_cell(arch, shape, multi_pod=False, variant=variant, force=True)
+            print(summarize(rec))
+        except Exception as e:
+            print(f"FAIL {arch}/{shape}/{variant.get('name')}: {e!r}")
+
+
+if __name__ == "__main__":
+    main()

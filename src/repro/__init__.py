@@ -1,0 +1,4 @@
+"""repro — ReCross (ReRAM-crossbar embedding reduction) re-built as a
+production JAX/Pallas framework for TPU.  See DESIGN.md."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,15 @@
+from repro.configs.base import (
+    ARCH_IDS,
+    SHAPES,
+    ModelConfig,
+    MoEConfig,
+    ShapeConfig,
+    get_config,
+    list_configs,
+    supported_shapes,
+)
+
+__all__ = [
+    "ARCH_IDS", "SHAPES", "ModelConfig", "MoEConfig", "ShapeConfig",
+    "get_config", "list_configs", "supported_shapes",
+]

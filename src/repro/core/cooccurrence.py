@@ -1,0 +1,165 @@
+"""Co-occurrence statistics for embedding lookups (ReCross §III-A steps 1-2).
+
+The offline phase of ReCross starts from a *lookup history*: a sequence of
+queries, each query being the set of embedding-row ids that one inference
+pulls from one table (a multi-hot ``SparseLengthsSum`` bag in DLRM terms).
+
+From the history we build
+
+  * ``freq[i]``      — access frequency of row *i* (power-law in practice),
+  * a *co-occurrence list* — for every unordered pair ``(i, j)`` that appears
+    together in at least one query, the number of queries containing both,
+
+and from the list a *co-occurrence graph* where nodes are rows and edge
+weights are co-access counts.  The graph is the input to the
+correlation-aware grouping of :mod:`repro.core.grouping`.
+
+Everything here is plain NumPy on the host: this is offline preprocessing,
+exactly as in the paper (the ReRAM image is computed once, then written to
+the crossbars before inference).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Dict, Iterable, List, Sequence, Tuple
+
+import numpy as np
+
+Query = Sequence[int]
+
+
+@dataclasses.dataclass
+class CoOccurrenceGraph:
+    """Sparse undirected co-occurrence graph.
+
+    Attributes:
+      num_rows: total number of embedding rows (nodes), including rows that
+        never appear in the history (isolated nodes).
+      freq: ``(num_rows,)`` int64 — per-row access frequency.
+      adjacency: ``adjacency[i]`` is a dict ``{j: weight}`` of co-access
+        counts.  Symmetric: ``j in adjacency[i]`` iff ``i in adjacency[j]``.
+      num_queries: number of queries in the history.
+    """
+
+    num_rows: int
+    freq: np.ndarray
+    adjacency: List[Dict[int, int]]
+    num_queries: int
+
+    # ---- basic graph API used by the grouping algorithm -----------------
+
+    def neighbors(self, i: int) -> Dict[int, int]:
+        return self.adjacency[i]
+
+    def weight(self, i: int, j: int) -> int:
+        return self.adjacency[i].get(j, 0)
+
+    def degree(self, i: int) -> int:
+        return len(self.adjacency[i])
+
+    @property
+    def total_freq(self) -> int:
+        return int(self.freq.sum())
+
+    def nodes_by_frequency(self) -> np.ndarray:
+        """Row ids sorted by descending access frequency (stable)."""
+        # stable sort so equal-frequency rows keep id order (determinism)
+        return np.argsort(-self.freq, kind="stable")
+
+    def edge_count(self) -> int:
+        return sum(len(a) for a in self.adjacency) // 2
+
+    # ---- distribution diagnostics (paper Fig. 2 / Fig. 4) ---------------
+
+    def correlation_counts(self) -> np.ndarray:
+        """Number of correlated embeddings per row (paper Fig. 2)."""
+        return np.array([len(a) for a in self.adjacency], dtype=np.int64)
+
+    def powerlaw_alpha(self) -> float:
+        """Crude MLE of the power-law exponent of the frequency distribution.
+
+        Used only for reporting (the paper repeatedly observes power-law
+        behaviour); not used by any algorithm.
+        """
+        f = self.freq[self.freq > 0].astype(np.float64)
+        if f.size < 2:
+            return float("nan")
+        fmin = f.min()
+        return 1.0 + f.size / np.log(f / fmin + 1e-12).sum()
+
+
+def build_cooccurrence(
+    queries: Iterable[Query],
+    num_rows: int,
+    *,
+    max_pairs_per_query: int | None = None,
+) -> CoOccurrenceGraph:
+    """Builds frequency + co-occurrence graph from a lookup history.
+
+    Args:
+      queries: iterable of queries; each query is a sequence of row ids
+        (duplicates within a query are collapsed — co-occurrence is a set
+        property, matching the paper's "accessed together" definition).
+      num_rows: table height.
+      max_pairs_per_query: optional cap on the pairs enumerated per query
+        (queries are O(k^2) in pairs; DLRM bags are small, k ≲ 100, so the
+        default unbounded enumeration is what the paper does).
+
+    Returns:
+      A :class:`CoOccurrenceGraph`.
+    """
+    freq = np.zeros(num_rows, dtype=np.int64)
+    pair_counts: collections.Counter = collections.Counter()
+    num_queries = 0
+
+    for q in queries:
+        ids = sorted(set(int(i) for i in q))
+        if not ids:
+            continue
+        num_queries += 1
+        for i in ids:
+            if not 0 <= i < num_rows:
+                raise ValueError(f"row id {i} out of range [0, {num_rows})")
+            freq[i] += 1
+        pairs = ((ids[a], ids[b]) for a in range(len(ids)) for b in range(a + 1, len(ids)))
+        if max_pairs_per_query is not None:
+            pairs = _take(pairs, max_pairs_per_query)
+        pair_counts.update(pairs)
+
+    adjacency: List[Dict[int, int]] = [dict() for _ in range(num_rows)]
+    for (i, j), w in pair_counts.items():
+        adjacency[i][j] = w
+        adjacency[j][i] = w
+
+    return CoOccurrenceGraph(
+        num_rows=num_rows, freq=freq, adjacency=adjacency, num_queries=num_queries
+    )
+
+
+def _take(it, n):
+    for k, x in enumerate(it):
+        if k >= n:
+            return
+        yield x
+
+
+def merge_graphs(a: CoOccurrenceGraph, b: CoOccurrenceGraph) -> CoOccurrenceGraph:
+    """Merges two histories (e.g. shards of a distributed trace collection).
+
+    This is what a production deployment does: every serving replica logs
+    its own lookup histogram, and the offline phase folds them together.
+    """
+    if a.num_rows != b.num_rows:
+        raise ValueError("graphs cover different tables")
+    adjacency: List[Dict[int, int]] = [dict(d) for d in a.adjacency]
+    for i, nbrs in enumerate(b.adjacency):
+        for j, w in nbrs.items():
+            adjacency[i][j] = adjacency[i].get(j, 0) + w
+    return CoOccurrenceGraph(
+        num_rows=a.num_rows,
+        freq=a.freq + b.freq,
+        adjacency=adjacency,
+        num_queries=a.num_queries + b.num_queries,
+    )

@@ -1,0 +1,168 @@
+"""Embedding-to-crossbar mapping (ReCross §III-A step 3-4 output).
+
+Combines a :class:`~repro.core.grouping.Grouping` with a
+:class:`~repro.core.replication.ReplicationPlan` into a concrete physical
+layout: which tile (crossbar) holds which rows, where the replicas live,
+and the permuted/padded table image that is written to device memory
+before inference — the exact analogue of "the embedding table is preloaded
+into ReRAM based on this optimized mapping".
+
+The layout is consumed by
+  * :mod:`repro.core.reduction`   — JAX lookup/reduction through the layout,
+  * :mod:`repro.kernels`          — the Pallas tile kernel,
+  * :mod:`repro.core.simulator`   — the ReRAM cost simulator,
+  * :mod:`repro.dist.sharding`    — cross-shard replication of hot tiles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.grouping import Grouping
+from repro.core.replication import ReplicationPlan
+
+
+@dataclasses.dataclass
+class CrossbarLayout:
+    """Physical layout of an embedding table over tiles.
+
+    Logical groups ``0..G-1`` map to physical tiles; group ``g`` owns
+    ``copies[g]`` physical tiles.  Rows keep their slot within every copy.
+
+    Attributes:
+      group_of / slot_of: ``(num_rows,)`` — logical placement of each row.
+      copies: ``(G,)`` — physical copies per group.
+      tile_base: ``(G,)`` — first physical tile id of each group; the
+        copies of group g are tiles ``tile_base[g] .. tile_base[g]+copies[g]-1``.
+      tile_rows: rows per tile (group_size, possibly padded).
+      num_rows / dim: logical table shape.
+    """
+
+    group_of: np.ndarray
+    slot_of: np.ndarray
+    copies: np.ndarray
+    tile_base: np.ndarray
+    tile_rows: int
+    num_rows: int
+    dim: int
+
+    @property
+    def num_groups(self) -> int:
+        return int(self.copies.shape[0])
+
+    @property
+    def num_tiles(self) -> int:
+        return int(self.copies.sum())
+
+    @property
+    def padded_rows(self) -> int:
+        return self.num_tiles * self.tile_rows
+
+    # ---- index plumbing ---------------------------------------------------
+
+    def physical_row(self, row: int, replica: int = 0) -> int:
+        """Physical row index of logical ``row`` in its ``replica``-th copy."""
+        g = int(self.group_of[row])
+        r = replica % int(self.copies[g])
+        tile = int(self.tile_base[g]) + r
+        return tile * self.tile_rows + int(self.slot_of[row])
+
+    def gather_index_map(self, replica_of_row: np.ndarray | None = None) -> np.ndarray:
+        """(num_rows,) logical→physical row map (replica 0 unless given)."""
+        g = self.group_of
+        base = self.tile_base[g]
+        if replica_of_row is not None:
+            base = base + (replica_of_row % self.copies[g])
+        return (base * self.tile_rows + self.slot_of).astype(np.int32)
+
+    def build_image(self, table: np.ndarray) -> np.ndarray:
+        """Materializes the padded, permuted, replicated device image.
+
+        Returns ``(num_tiles * tile_rows, dim)`` — replica tiles hold
+        identical data; padding slots are zero (so a stray access
+        contributes nothing to a sum, mirroring an unprogrammed ReRAM
+        cell at high resistance).
+        """
+        if table.shape != (self.num_rows, self.dim):
+            raise ValueError(f"table shape {table.shape} != ({self.num_rows},{self.dim})")
+        image = np.zeros((self.padded_rows, self.dim), dtype=table.dtype)
+        for g in range(self.num_groups):
+            rows = np.where(self.group_of == g)[0]
+            slots = self.slot_of[rows]
+            for c in range(int(self.copies[g])):
+                tile = int(self.tile_base[g]) + c
+                image[tile * self.tile_rows + slots] = table[rows]
+        return image
+
+    def tile_of_groups(self) -> np.ndarray:
+        """(num_tiles,) group id owning each physical tile."""
+        out = np.empty(self.num_tiles, dtype=np.int32)
+        for g in range(self.num_groups):
+            out[self.tile_base[g] : self.tile_base[g] + self.copies[g]] = g
+        return out
+
+
+def build_layout(
+    grouping: Grouping,
+    plan: ReplicationPlan,
+    dim: int,
+    *,
+    tile_rows: int | None = None,
+) -> CrossbarLayout:
+    """Fuses grouping + replication into a physical layout."""
+    copies = np.asarray(plan.copies, dtype=np.int32)
+    if len(copies) != grouping.num_groups:
+        raise ValueError("plan covers a different number of groups")
+    tile_base = np.zeros(grouping.num_groups, dtype=np.int64)
+    np.cumsum(copies[:-1], out=tile_base[1:])
+    return CrossbarLayout(
+        group_of=grouping.group_of.copy(),
+        slot_of=grouping.slot_of.copy(),
+        copies=copies,
+        tile_base=tile_base,
+        tile_rows=tile_rows or grouping.group_size,
+        num_rows=len(grouping.group_of),
+        dim=dim,
+    )
+
+
+def query_tile_bitmaps(
+    layout: CrossbarLayout,
+    queries: Sequence[Sequence[int]],
+    *,
+    balance_replicas: bool = True,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Compiles a query batch into per-tile wordline bitmaps.
+
+    For each query, rows are bucketed by group; each touched group
+    contributes one activated tile (one of its replicas, chosen
+    round-robin per group when ``balance_replicas`` — the scheduler's
+    replica-balancing step) with a ``tile_rows`` bitmap of activated
+    wordlines.
+
+    Returns:
+      bitmaps: ``(batch, num_tiles, tile_rows)`` uint8 — activation image.
+      counts:  ``(batch, num_tiles)`` int32 — popcount per tile (input to
+        the dynamic switch).
+    """
+    batch = len(queries)
+    bitmaps = np.zeros((batch, layout.num_tiles, layout.tile_rows), dtype=np.uint8)
+    rr = np.zeros(layout.num_groups, dtype=np.int64)  # per-group round robin
+    for q_idx, q in enumerate(queries):
+        per_group: dict[int, list[int]] = {}
+        for row in q:
+            per_group.setdefault(int(layout.group_of[row]), []).append(int(row))
+        for g, rows in per_group.items():
+            if balance_replicas:
+                replica = int(rr[g] % layout.copies[g])
+                rr[g] += 1
+            else:
+                replica = 0
+            tile = int(layout.tile_base[g]) + replica
+            for row in rows:
+                bitmaps[q_idx, tile, int(layout.slot_of[row])] = 1
+    counts = bitmaps.sum(axis=-1).astype(np.int32)
+    return bitmaps, counts

@@ -1,0 +1,146 @@
+"""JAX embedding reduction through a ReCross layout.
+
+The *numerical* side of ReCross: given the permuted/replicated device image
+produced by :meth:`CrossbarLayout.build_image`, perform the embedding-bag
+reduction for a batch of queries.  Three executable paths, all producing
+identical values:
+
+  * :func:`reduce_dense_oracle` — direct gather+sum on the *logical* table
+    (ground truth; layout-independent).
+  * :func:`reduce_via_layout`   — pure-jnp tiled one-hot MAC through the
+    physical image with dynamic READ/MAC switching expressed as
+    ``jnp.where`` (the reference the Pallas kernel is tested against).
+  * :mod:`repro.kernels.ops.crossbar_reduce` — the Pallas TPU kernel.
+
+Queries arrive in the framework's *compiled query format* (a fixed-shape
+representation so everything jits):
+
+  ``tile_ids``  (batch, max_tiles)            int32, -1 padded
+  ``bitmaps``   (batch, max_tiles, tile_rows) activation masks (0/1)
+
+produced by :func:`compile_queries` from the ragged host-side form.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.mapping import CrossbarLayout
+
+
+@dataclasses.dataclass
+class CompiledQueries:
+    """Fixed-shape query batch (device-ready)."""
+
+    tile_ids: jax.Array   # (batch, max_tiles) int32, -1 = padding
+    bitmaps: jax.Array    # (batch, max_tiles, tile_rows) same dtype as table
+    max_tiles: int
+
+    @property
+    def batch(self) -> int:
+        return self.tile_ids.shape[0]
+
+
+def compile_queries(
+    layout: CrossbarLayout,
+    queries: Sequence[Sequence[int]],
+    *,
+    max_tiles: int | None = None,
+    dtype=jnp.float32,
+    balance_replicas: bool = True,
+) -> CompiledQueries:
+    """Ragged host queries → fixed-shape device arrays.
+
+    ``max_tiles`` defaults to the batch's maximum tiles-per-query, rounded
+    up to a multiple of 8 for sublane friendliness.
+    """
+    from repro.core.mapping import query_tile_bitmaps
+
+    bm, counts = query_tile_bitmaps(layout, queries, balance_replicas=balance_replicas)
+    batch = bm.shape[0]
+    per_q = [np.nonzero(counts[i])[0] for i in range(batch)]
+    width = max((len(p) for p in per_q), default=1)
+    if max_tiles is None:
+        max_tiles = max(8, int(np.ceil(width / 8)) * 8)
+    if width > max_tiles:
+        raise ValueError(f"query touches {width} tiles > max_tiles={max_tiles}")
+
+    tile_ids = np.full((batch, max_tiles), -1, dtype=np.int32)
+    bitmaps = np.zeros((batch, max_tiles, layout.tile_rows), dtype=np.float32)
+    for i, tiles in enumerate(per_q):
+        tile_ids[i, : len(tiles)] = tiles
+        bitmaps[i, : len(tiles)] = bm[i, tiles]
+    return CompiledQueries(
+        tile_ids=jnp.asarray(tile_ids),
+        bitmaps=jnp.asarray(bitmaps, dtype=dtype),
+        max_tiles=max_tiles,
+    )
+
+
+def reduce_dense_oracle(
+    table: jax.Array, queries: Sequence[Sequence[int]]
+) -> jax.Array:
+    """Ground-truth gather+sum on the logical table (host-ragged input)."""
+    out = []
+    for q in queries:
+        ids = jnp.asarray(sorted(set(int(i) for i in q)), dtype=jnp.int32)
+        out.append(table[ids].sum(axis=0) if len(q) else jnp.zeros(table.shape[-1], table.dtype))
+    return jnp.stack(out)
+
+
+@partial(jax.jit, static_argnames=("tile_rows", "dynamic_switch"))
+def reduce_via_layout(
+    image: jax.Array,      # (num_tiles * tile_rows, dim) physical image
+    tile_ids: jax.Array,   # (batch, max_tiles)
+    bitmaps: jax.Array,    # (batch, max_tiles, tile_rows)
+    *,
+    tile_rows: int,
+    dynamic_switch: bool = True,
+) -> jax.Array:
+    """Pure-jnp tiled one-hot MAC through the physical image.
+
+    Per (query, slot): fetch the tile, then either
+      * READ path  (popcount==1): select the single active row, or
+      * MAC path: ``bitmap @ tile`` (one-hot MXU matmul).
+    Padding slots (tile_id == -1) have all-zero bitmaps and contribute 0.
+    """
+    num_tiles = image.shape[0] // tile_rows
+    dim = image.shape[-1]
+    tiles3 = image.reshape(num_tiles, tile_rows, dim)
+
+    def per_query(tids, bms):
+        def per_slot(tid, bm):
+            tile = tiles3[jnp.clip(tid, 0, num_tiles - 1)]  # (tile_rows, dim)
+            mac = bm @ tile  # (dim,)
+            if dynamic_switch:
+                count = bm.sum()
+                # READ path: arg-select the active row without a matmul.
+                row = jnp.argmax(bm)
+                read = tile[row] * (count > 0)
+                out = jnp.where(count <= 1, read, mac)
+            else:
+                out = mac
+            return out * (tid >= 0)
+
+        return jax.vmap(per_slot)(tids, bms).sum(axis=0)
+
+    return jax.vmap(per_query)(tile_ids, bitmaps)
+
+
+def reduction_flops(bitmaps: np.ndarray, dim: int, dynamic_switch: bool) -> int:
+    """FLOPs of the layout reduction (for benchmark reporting)."""
+    counts = np.asarray(bitmaps).sum(axis=-1)
+    tiles_active = counts > 0
+    if dynamic_switch:
+        mac_tiles = counts > 1
+    else:
+        mac_tiles = tiles_active
+    tile_rows = np.asarray(bitmaps).shape[-1]
+    # MAC tile: 2*tile_rows*dim; READ tile: dim (copy, counted as 0 FLOP)
+    return int(mac_tiles.sum()) * 2 * tile_rows * dim

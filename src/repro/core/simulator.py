@@ -1,0 +1,182 @@
+"""Cycle-level crossbar scheduler / cost simulator.
+
+Replays a query batch against a :class:`~repro.core.mapping.CrossbarLayout`
+and charges every crossbar activation to the
+:class:`~repro.core.energy.ReRAMCostModel`.  This is the NeuroSIM-role
+component: it produces the paper's evaluation metrics —
+
+  * completion time of the batch (with inter-query contention: a tile can
+    serve one activation at a time; replicas serve in parallel — the
+    §III-C stall-cycle story),
+  * total energy,
+  * crossbar-activation counts (Fig. 9),
+  * READ/MAC mode mix (Fig. 6),
+
+for ReCross and for the baselines (naïve mapping, frequency-based mapping
+[33], nMARS-style static-ADC reduction [24], CPU gather-sum).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.energy import ReRAMCostModel, DEFAULT_RERAM
+from repro.core.mapping import CrossbarLayout, query_tile_bitmaps
+from repro.core import dynamic_switch as dsw
+
+
+@dataclasses.dataclass
+class SimReport:
+    """Batch-level simulation result."""
+
+    completion_time_ns: float
+    energy_pj: float
+    activations: int
+    read_activations: int
+    mac_activations: int
+    stall_ns: float
+    per_query_tiles: np.ndarray      # (batch,) tiles activated by each query
+    mean_active_rows: float
+
+    @property
+    def read_fraction(self) -> float:
+        return self.read_activations / max(self.activations, 1)
+
+    def speedup_over(self, other: "SimReport") -> float:
+        return other.completion_time_ns / max(self.completion_time_ns, 1e-12)
+
+    def energy_efficiency_over(self, other: "SimReport") -> float:
+        return other.energy_pj / max(self.energy_pj, 1e-12)
+
+
+def simulate_batch(
+    layout: CrossbarLayout,
+    queries: Sequence[Sequence[int]],
+    *,
+    model: ReRAMCostModel = DEFAULT_RERAM,
+    dynamic_switching: bool = True,
+    balance_replicas: bool = True,
+    switch_threshold: int = 1,
+) -> SimReport:
+    """Simulates one batch of embedding-reduction queries.
+
+    Timing model: all queries of a batch are issued simultaneously
+    (batch-level inference).  Each activated tile serves its queue of
+    activations serially; distinct tiles (including replicas of the same
+    group) operate in parallel.  Batch completion time is the max over
+    tiles of the tile's busy time — queue imbalance therefore shows up as
+    stalls, which is exactly what Eq.-1 replication attacks.
+    """
+    bitmaps, counts = query_tile_bitmaps(
+        layout, queries, balance_replicas=balance_replicas
+    )
+    batch, num_tiles = counts.shape
+
+    tile_busy_ns = np.zeros(num_tiles, dtype=np.float64)
+    energy = 0.0
+    activations = 0
+    reads = 0
+    macs = 0
+    active_rows_sum = 0
+
+    q_idx, t_idx = np.nonzero(counts)
+    for q, t in zip(q_idx, t_idx):
+        rows = int(counts[q, t])
+        activations += 1
+        active_rows_sum += rows
+        if dynamic_switching and rows <= switch_threshold:
+            # READ mode: k activated rows are read out serially through the
+            # low-resolution ADC path (k=1 in the paper; thresholds >1 are
+            # the beyond-paper "multi-read" policy, see §Perf notes)
+            lat, e = model.crossbar_read_event()
+            lat, e = lat * rows, e * rows
+            reads += 1
+        elif dynamic_switching:
+            lat, e = model.crossbar_mac_event(rows)
+            macs += 1
+        else:
+            lat, e = model.crossbar_static_mac_event(rows)
+            macs += 1
+        tile_busy_ns[t] += lat
+        energy += e
+
+    completion = float(tile_busy_ns.max()) if activations else 0.0
+    # stall = extra serialization beyond a perfectly balanced schedule
+    ideal = float(tile_busy_ns.sum()) / max(num_tiles, 1)
+    per_query_tiles = (counts > 0).sum(axis=1).astype(np.int64)
+
+    return SimReport(
+        completion_time_ns=completion,
+        energy_pj=energy,
+        activations=activations,
+        read_activations=reads,
+        mac_activations=macs,
+        stall_ns=max(completion - ideal, 0.0),
+        per_query_tiles=per_query_tiles,
+        mean_active_rows=active_rows_sum / max(activations, 1),
+    )
+
+
+def simulate_cpu_baseline(
+    queries: Sequence[Sequence[int]],
+    *,
+    model: ReRAMCostModel = DEFAULT_RERAM,
+    parallel_lanes: int = 8,
+) -> SimReport:
+    """CPU gather-sum baseline (Fig. 11): DRAM row fetches + host adds.
+
+    ``parallel_lanes`` models the memory-level parallelism of a desktop
+    CPU's load queue; energy is charged per fetched row regardless.
+    """
+    lane_busy = np.zeros(parallel_lanes, dtype=np.float64)
+    energy = 0.0
+    per_query = np.zeros(len(queries), dtype=np.int64)
+    for i, q in enumerate(queries):
+        rows = len(set(int(r) for r in q))
+        per_query[i] = rows
+        lat, e = model.cpu_reduction_event(rows)
+        lane = int(np.argmin(lane_busy))
+        lane_busy[lane] += lat
+        energy += e
+    return SimReport(
+        completion_time_ns=float(lane_busy.max()),
+        energy_pj=energy,
+        activations=int(per_query.sum()),
+        read_activations=int(per_query.sum()),
+        mac_activations=0,
+        stall_ns=0.0,
+        per_query_tiles=per_query,
+        mean_active_rows=1.0,
+    )
+
+
+def simulate_nmars_baseline(
+    layout: CrossbarLayout,
+    queries: Sequence[Sequence[int]],
+    *,
+    model: ReRAMCostModel = DEFAULT_RERAM,
+    crossbars_per_adder: int = 8,
+) -> SimReport:
+    """nMARS-style [24] baseline: parallel in-memory lookup, then
+    aggregation of per-crossbar partial sums over a hierarchical adder
+    fabric (one adder lane per ``crossbars_per_adder`` crossbars, serial
+    within a lane), static full-resolution ADC, no replication balancing."""
+    rep = simulate_batch(
+        layout,
+        queries,
+        model=model,
+        dynamic_switching=False,
+        balance_replicas=False,
+    )
+    lanes = max(layout.num_tiles // crossbars_per_adder, 1)
+    transfers = float(rep.per_query_tiles.sum())
+    agg_ns = transfers * model.bus_cycle_ns / lanes
+    agg_pj = transfers * model.bus_energy_pj
+    return dataclasses.replace(
+        rep,
+        completion_time_ns=rep.completion_time_ns + agg_ns,
+        energy_pj=rep.energy_pj + agg_pj,
+    )

@@ -1,0 +1,12 @@
+from repro.data.synthetic import (
+    SyntheticWorkload,
+    WORKLOADS,
+    make_workload,
+    zipf_queries,
+)
+from repro.data.pipeline import QueryBatcher, TokenBatcher
+
+__all__ = [
+    "SyntheticWorkload", "WORKLOADS", "make_workload", "zipf_queries",
+    "QueryBatcher", "TokenBatcher",
+]

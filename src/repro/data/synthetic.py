@@ -1,0 +1,155 @@
+"""Synthetic Amazon-Review-like lookup workloads.
+
+The paper evaluates on five Amazon Review categories whose defining
+statistics are (Table I): number of embeddings 26 k – 963 k, mean bag
+length ("Avg. Lat" — average lookups per query) 41 – 96, with power-law
+access frequency and power-law co-occurrence (Fig. 2/4).
+
+The dataset itself cannot ship here, so :func:`make_workload` synthesizes
+traces with exactly those statistics: Zipf-distributed item popularity,
+cluster-structured co-occurrence (items belong to soft "interest
+clusters"; a query samples mostly within a cluster, which produces the
+heavy-tailed co-occurrence the grouping algorithm exploits), and matched
+table size / bag length per paper workload.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticWorkload:
+    """Statistics-matched stand-in for one paper workload."""
+
+    name: str
+    num_rows: int          # "# of Embedding" (Table I)
+    mean_bag: float        # "Avg. Lat" — mean lookups per query
+    zipf_a: float = 1.2    # popularity exponent
+    num_clusters: int = 0  # 0 → auto (~rows/256)
+    in_cluster_p: float = 0.85  # probability a lookup stays in the query's cluster
+
+
+# Paper Table I workloads. Row counts are scaled down 20x by default in
+# make_workload(scale=...) so unit tests stay fast; benchmarks can run
+# scale=1.0 for the full sizes.
+WORKLOADS = {
+    "software": SyntheticWorkload("software", 26_815, 41.32),
+    "office_products": SyntheticWorkload("office_products", 315_644, 64.088),
+    "electronics": SyntheticWorkload("electronics", 786_868, 55.746),
+    "automotive": SyntheticWorkload("automotive", 932_019, 42.26),
+    "sports": SyntheticWorkload("sports", 962_876, 96.019),
+}
+
+
+def zipf_popularity(num_rows: int, a: float, rng: np.random.Generator) -> np.ndarray:
+    """Normalized Zipf pmf over rows, with a random rank permutation so
+    hot ids are scattered across the id space (itemID order is NOT
+    popularity order — this is what makes the naive mapping bad)."""
+    ranks = np.arange(1, num_rows + 1, dtype=np.float64)
+    p = ranks ** (-a)
+    p /= p.sum()
+    perm = rng.permutation(num_rows)
+    out = np.empty(num_rows)
+    out[perm] = p
+    return out
+
+
+def zipf_queries(
+    num_rows: int,
+    num_queries: int,
+    mean_bag: float,
+    *,
+    zipf_a: float = 1.2,
+    num_clusters: int | None = None,
+    in_cluster_p: float = 0.85,
+    basket_repeat_p: float = 0.65,
+    num_baskets: int | None = None,
+    seed: int = 0,
+) -> List[np.ndarray]:
+    """Generates a power-law, cluster-correlated query trace.
+
+    Two levels of structure match real co-purchase data:
+
+    * **Template baskets** — real sessions repeat item combinations (the
+      structure MERCI's memoization and ReCross's grouping both exploit):
+      with probability ``basket_repeat_p`` a query re-uses a popular
+      template basket (Zipf-ranked) with a small perturbation.
+    * **Interest clusters** — fresh queries pick a cluster by popularity,
+      then draw ``k ~ 1 + Poisson(mean_bag - 1)`` lookups, each from the
+      cluster w.p. ``in_cluster_p`` (by in-cluster popularity) else from
+      the global Zipf.
+    """
+    rng = np.random.default_rng(seed)
+    pop = zipf_popularity(num_rows, zipf_a, rng)
+    if not num_clusters:
+        num_clusters = max(8, num_rows // 256)
+
+    # cluster assignment: contiguous popularity-rank chunks permuted into
+    # id space (so clusters group items of mixed popularity)
+    cluster_of = rng.integers(0, num_clusters, size=num_rows)
+    cluster_rows: List[np.ndarray] = [
+        np.where(cluster_of == c)[0] for c in range(num_clusters)
+    ]
+    cluster_pop = np.array([pop[r].sum() if len(r) else 0.0 for r in cluster_rows])
+    cluster_pop /= cluster_pop.sum()
+
+    def fresh_query() -> np.ndarray:
+        c = rng.choice(num_clusters, p=cluster_pop)
+        rows_c = cluster_rows[c]
+        k = 1 + rng.poisson(max(mean_bag - 1.0, 0.0))
+        picks = []
+        if len(rows_c):
+            pc = pop[rows_c] / pop[rows_c].sum()
+            n_in = rng.binomial(k, in_cluster_p)
+            if n_in:
+                picks.append(rng.choice(rows_c, size=n_in, p=pc))
+            k -= n_in
+        if k:
+            picks.append(rng.choice(num_rows, size=k, p=pop))
+        q = np.unique(np.concatenate(picks)) if picks else np.array([0])
+        return q.astype(np.int64)
+
+    # template baskets, themselves Zipf-popular
+    nb = num_baskets or max(16, num_queries // 8)
+    baskets = [fresh_query() for _ in range(nb)]
+    b_ranks = np.arange(1, nb + 1, dtype=np.float64) ** (-1.1)
+    b_pop = b_ranks / b_ranks.sum()
+
+    queries: List[np.ndarray] = []
+    for _ in range(num_queries):
+        if rng.random() < basket_repeat_p:
+            q = baskets[int(rng.choice(nb, p=b_pop))]
+            if rng.random() < 0.3 and len(q) > 2:  # small perturbation
+                drop = rng.integers(0, len(q))
+                q = np.delete(q, drop)
+            queries.append(q.astype(np.int64))
+        else:
+            queries.append(fresh_query())
+    return queries
+
+
+def make_workload(
+    name: str,
+    *,
+    num_queries: int = 2048,
+    scale: float = 0.05,
+    seed: int = 0,
+) -> tuple[SyntheticWorkload, int, List[np.ndarray]]:
+    """Returns (workload, num_rows_scaled, queries) for a paper workload.
+
+    ``scale`` shrinks the table (and proportionally the bag length, floored
+    at 8) so tests stay fast; scale=1.0 reproduces Table I sizes.
+    """
+    wl = WORKLOADS[name]
+    rows = max(1024, int(wl.num_rows * scale))
+    bag = max(8.0, wl.mean_bag * min(1.0, scale * 4 + 0.75))
+    qs = zipf_queries(
+        rows, num_queries, bag, zipf_a=wl.zipf_a,
+        num_clusters=wl.num_clusters or None, in_cluster_p=wl.in_cluster_p,
+        seed=seed,
+    )
+    return wl, rows, qs

@@ -1,0 +1,27 @@
+"""Pallas TPU kernels for the ReCross hot path.
+
+``crossbar_reduce`` — tiled one-hot MAC embedding reduction with the
+dynamic READ/MAC switch (the paper's §III-B/§III-D datapath).
+``embedding_bag`` — padded gather+sum (naive/nMARS baseline datapath and
+single-hot LM token embedding).
+
+Kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling) and run under
+``interpret=True`` on CPU automatically.
+"""
+
+from repro.kernels.ops import (
+    crossbar_reduce,
+    crossbar_reduce_ref,
+    embedding_bag,
+    embedding_bag_ref,
+)
+from repro.kernels.crossbar_reduce import crossbar_reduce_pallas
+from repro.kernels.embedding_bag import embedding_bag_pallas
+from repro.kernels.decode_attention import fused_decode_attention_pallas
+from repro.kernels.ref import fused_decode_attention_ref
+
+__all__ = [
+    "crossbar_reduce", "crossbar_reduce_ref", "crossbar_reduce_pallas",
+    "embedding_bag", "embedding_bag_ref", "embedding_bag_pallas",
+    "fused_decode_attention_pallas", "fused_decode_attention_ref",
+]

@@ -1,0 +1,134 @@
+"""Pallas TPU kernel: tiled embedding reduction with dynamic READ/MAC switch.
+
+TPU-native re-expression of the ReCross crossbar datapath (DESIGN.md §2):
+
+  * a "crossbar" is a ``(tile_rows, dim)`` tile of the permuted embedding
+    image, fetched HBM→VMEM on demand via **scalar-prefetch indexing**
+    (``tile_ids`` plays the role of crossbar selection; the BlockSpec
+    index_map *is* the crossbar decoder),
+  * the MAC path multiplies the wordline bitmap against the tile on the
+    MXU (``bitmap @ tile``, a one-hot matmul — the in-memory MAC),
+  * the READ path (popcount ≤ 1, ReCross §III-D) skips the MXU entirely
+    and dynamically slices the single active row out of VMEM — the
+    dynamic-switch ADC as a datapath branch,
+  * partial sums accumulate in a float32 VMEM scratch (the "ADC output
+    register"), written back once per query.
+
+Grid: ``(batch, max_tiles)`` — batch-parallel, tile-sequential so the
+accumulator carries across the inner dimension.
+
+VMEM budget per grid step: one ``(tile_rows, dim)`` tile + one
+``(1, dim)`` f32 accumulator + one ``(1, tile_rows)`` bitmap.  With the
+production defaults (tile_rows=64 padded to 128-friendly dims,
+dim ≤ 8192, bf16) that is ≤ 64·8192·2 B = 1 MiB ≪ VMEM; block shapes are
+asserted MXU-aligned (dim % 128 == 0, tile_rows % 8 == 0).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(
+    pad_ids_ref,    # scalar-prefetch: (batch, max_tiles) int32, -1 padding
+    safe_ids_ref,   # scalar-prefetch: ids clipped to >= 0 (feeds index_map)
+    bitmap_ref,     # VMEM (1, 1, tile_rows)
+    tile_ref,       # VMEM (1, tile_rows, dim) — the selected crossbar tile
+    out_ref,        # VMEM (1, dim)
+    acc_ref,        # scratch VMEM (1, dim) float32
+    *,
+    max_tiles: int,
+    dynamic_switch: bool,
+):
+    b = pl.program_id(0)
+    s = pl.program_id(1)
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    bm = bitmap_ref[0, 0, :].astype(jnp.float32)          # (tile_rows,)
+    count = jnp.sum(bm)
+
+    def mac_path():
+        tile = tile_ref[0].astype(jnp.float32)            # (tile_rows, dim)
+        return jnp.dot(
+            bm.reshape(1, -1), tile, preferred_element_type=jnp.float32
+        )                                                  # (1, dim)
+
+    def read_path():
+        # single active wordline: pure row copy, no MXU issue
+        row = jnp.argmax(bm).astype(jnp.int32)
+        val = tile_ref[0, pl.ds(row, 1), :].astype(jnp.float32)  # (1, dim)
+        return val * (count > 0).astype(jnp.float32)
+
+    if dynamic_switch:
+        contrib = lax.cond(count <= 1.0, read_path, mac_path)
+    else:
+        contrib = mac_path()
+
+    # mask padding slots (tile_id < 0); their bitmaps are zero anyway, but
+    # the read path must not leak tile row 0 if a nonzero bitmap were paired
+    # with a padding id by a buggy caller.
+    valid = (pad_ids_ref[b, s] >= 0).astype(jnp.float32)
+    acc_ref[...] += contrib * valid
+
+    @pl.when(s == max_tiles - 1)
+    def _flush():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+def crossbar_reduce_pallas(
+    image: jax.Array,     # (num_tiles, tile_rows, dim)
+    tile_ids: jax.Array,  # (batch, max_tiles) int32, -1 padding
+    bitmaps: jax.Array,   # (batch, max_tiles, tile_rows)
+    *,
+    dynamic_switch: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Raw pallas_call wrapper (no custom_vjp; see ops.crossbar_reduce)."""
+    num_tiles, tile_rows, dim = image.shape
+    batch, max_tiles = tile_ids.shape
+    if bitmaps.shape != (batch, max_tiles, tile_rows):
+        raise ValueError(f"bitmaps shape {bitmaps.shape} inconsistent")
+    if dim % 128 != 0:
+        raise ValueError(f"dim={dim} must be a multiple of 128 (MXU lanes)")
+    if tile_rows % 8 != 0:
+        raise ValueError(f"tile_rows={tile_rows} must be a multiple of 8 (sublanes)")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    # clip padding ids to 0 for the block index map (masked in-kernel)
+    safe_ids = jnp.maximum(tile_ids, 0).astype(jnp.int32)
+    padded_ids = tile_ids.astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # padded_ids (mask), safe_ids (index map)
+        grid=(batch, max_tiles),
+        in_specs=[
+            pl.BlockSpec((1, 1, tile_rows), lambda b, s, pad, safe: (b, s, 0)),
+            pl.BlockSpec((1, tile_rows, dim), lambda b, s, pad, safe: (safe[b, s], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, dim), lambda b, s, pad, safe: (b, 0)),
+        scratch_shapes=[pltpu.VMEM((1, dim), jnp.float32)],
+    )
+
+    kernel = functools.partial(
+        _kernel, max_tiles=max_tiles, dynamic_switch=dynamic_switch
+    )
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((batch, dim), image.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(padded_ids, safe_ids, bitmaps, image)

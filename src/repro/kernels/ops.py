@@ -1,0 +1,92 @@
+"""Public jit'd wrappers for the Pallas kernels, with gradients.
+
+``crossbar_reduce`` is differentiable w.r.t. the image (embedding training
+through the ReCross layout): the VJP is the transpose one-hot scatter,
+expressed with pure-jnp ops (a scatter-add has no MXU win, so no custom
+kernel is warranted for the backward on TPU — XLA's scatter is fine).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.crossbar_reduce import crossbar_reduce_pallas
+from repro.kernels.embedding_bag import embedding_bag_pallas
+from repro.kernels import ref as _ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def crossbar_reduce(image, tile_ids, bitmaps, dynamic_switch=True):
+    """out[b] = Σ_s bitmaps[b,s] @ image[tile_ids[b,s]]  (Pallas forward).
+
+    Args:
+      image: (num_tiles, tile_rows, dim) permuted/replicated table image.
+      tile_ids: (batch, max_tiles) int32, -1 padded.
+      bitmaps: (batch, max_tiles, tile_rows) 0/1 activation masks.
+      dynamic_switch: take the READ path for popcount<=1 tiles (§III-D).
+
+    Returns:
+      (batch, dim) reduced embeddings, image dtype.
+    """
+    return crossbar_reduce_pallas(
+        image, tile_ids, bitmaps, dynamic_switch=dynamic_switch
+    )
+
+
+def _cr_fwd(image, tile_ids, bitmaps, dynamic_switch):
+    out = crossbar_reduce_pallas(
+        image, tile_ids, bitmaps, dynamic_switch=dynamic_switch
+    )
+    return out, (image, tile_ids, bitmaps)
+
+
+def _cr_bwd(dynamic_switch, res, g):
+    image, tile_ids, bitmaps = res
+    (num_tiles, tile_rows, dim), dtype = image.shape, image.dtype
+    # d_image[t] += Σ_{b,s: ids[b,s]==t} bitmaps[b,s]^T ⊗ g[b]
+    valid = (tile_ids >= 0)
+    outer = jnp.einsum(
+        "bsr,bd->bsrd", bitmaps.astype(jnp.float32), g.astype(jnp.float32)
+    ) * valid[..., None, None]
+    flat = outer.reshape(-1, tile_rows, dim)
+    ids = jnp.maximum(tile_ids, 0).reshape(-1)
+    d_image = jnp.zeros((num_tiles, tile_rows, dim), jnp.float32).at[ids].add(flat)
+    return d_image.astype(dtype), None, None
+
+
+crossbar_reduce.defvjp(_cr_fwd, _cr_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def embedding_bag(table, indices):
+    """out[b] = Σ_k table[indices[b,k]]  (-1 padded; Pallas forward)."""
+    return embedding_bag_pallas(table, indices)
+
+
+def _eb_fwd(table, indices):
+    return embedding_bag_pallas(table, indices), (table, indices)
+
+
+def _eb_bwd(res, g):
+    table, indices = res
+    (rows, dim), dtype = table.shape, table.dtype
+    valid = (indices >= 0).astype(jnp.float32)[..., None]   # (B, K, 1)
+    contrib = g.astype(jnp.float32)[:, None, :] * valid     # (B, K, D)
+    ids = jnp.maximum(indices, 0).reshape(-1)
+    d_table = (
+        jnp.zeros((rows, dim), jnp.float32)
+        .at[ids]
+        .add(contrib.reshape(-1, dim))
+    )
+    return d_table.astype(dtype), None
+
+
+embedding_bag.defvjp(_eb_fwd, _eb_bwd)
+
+
+# Re-export oracles so tests and docs have one import point.
+crossbar_reduce_ref = _ref.crossbar_reduce_ref
+embedding_bag_ref = _ref.embedding_bag_ref

@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``<kernel>_ref`` matches the kernel's contract exactly (same argument
+shapes/dtypes, same output), built only from jnp ops.  Kernel tests sweep
+shapes/dtypes and ``assert_allclose`` kernel-vs-ref.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def crossbar_reduce_ref(
+    image: jax.Array,     # (num_tiles, tile_rows, dim)
+    tile_ids: jax.Array,  # (batch, max_tiles) int32, -1 padding
+    bitmaps: jax.Array,   # (batch, max_tiles, tile_rows) float 0/1
+) -> jax.Array:
+    """Oracle for :func:`repro.kernels.ops.crossbar_reduce`.
+
+    out[b] = sum_s bitmaps[b, s] @ image[tile_ids[b, s]]   (padding slots 0)
+    """
+    num_tiles = image.shape[0]
+
+    def per_query(tids, bms):
+        tiles = image[jnp.clip(tids, 0, num_tiles - 1)]          # (S, R, D)
+        part = jnp.einsum("sr,srd->sd", bms, tiles)              # (S, D)
+        return (part * (tids >= 0)[:, None]).sum(axis=0)
+
+    return jax.vmap(per_query)(tile_ids, bitmaps.astype(image.dtype)).astype(image.dtype)
+
+
+def embedding_bag_ref(
+    table: jax.Array,     # (rows, dim)
+    indices: jax.Array,   # (batch, bag) int32, -1 padding
+) -> jax.Array:
+    """Oracle for the padded embedding-bag (gather+sum) kernel."""
+    rows = table.shape[0]
+    take = table[jnp.clip(indices, 0, rows - 1)]                 # (B, K, D)
+    return (take * (indices >= 0)[..., None]).sum(axis=1).astype(table.dtype)
+
+
+def onehot_matmul_ref(onehot: jax.Array, dense: jax.Array) -> jax.Array:
+    """Oracle for the MXU one-hot matmul micro-kernel."""
+    return (onehot.astype(jnp.float32) @ dense.astype(jnp.float32)).astype(dense.dtype)
+
+
+def fused_decode_attention_ref(q, k_q, k_s, v_q, v_s, length):
+    """Oracle for :func:`repro.kernels.decode_attention` — dequantize the
+    whole cache and run a masked flash accumulation in one shot.
+
+    Returns (out_unnormalized (b,kvh,g,hd) f32, m (b,kvh,g), l (b,kvh,g)).
+    """
+    b, S, kvh, hd = k_q.shape
+    k = k_q.astype(jnp.float32) * k_s.astype(jnp.float32)[..., None]
+    v = v_q.astype(jnp.float32) * v_s.astype(jnp.float32)[..., None]
+    scale = 1.0 / (hd ** 0.5)
+    s = jnp.einsum("bkgd,btkd->bkgt", q.astype(jnp.float32), k) * scale
+    mask = jnp.arange(S)[None, None, None, :] < length
+    s = jnp.where(mask, s, -1e30)
+    m = s.max(axis=-1)
+    w = jnp.exp(s - m[..., None])
+    l = w.sum(axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", w, v)
+    return out, m, l

@@ -1,0 +1,305 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds (EXPERIMENTS.md §Roofline):
+
+    compute    = HLO_FLOPs            / (chips × 197e12 bf16 FLOP/s)
+    memory     = HLO_bytes_accessed   / (chips × 819e9  B/s HBM)
+    collective = collective_bytes     / (chips × 50e9   B/s ICI link)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``.  Collective bytes are
+NOT in cost_analysis: :func:`collective_bytes_from_hlo` parses the
+optimized HLO text and sums operand bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute op.
+
+Also computes MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) and the
+usefulness ratio MODEL_FLOPS / HLO_FLOPs (catches remat & redundancy).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+from repro.core.energy import TPUCostModel, DEFAULT_TPU
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*"
+    r"(\((?:[^()]|\([^()]*\))*\)|[\w\[\],{}]+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+    re.MULTILINE,
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one HLO shape string like ``bf16[256,4096]{1,0}``."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+_COMPUTATION_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\([^)]*\)\s*->", re.MULTILINE)
+_WHILE_LINE_RE = re.compile(r"=\s*(?:\([^=]*\)\s+)?while\(", )
+_WHILE_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_WHILE_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r"\"known_trip_count\":\{\"n\":\"(\d+)\"\}")
+_CALL_RE = re.compile(r"(?:call|async-start)\([^)]*\),\s*to_apply=%?([\w.\-]+)")
+_COND_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRUE_FALSE_RE = re.compile(
+    r"true_computation=%?([\w.\-]+),\s*false_computation=%?([\w.\-]+)"
+)
+
+
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+
+
+def _split_computations(hlo_text: str) -> Dict[str, str]:
+    """computation name -> body text (optimized HLO module).
+
+    A computation header is a non-indented line ``[ENTRY] %name (args) ->
+    type {`` — parameter lists may contain nested parens, so only the name
+    prefix is parsed and the line must end with '{' and contain '->'.
+    """
+    marks = []
+    pos = 0
+    for line in hlo_text.splitlines(keepends=True):
+        stripped = line.rstrip()
+        if (stripped.endswith("{") and "->" in stripped
+                and not line.startswith((" ", "\t", "}"))):
+            m = _COMP_HEADER_RE.match(stripped)
+            if m:
+                marks.append((pos, m.group(1)))
+        pos += len(line)
+    out = {}
+    for i, (p, name) in enumerate(marks):
+        end = marks[i + 1][0] if i + 1 < len(marks) else len(hlo_text)
+        out[name] = hlo_text[p:end]
+    return out
+
+
+def _computation_multipliers(comps: Dict[str, str], entry: str) -> Dict[str, float]:
+    """Execution count of each computation: while bodies × known_trip_count."""
+    mult: Dict[str, float] = {name: 0.0 for name in comps}
+    if entry in mult:
+        mult[entry] = 1.0
+    # propagate (the call graph is acyclic; iterate to fixed point)
+    for _ in range(64):
+        changed = False
+        for name, body in comps.items():
+            m = mult.get(name, 0.0)
+            if m <= 0:
+                continue
+            for line in body.splitlines():
+                # tuple result types may contain /*index=N*/ comments, so a
+                # structural regex on the lhs is fragile — gate on the two
+                # tokens that always appear on a while op line
+                if "while(" not in line or "body=" not in line:
+                    continue
+                cond_m = _WHILE_COND_RE.search(line)
+                body_m = _WHILE_BODY_RE.search(line)
+                trip_m = _TRIP_RE.search(line)
+                if not body_m:
+                    continue
+                n = float(trip_m.group(1)) if trip_m else 1.0
+                targets = [(body_m.group(1), n)]
+                if cond_m:
+                    targets.append((cond_m.group(1), n + 1))
+                for target, times in targets:
+                    if target in mult:
+                        new = m * times
+                        if mult[target] < new:
+                            mult[target] = new
+                            changed = True
+            for c in _CALL_RE.finditer(body):
+                t = c.group(1)
+                if t in mult and mult[t] < m:
+                    mult[t] = m
+                    changed = True
+            for c in list(_COND_RE.finditer(body)) + list(_TRUE_FALSE_RE.finditer(body)):
+                names = [s.strip().lstrip("%") for s in re.split(r"[,\s]+", c.group(0)) ]
+                for t in names:
+                    if t in mult and mult[t] < m:
+                        mult[t] = m
+                        changed = True
+        if not changed:
+            break
+    return mult
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Sums result-shape bytes of every collective op, by op kind,
+    multiplied by the executing computation's loop trip count.
+
+    Collectives inside ``lax.scan`` while-bodies execute trip-count times
+    but appear once in the HLO text; the multiplier graph (ENTRY=1, while
+    body ×= known_trip_count) corrects that.  Uses the *result* shape
+    (per-participant output) as the per-chip payload approximation —
+    consistent across before/after comparisons.
+    """
+    comps = _split_computations(hlo_text)
+    entry = None
+    em = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo_text, re.MULTILINE)
+    if em:
+        entry = em.group(1)
+    if not comps or entry not in comps:
+        # flat module: fall back to uncorrected scan
+        out: Dict[str, int] = {}
+        for m in _COLLECTIVE_RE.finditer(hlo_text):
+            out[m.group(2)] = out.get(m.group(2), 0) + _shape_bytes(m.group(1))
+        return out
+    mult = _computation_multipliers(comps, entry)
+    out = {}
+    for name, body in comps.items():
+        k = mult.get(name, 0.0)
+        if k <= 0:
+            continue
+        for m in _COLLECTIVE_RE.finditer(body):
+            kind, byts = m.group(2), _shape_bytes(m.group(1))
+            out[kind] = out.get(kind, 0) + int(byts * k)
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float               # raw cost_analysis (undercounts scan bodies)
+    hlo_bytes: float               # raw cost_analysis
+    collective_bytes: float        # loop-corrected HLO parse
+    collective_breakdown: Dict[str, int]
+    model_flops: Optional[float] = None
+    bytes_per_device: Optional[float] = None
+    analytic_flops: Optional[float] = None   # exact formula (compute term)
+    analytic_bytes: Optional[float] = None   # exact formula (memory term)
+    tpu: TPUCostModel = dataclasses.field(default_factory=lambda: DEFAULT_TPU)
+
+    @property
+    def compute_s(self) -> float:
+        f = self.analytic_flops if self.analytic_flops else self.hlo_flops
+        return self.tpu.compute_time(f, self.chips)
+
+    @property
+    def memory_s(self) -> float:
+        b = self.analytic_bytes if self.analytic_bytes else self.hlo_bytes
+        return self.tpu.memory_time(b, self.chips)
+
+    @property
+    def collective_s(self) -> float:
+        return self.tpu.collective_time(self.collective_bytes, self.chips)
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """compute_term / max(all terms): 1.0 = perfectly compute-bound."""
+        t = self.bound_time_s
+        return self.compute_s / t if t > 0 else 0.0
+
+    @property
+    def useful_flops_ratio(self) -> Optional[float]:
+        """MODEL_FLOPS (6·N_active·D) / analytic compiled FLOPs."""
+        denom = self.analytic_flops or self.hlo_flops
+        if self.model_flops is None or not denom:
+            return None
+        return self.model_flops / denom
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "collective_bytes": self.collective_bytes,
+            "collective_breakdown": self.collective_breakdown,
+            "model_flops": self.model_flops,
+            "analytic_flops": self.analytic_flops,
+            "analytic_bytes": self.analytic_bytes,
+            "bytes_per_device": self.bytes_per_device,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "roofline_fraction": self.roofline_fraction,
+            "useful_flops_ratio": self.useful_flops_ratio,
+        }
+
+
+def analyse(
+    *,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    chips: int,
+    compiled,
+    lowered_text: Optional[str] = None,
+    model_flops: Optional[float] = None,
+    analytic_flops: Optional[float] = None,
+    analytic_bytes: Optional[float] = None,
+) -> RooflineReport:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    text = lowered_text if lowered_text is not None else compiled.as_text()
+    breakdown = collective_bytes_from_hlo(text)
+    coll = float(sum(breakdown.values()))
+
+    bytes_per_device = None
+    try:
+        ma = compiled.memory_analysis()
+        bytes_per_device = float(
+            ma.argument_size_in_bytes
+            + ma.output_size_in_bytes
+            + ma.temp_size_in_bytes
+            - ma.alias_size_in_bytes
+        )
+    except Exception:
+        pass
+
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops=flops, hlo_bytes=byts, collective_bytes=coll,
+        collective_breakdown=breakdown, model_flops=model_flops,
+        bytes_per_device=bytes_per_device,
+        analytic_flops=analytic_flops, analytic_bytes=analytic_bytes,
+    )
+
+
+def model_flops_for(cfg, shape_cfg) -> float:
+    """6·N_active·D for a train step (fwd+bwd); fwd-only for serving."""
+    n = cfg.active_param_count()
+    tokens = shape_cfg.global_batch * (
+        shape_cfg.seq_len if shape_cfg.kind != "decode" else 1
+    )
+    if shape_cfg.kind == "train":
+        return 6.0 * n * tokens
+    return 2.0 * n * tokens

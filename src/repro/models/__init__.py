@@ -1,0 +1,7 @@
+from repro.models.transformer import forward, init_lm, lm_loss
+from repro.models.dlrm import DLRMConfig, dlrm_forward, dlrm_loss, init_dlrm
+
+__all__ = [
+    "forward", "init_lm", "lm_loss",
+    "DLRMConfig", "dlrm_forward", "dlrm_loss", "init_dlrm",
+]

@@ -1,0 +1,326 @@
+"""Attention: GQA self-attention (train/prefill/decode) and cross-attention.
+
+Layout convention: activations ``(batch, seq, d_model)``; Q/K/V projected to
+``(batch, seq, heads, head_dim)``.  GQA repeats KV groups logically via
+einsum reshape — no materialized repeat_kv.
+
+Decode path takes a KV cache ``(batch, max_seq, kv_heads, head_dim)`` per
+layer and a write position; attention masks by cache validity, not
+position comparison against materialized ranges, so the same code serves
+32 k and 500 k caches.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import maybe_shard_any
+from repro.models.layers import Params, dense_init
+from repro.models.rope import apply_rope
+
+# candidate shardings for the (b, kv_heads, g, s_q, s_k) score tensor:
+# prefer head parallelism (kv heads, then q-groups).  When neither head
+# count divides TP the scores stay batch-sharded — long sequences avoid
+# the quadratic buffer entirely via chunked_self_attention instead.
+_SCORE_SHARDINGS = (
+    ("batch", "kv_heads", None, None, None),
+    ("batch", None, "qgroups", None, None),
+)
+
+
+def init_attention(rng, d_model, num_heads, kv_heads, head_dim, dtype, *, use_bias=False) -> Params:
+    kq, kk, kv, ko = jax.random.split(rng, 4)
+    p = {
+        "wq": dense_init(kq, d_model, num_heads * head_dim, dtype),
+        "wk": dense_init(kk, d_model, kv_heads * head_dim, dtype),
+        "wv": dense_init(kv, d_model, kv_heads * head_dim, dtype),
+        "wo": dense_init(ko, num_heads * head_dim, d_model, dtype, scale=0.5),
+    }
+    if use_bias:
+        p["bq"] = jnp.zeros((num_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((kv_heads * head_dim,), dtype)
+        p["bv"] = jnp.zeros((kv_heads * head_dim,), dtype)
+    return p
+
+
+def _project(p, x, num_heads, kv_heads, head_dim):
+    b, s, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return (
+        q.reshape(b, s, num_heads, head_dim),
+        k.reshape(b, s, kv_heads, head_dim),
+        v.reshape(b, s, kv_heads, head_dim),
+    )
+
+
+def _gqa_scores(q, k):
+    """q: (b,s,H,d), k: (b,t,Hkv,d) → scores (b, Hkv, q_per_kv, s, t)."""
+    b, s, H, d = q.shape
+    kvh = k.shape[2]
+    qg = q.reshape(b, s, kvh, H // kvh, d)
+    return jnp.einsum("bskgd,btkd->bkgst", qg, k)
+
+
+def _gqa_out(attn, v):
+    """attn: (b,Hkv,g,s,t), v: (b,t,Hkv,d) → (b,s,H*d)."""
+    b, kvh, g, s, t = attn.shape
+    out = jnp.einsum("bkgst,btkd->bskgd", attn, v)
+    return out.reshape(b, s, kvh * g * v.shape[-1])
+
+
+def self_attention(
+    p: Params,
+    x: jax.Array,                    # (b, s, d_model)
+    *,
+    num_heads: int,
+    kv_heads: int,
+    head_dim: int,
+    positions: Optional[jax.Array] = None,
+    rope_theta: float = 10_000.0,
+    rope_partial: bool = False,
+    causal: bool = True,
+    window: int = 0,                 # >0 → sliding-window attention
+) -> jax.Array:
+    b, s, _ = x.shape
+    q, k, v = _project(p, x, num_heads, kv_heads, head_dim)
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q = apply_rope(q, positions, theta=rope_theta, partial=rope_partial)
+    k = apply_rope(k, positions, theta=rope_theta, partial=rope_partial)
+
+    scores = _gqa_scores(q, k).astype(jnp.float32) / math.sqrt(head_dim)
+    scores = maybe_shard_any(scores, _SCORE_SHARDINGS)
+    if causal:
+        i = positions[:, None, None, :, None]  # query pos
+        j = positions[:, None, None, None, :]  # key pos
+        mask = j <= i
+        if window:
+            mask &= j > i - window
+        scores = jnp.where(mask, scores, -1e30)
+    attn = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    return _gqa_out(attn, v) @ p["wo"]
+
+
+def decode_attention(
+    p: Params,
+    x: jax.Array,                    # (b, 1, d_model) — one new token
+    k_cache: jax.Array,              # (b, max_seq, kv_heads, head_dim)
+    v_cache: jax.Array,
+    cache_len: jax.Array,            # scalar int32 — tokens already cached
+    *,
+    num_heads: int,
+    kv_heads: int,
+    head_dim: int,
+    rope_theta: float = 10_000.0,
+    rope_partial: bool = False,
+):
+    """One decode step: append KV at cache_len, attend over the valid prefix.
+
+    Returns (out (b,1,d_model), new_k_cache, new_v_cache).
+    """
+    b = x.shape[0]
+    pos = jnp.full((b, 1), cache_len, dtype=jnp.int32)
+    q, k, v = _project(p, x, num_heads, kv_heads, head_dim)
+    q = apply_rope(q, pos, theta=rope_theta, partial=rope_partial)
+    k = apply_rope(k, pos, theta=rope_theta, partial=rope_partial)
+
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k, (0, cache_len, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v, (0, cache_len, 0, 0))
+
+    scores = _gqa_scores(q, k_cache).astype(jnp.float32) / math.sqrt(head_dim)
+    valid = (jnp.arange(k_cache.shape[1]) <= cache_len)[None, None, None, None, :]
+    scores = jnp.where(valid, scores, -1e30)
+    attn = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = _gqa_out(attn, v_cache) @ p["wo"]
+    return out, k_cache, v_cache
+
+
+def chunked_self_attention(
+    p: Params,
+    x: jax.Array,                    # (b, s, d_model)
+    *,
+    num_heads: int,
+    kv_heads: int,
+    head_dim: int,
+    positions: Optional[jax.Array] = None,
+    rope_theta: float = 10_000.0,
+    rope_partial: bool = False,
+    q_chunk: int = 1024,
+    k_chunk: int = 1024,
+    window: int = 0,
+) -> jax.Array:
+    """Flash-style causal attention: online softmax over key chunks.
+
+    Never materializes the (s, s) score matrix — peak intermediate is
+    (q_chunk, k_chunk) per head.  Numerically identical to
+    :func:`self_attention` (same masking, f32 accumulation); used for
+    long-sequence prefill (s >= ~8k) where the quadratic buffer would
+    dominate HBM.
+    """
+    b, s, _ = x.shape
+    assert s % q_chunk == 0 and s % k_chunk == 0, (s, q_chunk, k_chunk)
+    q, k, v = _project(p, x, num_heads, kv_heads, head_dim)
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q = apply_rope(q, positions, theta=rope_theta, partial=rope_partial)
+    k = apply_rope(k, positions, theta=rope_theta, partial=rope_partial)
+    scale = 1.0 / math.sqrt(head_dim)
+    positions = jnp.broadcast_to(positions, (b, s))
+
+    nq, nk = s // q_chunk, s // k_chunk
+    kvh = kv_heads
+    g = num_heads // kvh
+    qc = q.reshape(b, nq, q_chunk, kvh, g, head_dim).astype(jnp.float32)
+    kc = k.reshape(b, nk, k_chunk, kvh, head_dim).astype(jnp.float32)
+    vc = v.reshape(b, nk, k_chunk, kvh, head_dim).astype(jnp.float32)
+    qpos = positions.reshape(b, nq, q_chunk)
+    kpos = positions.reshape(b, nk, k_chunk)
+
+    def per_q_chunk(qi, q_blk, qp):
+        # online softmax state: m (max), l (denominator), acc (numerator)
+        m0 = jnp.full((b, q_chunk, kvh, g), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, q_chunk, kvh, g), jnp.float32)
+        a0 = jnp.zeros((b, q_chunk, kvh, g, head_dim), jnp.float32)
+
+        @jax.checkpoint
+        def over_k(carry, inputs):
+            # checkpointed: backward recomputes each (q,k) score block, so
+            # residual memory stays O(q_chunk·k_chunk), flash-style
+            m, l, acc = carry
+            k_blk, v_blk, kp = inputs
+            sc = jnp.einsum("bqkgd,btkd->bqkgt", q_blk, k_blk) * scale
+            mask = kp[:, None, None, None, :] <= qp[:, :, None, None, None]
+            if window:
+                mask &= kp[:, None, None, None, :] > qp[:, :, None, None, None] - window
+            sc = jnp.where(mask, sc, -1e30)
+            m_new = jnp.maximum(m, sc.max(axis=-1))
+            correction = jnp.exp(m - m_new)
+            w = jnp.exp(sc - m_new[..., None])
+            l_new = l * correction + w.sum(axis=-1)
+            acc_new = acc * correction[..., None] + jnp.einsum(
+                "bqkgt,btkd->bqkgd", w, v_blk
+            )
+            return (m_new, l_new, acc_new), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            over_k, (m0, l0, a0),
+            (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4),
+             kpos.transpose(1, 0, 2)),
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        # accumulate f32, store bf16: halves the stacked-output footprint
+        return out.astype(x.dtype)  # (b, q_chunk, kvh, g, d)
+
+    outs = jax.lax.map(
+        lambda args: per_q_chunk(*args),
+        (jnp.arange(nq), qc.transpose(1, 0, 2, 3, 4, 5), qpos.transpose(1, 0, 2)),
+    )  # (nq, b, q_chunk, kvh, g, d) in x.dtype
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, num_heads * head_dim)
+    return out @ p["wo"]
+
+
+def decode_attention_readonly(
+    p: Params,
+    x: jax.Array,                    # (b, 1, d_model) — one new token
+    k_cache: jax.Array,              # (b, max_seq, kv_heads, head_dim) READ-ONLY
+    v_cache: jax.Array,
+    cache_len: jax.Array,            # scalar int32
+    *,
+    num_heads: int,
+    kv_heads: int,
+    head_dim: int,
+    rope_theta: float = 10_000.0,
+    rope_partial: bool = False,
+    kv_scale: Optional[tuple] = None,  # (k_scale, v_scale) (b, max_seq, kvh) for int8 caches
+):
+    """Decode WITHOUT writing the cache: attends over the valid prefix plus
+    the new token's own K/V, and returns (out, k_new, v_new) so the caller
+    batches all layers' cache writes into one scatter outside the layer
+    scan.  Avoids the full-cache double buffer a scan-carried cache update
+    costs (§Perf: decode memory iteration 1).  Numerically identical to
+    :func:`decode_attention`.
+
+    ``kv_scale`` enables int8 caches: entries are dequantized on read
+    (§Perf decode iteration 2); k_new/v_new are returned unquantized.
+    """
+    b = x.shape[0]
+    pos = jnp.full((b, 1), cache_len, dtype=jnp.int32)
+    q, k, v = _project(p, x, num_heads, kv_heads, head_dim)
+    q = apply_rope(q, pos, theta=rope_theta, partial=rope_partial)
+    k = apply_rope(k, pos, theta=rope_theta, partial=rope_partial)
+
+    if kv_scale is not None:
+        ks, vs = kv_scale
+        kc = k_cache.astype(jnp.float32) * ks[..., None]
+        vc = v_cache.astype(jnp.float32) * vs[..., None]
+        kc, vc = kc.astype(x.dtype), vc.astype(x.dtype)
+    else:
+        kc, vc = k_cache, v_cache
+
+    scores_c = _gqa_scores(q, kc).astype(jnp.float32) / math.sqrt(head_dim)
+    valid = (jnp.arange(kc.shape[1]) < cache_len)[None, None, None, None, :]
+    scores_c = jnp.where(valid, scores_c, -1e30)
+    scores_n = _gqa_scores(q, k).astype(jnp.float32) / math.sqrt(head_dim)  # (b,kvh,g,1,1)
+
+    m = jnp.maximum(scores_c.max(axis=-1, keepdims=True), scores_n)
+    wc = jnp.exp(scores_c - m)
+    wn = jnp.exp(scores_n - m)
+    denom = wc.sum(axis=-1, keepdims=True) + wn
+    out = (
+        _gqa_out((wc / denom).astype(x.dtype), vc)
+        + _gqa_out((wn / denom).astype(x.dtype), v)
+    ) @ p["wo"]
+    return out, k, v
+
+
+def init_cross_attention(rng, d_model, num_heads, kv_heads, head_dim, enc_dim, dtype) -> Params:
+    kq, kk, kv, ko = jax.random.split(rng, 4)
+    return {
+        "wq": dense_init(kq, d_model, num_heads * head_dim, dtype),
+        "wk": dense_init(kk, enc_dim, kv_heads * head_dim, dtype),
+        "wv": dense_init(kv, enc_dim, kv_heads * head_dim, dtype),
+        "wo": dense_init(ko, num_heads * head_dim, d_model, dtype, scale=0.5),
+        "gate": jnp.zeros((1,), dtype),  # zero-init tanh gate (Llama-vision style)
+    }
+
+
+def cross_attention(
+    p: Params,
+    x: jax.Array,          # (b, s, d_model)
+    enc: jax.Array,        # (b, t, enc_dim) — image/patch embeddings
+    *,
+    num_heads: int,
+    kv_heads: int,
+    head_dim: int,
+    q_chunk: int = 512,
+) -> jax.Array:
+    """Gated cross-attention; query dim is chunked so the (s × t_img)
+    score buffer never exceeds (q_chunk × t_img) per head."""
+    b, s, _ = x.shape
+    t = enc.shape[1]
+    q = (x @ p["wq"]).reshape(b, s, num_heads, head_dim)
+    k = (enc @ p["wk"]).reshape(b, t, kv_heads, head_dim)
+    v = (enc @ p["wv"]).reshape(b, t, kv_heads, head_dim)
+
+    def block(q_blk):  # (b, qc, H, hd)
+        scores = _gqa_scores(q_blk, k).astype(jnp.float32) / math.sqrt(head_dim)
+        attn = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        return _gqa_out(attn, v)  # (b, qc, H*hd)
+
+    if s > q_chunk and s % q_chunk == 0:
+        nq = s // q_chunk
+        qs = q.reshape(b, nq, q_chunk, num_heads, head_dim).transpose(1, 0, 2, 3, 4)
+        out = jax.lax.map(jax.checkpoint(block), qs)
+        out = out.transpose(1, 0, 2, 3).reshape(b, s, num_heads * head_dim)
+    else:
+        out = block(q)
+    out = out @ p["wo"]
+    return jnp.tanh(p["gate"]) * out

@@ -1,0 +1,160 @@
+"""DLRM (Naumov et al.) with a ReCross-mapped embedding layer.
+
+Bottom MLP over dense features → sparse embedding-bag reductions (one per
+categorical table) → pairwise dot interaction → top MLP → CTR logit.
+
+The embedding path is selectable:
+  * ``"dense"``    — gather+sum on the logical table (oracle/CPU baseline),
+  * ``"layout"``   — pure-jnp tiled MAC through the ReCross image,
+  * ``"kernel"``   — the Pallas crossbar_reduce kernel (TPU hot path).
+
+All three are numerically identical (tests assert it); the simulator
+(repro.core.simulator) models what the ReRAM version of the same layout
+would cost — together they reproduce the paper's experiments end to end.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mapping import CrossbarLayout
+from repro.kernels import crossbar_reduce
+from repro.core.reduction import reduce_via_layout
+from repro.models.layers import Params, dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm-recross"
+    family: str = "recsys"
+    num_tables: int = 1
+    rows_per_table: int = 65_536
+    embed_dim: int = 64
+    dense_features: int = 13
+    bottom_mlp: tuple = (512, 256, 64)
+    top_mlp: tuple = (512, 256, 1)
+    max_bag: int = 64             # padded lookups per table per sample
+    # ReCross knobs
+    group_size: int = 64
+    embedding_path: str = "kernel"   # dense | layout | kernel
+    dtype: str = "float32"
+
+    @property
+    def jnp_dtype(self):
+        return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[self.dtype]
+
+
+def init_dlrm(rng, cfg: DLRMConfig) -> Params:
+    keys = jax.random.split(rng, 3 + cfg.num_tables)
+    params: Params = {"tables": {}}
+    for t in range(cfg.num_tables):
+        params["tables"][f"t{t}"] = (
+            jax.random.normal(keys[t], (cfg.rows_per_table, cfg.embed_dim)) * 0.01
+        ).astype(cfg.jnp_dtype)
+
+    def mlp_params(key, sizes, d_in):
+        ps = []
+        for i, d_out in enumerate(sizes):
+            k = jax.random.fold_in(key, i)
+            ps.append({
+                "w": dense_init(k, d_in, d_out, cfg.jnp_dtype),
+                "b": jnp.zeros((d_out,), cfg.jnp_dtype),
+            })
+            d_in = d_out
+        return ps
+
+    params["bottom"] = mlp_params(keys[-2], cfg.bottom_mlp, cfg.dense_features)
+    n_emb = cfg.num_tables + 1
+    n_pairs = n_emb * (n_emb - 1) // 2
+    top_in = cfg.bottom_mlp[-1] + n_pairs
+    params["top"] = mlp_params(keys[-1], cfg.top_mlp, top_in)
+    return params
+
+
+def _apply_mlp(ps, x, final_linear=False):
+    for i, p in enumerate(ps):
+        x = x @ p["w"] + p["b"]
+        if not (final_linear and i == len(ps) - 1):
+            x = jax.nn.relu(x)
+    return x
+
+
+def dlrm_forward(
+    params: Params,
+    cfg: DLRMConfig,
+    dense: jax.Array,                    # (b, dense_features)
+    sparse: Dict[str, Any],              # per-table query tensors (see below)
+    *,
+    layouts: Optional[Dict[str, CrossbarLayout]] = None,
+    images: Optional[Dict[str, jax.Array]] = None,
+) -> jax.Array:
+    """Returns CTR logits (b,).
+
+    ``sparse[f"t{i}"]`` is
+      * ``indices`` (b, max_bag) int32 −1-padded          (dense path), or
+      * ``(tile_ids, bitmaps)``                            (layout/kernel).
+    """
+    b = dense.shape[0]
+    x_dense = _apply_mlp(params["bottom"], dense)
+
+    embs: List[jax.Array] = [x_dense]
+    for t in range(cfg.num_tables):
+        key = f"t{t}"
+        if cfg.embedding_path == "dense":
+            idx = sparse[key]
+            table = params["tables"][key]
+            take = table[jnp.clip(idx, 0, table.shape[0] - 1)]
+            e = (take * (idx >= 0)[..., None]).sum(axis=1)
+        else:
+            tile_ids, bitmaps = sparse[key]
+            image = images[key]
+            if cfg.embedding_path == "kernel":
+                # image dim is padded to a 128 multiple by build_images
+                e = crossbar_reduce(image, tile_ids, bitmaps)[:, : cfg.embed_dim]
+            else:
+                flat = image.reshape(-1, image.shape[-1])
+                e = reduce_via_layout(
+                    flat, tile_ids, bitmaps, tile_rows=image.shape[1]
+                )[:, : cfg.embed_dim]
+        embs.append(e.astype(x_dense.dtype))
+
+    # pairwise dot-product interaction
+    stack = jnp.stack(embs, axis=1)                       # (b, n_emb, d)
+    inter = jnp.einsum("bnd,bmd->bnm", stack, stack)
+    iu = jnp.triu_indices(stack.shape[1], k=1)
+    pairs = inter[:, iu[0], iu[1]]                        # (b, n_pairs)
+
+    top_in = jnp.concatenate([x_dense, pairs], axis=-1)
+    return _apply_mlp(params["top"], top_in, final_linear=True)[:, 0]
+
+
+def dlrm_loss(params, cfg, dense, sparse, labels, **kw):
+    logits = dlrm_forward(params, cfg, dense, sparse, **kw)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def build_images(params: Params, cfg: DLRMConfig, layouts: Dict[str, CrossbarLayout]):
+    """Materializes per-table crossbar images from current table params.
+
+    The MXU lane width is 128, so the embedding dim is zero-padded up to a
+    128 multiple for the kernel path (the forward slices it back off) —
+    the TPU equivalent of the paper's column padding on 64-wide crossbars.
+    """
+    images = {}
+    pad = (-cfg.embed_dim) % 128
+    for key, layout in layouts.items():
+        tbl = np.asarray(params["tables"][key], np.float32)
+        img = layout.build_image(tbl).reshape(
+            layout.num_tiles, layout.tile_rows, cfg.embed_dim
+        )
+        if pad:
+            img = np.pad(img, ((0, 0), (0, 0), (0, pad)))
+        images[key] = jnp.asarray(img, params["tables"][key].dtype)
+    return images

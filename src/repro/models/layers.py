@@ -1,0 +1,103 @@
+"""Shared building blocks: norms, MLPs, initializers.
+
+Parameters are plain pytrees (nested dicts of jnp arrays) — no framework
+dependency.  Every block is a pair ``init_*(rng, ...) -> params`` /
+``apply(params, x)`` of pure functions, so stacking + ``lax.scan`` over
+layers and pjit sharding of the stacked pytree are trivial.
+
+Initializers follow standard LM practice (trunc-normal fan-in for
+projections, scaled residual-out init).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------- inits --
+
+def dense_init(rng, in_dim: int, out_dim: int, dtype, *, scale: float = 1.0):
+    std = scale / math.sqrt(in_dim)
+    return (jax.random.truncated_normal(rng, -3, 3, (in_dim, out_dim)) * std).astype(dtype)
+
+
+def embed_init(rng, vocab: int, dim: int, dtype):
+    return (jax.random.truncated_normal(rng, -3, 3, (vocab, dim)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------- norms --
+
+def init_norm(d: int, kind: str, dtype) -> Params:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_norm(p: Params, x: jax.Array, kind: str = "rmsnorm", eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y.astype(x.dtype) * p["scale"]
+    if "bias" in p:
+        y = y + p["bias"]
+    return y
+
+
+# ----------------------------------------------------------------- mlps --
+
+def init_mlp(rng, d_model: int, d_ff: int, act: str, dtype, *, use_bias=False) -> Params:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    p: Params = {"out": dense_init(k2, d_ff, d_model, dtype, scale=0.5)}
+    if act in ("swiglu", "geglu"):
+        p["in_gate"] = dense_init(k1, d_model, d_ff, dtype)
+        p["in_val"] = dense_init(k3, d_model, d_ff, dtype)
+    else:
+        p["in_val"] = dense_init(k1, d_model, d_ff, dtype)
+    if use_bias:
+        p["bias_out"] = jnp.zeros((d_model,), dtype)
+    return p
+
+
+def apply_mlp(p: Params, x: jax.Array, act: str = "swiglu") -> jax.Array:
+    if act == "swiglu":
+        h = jax.nn.silu(x @ p["in_gate"]) * (x @ p["in_val"])
+    elif act == "geglu":
+        h = jax.nn.gelu(x @ p["in_gate"]) * (x @ p["in_val"])
+    else:
+        h = jax.nn.gelu(x @ p["in_val"])
+    y = h @ p["out"]
+    if "bias_out" in p:
+        y = y + p["bias_out"]
+    return y
+
+
+# ------------------------------------------------------------- pytrees --
+
+def stack_layers(layer_params: list) -> Params:
+    """Stacks per-layer pytrees into leading-axis arrays for lax.scan."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *layer_params)
+
+
+def layer_slice(stacked: Params, i: int) -> Params:
+    return jax.tree.map(lambda x: x[i], stacked)
+
+
+def count_params(params: Params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def cast_floats(tree: Params, dtype) -> Params:
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, tree
+    )

@@ -1,0 +1,208 @@
+"""Mamba2 (SSD) block — chunked state-space duality implementation.
+
+The selective state-space recurrence
+
+    h_t = exp(Δ_t A) h_{t-1} + Δ_t B_t x_t          (A scalar per head, SSD)
+    y_t = C_t · h_t + D x_t
+
+is computed with the SSD chunk decomposition: the sequence is split into
+chunks of ``chunk`` steps; within a chunk the contribution is the masked
+quadratic form (an attention-like einsum that maps onto the MXU), and a
+``lax.scan`` over chunks carries the inter-chunk state ``(heads, p, N)``.
+This is the standard train/prefill path; decode uses the O(1) recurrence
+step (:func:`mamba_decode_step`).
+
+Shapes follow Mamba2: ``d_inner = 2·d_model``, heads of head dim ``p``,
+state size ``N = ssm_state``.  The depthwise causal conv is width 4.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, dense_init
+
+CONV_W = 4
+
+
+def init_mamba2(rng, d_model: int, ssm_state: int, dtype, *, head_dim: int = 64) -> Params:
+    d_inner = 2 * d_model
+    heads = d_inner // head_dim
+    N = ssm_state
+    k1, k2, k3, k4, k5 = jax.random.split(rng, 5)
+    return {
+        # fused input projection: [x, z, B, C, dt]
+        "w_in": dense_init(k1, d_model, 2 * d_inner + 2 * N + heads, dtype),
+        "conv": (jax.random.truncated_normal(k2, -3, 3, (CONV_W, d_inner)) * 0.2).astype(dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, heads)).astype(jnp.float32),
+        "D": jnp.ones((heads,), jnp.float32),
+        "dt_bias": jnp.zeros((heads,), jnp.float32),
+        "w_out": dense_init(k3, d_inner, d_model, dtype, scale=0.5),
+        "norm_scale": jnp.ones((d_inner,), dtype),
+    }
+
+
+def _split_proj(proj, d_inner, N, heads):
+    x, z, B, C, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N], axis=-1
+    )
+    return x, z, B, C, dt
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, state: jax.Array | None = None):
+    """Depthwise causal conv, width CONV_W. x: (b, s, d). state: (b, CONV_W-1, d)."""
+    if state is None:
+        pad = jnp.zeros((x.shape[0], CONV_W - 1, x.shape[-1]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(CONV_W))
+    new_state = xp[:, -(CONV_W - 1) :]
+    return out, new_state
+
+
+def apply_mamba2(
+    p: Params,
+    u: jax.Array,                 # (b, s, d_model)
+    *,
+    ssm_state: int,
+    head_dim: int = 64,
+    chunk: int = 128,
+) -> jax.Array:
+    y, _ = mamba2_scan(p, u, ssm_state=ssm_state, head_dim=head_dim, chunk=chunk)
+    return y
+
+
+def mamba2_scan(
+    p: Params,
+    u: jax.Array,
+    *,
+    ssm_state: int,
+    head_dim: int = 64,
+    chunk: int = 128,
+    init_state: jax.Array | None = None,
+    conv_state: jax.Array | None = None,
+) -> Tuple[jax.Array, tuple]:
+    b, s, d_model = u.shape
+    d_inner = 2 * d_model
+    heads = d_inner // head_dim
+    N = ssm_state
+
+    proj = u @ p["w_in"]
+    x, z, B, C, dt = _split_proj(proj, d_inner, N, heads)
+    x, conv_out_state = _causal_conv(x, p["conv"], conv_state)
+    x = jax.nn.silu(x)
+    B = jax.nn.silu(B)   # (b, s, N) — shared across heads (Mamba2 multi-value)
+    C = jax.nn.silu(C)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (b, s, H)
+    A = -jnp.exp(p["A_log"])                                     # (H,) negative
+
+    xh = x.reshape(b, s, heads, head_dim)
+
+    # pad sequence to chunk multiple
+    pad = (-s) % chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // chunk
+    xc = xh.reshape(b, nc, chunk, heads, head_dim)
+    Bc = B.reshape(b, nc, chunk, N)
+    Cc = C.reshape(b, nc, chunk, N)
+    dtc = dt.reshape(b, nc, chunk, heads)
+
+    # per-step decay a_t = exp(dt_t * A): (b, nc, chunk, H)
+    log_a = dtc * A  # negative
+    cum = jnp.cumsum(log_a, axis=2)  # within-chunk cumulative log decay
+
+    def chunk_step(h, inputs):
+        xck, Bck, Cck, dtk, logak, cumk = inputs
+        # h: (b, H, p, N) carried state (in f32)
+        # intra-chunk (quadratic, attention-like): L[t,t'] = exp(cum_t - cum_t') for t >= t'
+        rel = cumk[:, :, None, :] - cumk[:, None, :, :]          # (b, t, t', H)
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))[None, :, :, None]
+        # mask BEFORE exp: exp of masked (positive, unbounded) entries would
+        # overflow and poison gradients through the where (inf * 0 = NaN)
+        L = jnp.exp(jnp.where(causal, rel, -1e30))
+        # scores: (b, t, t', H) * C_t·B_t'
+        cb = jnp.einsum("btn,bun->btu", Cck, Bck)                # (b, t, t')
+        w = L * cb[..., None] * dtk[:, None, :, :]               # dt at source t'
+        y_intra = jnp.einsum("btuh,buhp->bthp", w, xck.astype(jnp.float32))
+        # contribution of carried state: y += C_t · (decay_t * h)
+        decay_in = jnp.exp(cumk)                                 # (b, t, H)
+        y_state = jnp.einsum("btn,bhpn->bthp", Cck, h) * decay_in[..., None]
+        # update state: h' = decay_chunk * h + Σ_t decay_{end..t} dt_t B_t x_t
+        total = jnp.exp(cumk[:, -1])                             # (b, H)
+        tail = jnp.exp(cumk[:, -1][:, None, :] - cumk)           # (b, t, H)
+        dBx = jnp.einsum(
+            "bth,btn,bthp->bhpn", dtk * tail, Bck, xck.astype(jnp.float32)
+        )
+        h_new = h * total[:, :, None, None] + dBx
+        return h_new, (y_intra + y_state).astype(u.dtype)
+
+    if init_state is None:
+        h0 = jnp.zeros((b, heads, head_dim, N), jnp.float32)
+    else:
+        h0 = init_state
+    inputs = (
+        xc.transpose(1, 0, 2, 3, 4),
+        Bc.transpose(1, 0, 2, 3),
+        Cc.transpose(1, 0, 2, 3),
+        dtc.transpose(1, 0, 2, 3),
+        log_a.reshape(b, nc, chunk, heads).transpose(1, 0, 2, 3),
+        cum.reshape(b, nc, chunk, heads).transpose(1, 0, 2, 3),
+    )
+    h_last, ys = jax.lax.scan(chunk_step, h0, inputs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, nc * chunk, heads, head_dim)[:, :s]
+    y = y + xh[:, :s] * p["D"][None, None, :, None].astype(u.dtype)
+    y = y.reshape(b, s, d_inner)
+
+    # gated RMSNorm (Mamba2)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)).astype(u.dtype)
+    y = y * p["norm_scale"] * jax.nn.silu(z)
+    return y @ p["w_out"], (h_last, conv_out_state)
+
+
+def mamba2_decode_step(
+    p: Params,
+    u: jax.Array,                 # (b, 1, d_model)
+    state: jax.Array,             # (b, H, p, N) f32
+    conv_state: jax.Array,        # (b, CONV_W-1, d_inner)
+    *,
+    ssm_state: int,
+    head_dim: int = 64,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """O(1) recurrence step. Returns (y (b,1,d), new_state, new_conv_state)."""
+    b, _, d_model = u.shape
+    d_inner = 2 * d_model
+    heads = d_inner // head_dim
+    N = ssm_state
+
+    proj = u @ p["w_in"]
+    x, z, B, C, dt = _split_proj(proj, d_inner, N, heads)
+    x, conv_state = _causal_conv(x, p["conv"], conv_state)
+    x = jax.nn.silu(x)[:, 0]                                  # (b, d_inner)
+    B = jax.nn.silu(B)[:, 0]                                  # (b, N)
+    C = jax.nn.silu(C)[:, 0]
+    dt = jax.nn.softplus(dt.astype(jnp.float32)[:, 0] + p["dt_bias"])  # (b, H)
+    A = -jnp.exp(p["A_log"])
+
+    xh = x.reshape(b, heads, head_dim).astype(jnp.float32)
+    decay = jnp.exp(dt * A)                                   # (b, H)
+    state = state * decay[:, :, None, None] + jnp.einsum(
+        "bh,bn,bhp->bhpn", dt, B, xh
+    )
+    y = jnp.einsum("bn,bhpn->bhp", C, state)                  # (b, H, p)
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(b, 1, d_inner).astype(u.dtype)
+
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)).astype(u.dtype)
+    y = y * p["norm_scale"] * jax.nn.silu(z)
+    return y @ p["w_out"], state, conv_state

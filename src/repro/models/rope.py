@@ -1,0 +1,41 @@
+"""Rotary position embeddings: standard (Llama) and 2D/partial (ChatGLM).
+
+``rope_2d=True`` (ChatGLM3) applies rotation to only the first half of
+each head's dims, leaving the rest as-is — GLM's "RoPE 2d" per the
+published config.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_frequencies(head_dim: int, theta: float, rot_dim: int | None = None):
+    rot = rot_dim or head_dim
+    inv = 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    return inv  # (rot/2,)
+
+
+def apply_rope(
+    x: jax.Array,              # (..., seq, heads, head_dim)
+    positions: jax.Array,      # (..., seq)
+    *,
+    theta: float = 10_000.0,
+    partial: bool = False,     # rotate only first half of head_dim (GLM)
+) -> jax.Array:
+    head_dim = x.shape[-1]
+    rot_dim = head_dim // 2 if partial else head_dim
+    inv = rope_frequencies(head_dim, theta, rot_dim)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., seq, rot/2)
+    cos = jnp.cos(ang)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+
+    xr = x[..., :rot_dim].astype(jnp.float32)
+    x1, x2 = xr[..., ::2], xr[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    rotated = jnp.stack([r1, r2], axis=-1).reshape(xr.shape).astype(x.dtype)
+    if partial:
+        return jnp.concatenate([rotated, x[..., rot_dim:]], axis=-1)
+    return rotated

@@ -1,0 +1,403 @@
+"""Generic decoder LM covering all assigned families.
+
+One ``init_lm`` / ``forward`` / ``decode_step`` triple handles:
+
+  dense   — pre-norm GQA + (Sw/Ge)GLU MLP blocks, scanned over layers
+  moe     — MLP replaced by top-k expert layer (sort-free dispatch)
+  vlm     — superblocks of ``cross_attn_period`` self layers + 1 gated
+            cross-attention layer over stub image embeddings
+  audio   — musicgen: K codebook embeddings summed at input, K heads out
+  ssm     — xLSTM: mLSTM blocks with periodic sLSTM (no FFN when d_ff=0)
+  hybrid  — zamba2: Mamba2 backbone + ONE shared attention block applied
+            every ``shared_attn_period`` layers (params shared across all
+            applications — the Zamba trick)
+
+All layer stacks are ``lax.scan``-ed over stacked param pytrees so the
+lowered HLO is one block body regardless of depth (compile-time posture
+for the 512-device dry-run, and faster compiles in production).
+
+Activation sharding is annotated with logical axes via
+:func:`repro.dist.sharding.maybe_shard` — a no-op outside a mesh context.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import maybe_shard
+from repro.models import attention as attn
+from repro.models import mamba2, xlstm
+from repro.models.layers import (
+    Params,
+    apply_mlp,
+    apply_norm,
+    embed_init,
+    dense_init,
+    init_mlp,
+    init_norm,
+    stack_layers,
+)
+from repro.models.moe import apply_moe, init_moe
+
+
+# ============================================================= init ======
+
+
+def _init_block(rng, cfg: ModelConfig) -> Params:
+    """One decoder block (dense/moe/audio families)."""
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    p: Params = {
+        "norm_attn": init_norm(d, cfg.norm, cfg.jnp_dtype),
+        "attn": attn.init_attention(
+            k1, d, cfg.num_heads, cfg.kv_heads, hd, cfg.jnp_dtype, use_bias=cfg.use_bias
+        ),
+        "norm_mlp": init_norm(d, cfg.norm, cfg.jnp_dtype),
+    }
+    if cfg.moe:
+        p["moe"] = init_moe(k2, d, cfg.d_ff, cfg.moe, cfg.act, cfg.jnp_dtype)
+    elif cfg.d_ff:
+        p["mlp"] = init_mlp(k2, d, cfg.d_ff, cfg.act, cfg.jnp_dtype, use_bias=cfg.use_bias)
+    return p
+
+
+def _init_xlstm_layers(rng, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(rng, cfg.num_layers)
+    m_layers, s_layers = [], []
+    for i in range(cfg.num_layers):
+        block = {"norm": init_norm(cfg.d_model, cfg.norm, cfg.jnp_dtype)}
+        if cfg.slstm_every and i % cfg.slstm_every == 0:
+            block["cell"] = xlstm.init_slstm(ks[i], cfg.d_model, cfg.num_heads, cfg.jnp_dtype)
+            s_layers.append(block)
+        else:
+            block["cell"] = xlstm.init_mlstm(ks[i], cfg.d_model, cfg.num_heads, cfg.jnp_dtype)
+            m_layers.append(block)
+    return {"slstm": stack_layers(s_layers), "mlstm": stack_layers(m_layers)}
+
+
+def _init_zamba_layers(rng, cfg: ModelConfig) -> Params:
+    period = cfg.shared_attn_period
+    n_super = cfg.num_layers // period
+    n_tail = cfg.num_layers - n_super * period
+    ks = jax.random.split(rng, cfg.num_layers + 2)
+    mk = lambda k: {
+        "norm": init_norm(cfg.d_model, cfg.norm, cfg.jnp_dtype),
+        "mamba": mamba2.init_mamba2(k, cfg.d_model, cfg.ssm_state, cfg.jnp_dtype),
+    }
+    body = stack_layers([mk(ks[i]) for i in range(n_super * period)])
+    body = jax.tree.map(lambda x: x.reshape(n_super, period, *x.shape[1:]), body)
+    tail = stack_layers([mk(ks[n_super * period + i]) for i in range(n_tail)]) if n_tail else None
+    shared = {
+        "norm": init_norm(cfg.d_model, cfg.norm, cfg.jnp_dtype),
+        "attn": attn.init_attention(
+            ks[-1], cfg.d_model, cfg.num_heads, cfg.kv_heads,
+            cfg.resolved_head_dim, cfg.jnp_dtype,
+        ),
+    }
+    out = {"super": body, "shared_attn": shared}
+    if tail is not None:
+        out["tail"] = tail
+    return out
+
+
+def _init_vlm_layers(rng, cfg: ModelConfig) -> Params:
+    period = cfg.cross_attn_period
+    n_super = cfg.num_layers // (period + 1)
+    assert n_super * (period + 1) == cfg.num_layers, "vlm layers % (period+1) != 0"
+    ks = jax.random.split(rng, cfg.num_layers + n_super)
+    self_blocks = [
+        _init_block(ks[i], cfg) for i in range(n_super * period)
+    ]
+    stacked = stack_layers(self_blocks)
+    stacked = jax.tree.map(lambda x: x.reshape(n_super, period, *x.shape[1:]), stacked)
+    cross = stack_layers([
+        {
+            "norm": init_norm(cfg.d_model, cfg.norm, cfg.jnp_dtype),
+            "xattn": attn.init_cross_attention(
+                ks[n_super * period + i], cfg.d_model, cfg.num_heads, cfg.kv_heads,
+                cfg.resolved_head_dim, cfg.d_model, cfg.jnp_dtype,
+            ),
+            "norm_mlp": init_norm(cfg.d_model, cfg.norm, cfg.jnp_dtype),
+            "mlp": init_mlp(ks[n_super * period + i], cfg.d_model, cfg.d_ff, cfg.act, cfg.jnp_dtype),
+        }
+        for i in range(n_super)
+    ])
+    return {"super": stacked, "cross": cross}
+
+
+def init_lm(rng, cfg: ModelConfig) -> Params:
+    """Initializes the full parameter pytree for any supported family."""
+    k_emb, k_layers, k_head = jax.random.split(rng, 3)
+    params: Params = {"final_norm": init_norm(cfg.d_model, cfg.norm, cfg.jnp_dtype)}
+
+    V = cfg.padded_vocab  # padded so the vocab axis shards at any TP degree
+    if cfg.family == "audio":
+        for c in range(cfg.num_codebooks):
+            kc = jax.random.fold_in(k_emb, c)
+            params[f"embed_{c}"] = embed_init(kc, V, cfg.d_model, cfg.jnp_dtype)
+            params[f"head_{c}"] = dense_init(
+                jax.random.fold_in(k_head, c), cfg.d_model, V, cfg.jnp_dtype
+            )
+    else:
+        params["embed"] = embed_init(k_emb, V, cfg.d_model, cfg.jnp_dtype)
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(k_head, cfg.d_model, V, cfg.jnp_dtype)
+
+    if cfg.family == "ssm":
+        params["layers"] = _init_xlstm_layers(k_layers, cfg)
+    elif cfg.family == "hybrid":
+        params["layers"] = _init_zamba_layers(k_layers, cfg)
+    elif cfg.family == "vlm":
+        params["layers"] = _init_vlm_layers(k_layers, cfg)
+    else:  # dense | moe | audio
+        ks = jax.random.split(k_layers, cfg.num_layers)
+        params["layers"] = stack_layers([_init_block(k, cfg) for k in ks])
+    return params
+
+
+# ========================================================== forward ======
+
+
+CHUNKED_ATTN_THRESHOLD = 4096  # seqs >= this use flash-style chunked attention
+
+
+def _block_fwd(p: Params, x, cfg: ModelConfig, positions, *, window: int = 0):
+    """Dense/moe/audio block. Returns (x, aux)."""
+    s = x.shape[1]
+    if s >= CHUNKED_ATTN_THRESHOLD:
+        h = attn.chunked_self_attention(
+            p["attn"], apply_norm(p["norm_attn"], x, cfg.norm),
+            num_heads=cfg.num_heads, kv_heads=cfg.kv_heads,
+            head_dim=cfg.resolved_head_dim, positions=positions,
+            rope_theta=cfg.rope_theta, rope_partial=cfg.rope_2d, window=window,
+        )
+    else:
+        h = attn.self_attention(
+            p["attn"], apply_norm(p["norm_attn"], x, cfg.norm),
+            num_heads=cfg.num_heads, kv_heads=cfg.kv_heads,
+            head_dim=cfg.resolved_head_dim, positions=positions,
+            rope_theta=cfg.rope_theta, rope_partial=cfg.rope_2d, window=window,
+        )
+    x = x + h
+    x = maybe_shard(x, ("batch", "seq", "embed"))
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.moe:
+        if cfg.moe_impl == "shardmap":
+            from repro.models.moe import apply_moe_shardmap
+            y, aux = apply_moe_shardmap(
+                p["moe"], apply_norm(p["norm_mlp"], x, cfg.norm), cfg.moe, cfg.act
+            )
+        else:
+            y, aux = apply_moe(
+                p["moe"], apply_norm(p["norm_mlp"], x, cfg.norm), cfg.moe,
+                cfg.act, num_groups=cfg.moe_groups,
+            )
+        x = x + y
+    elif cfg.d_ff:
+        x = x + apply_mlp(p["mlp"], apply_norm(p["norm_mlp"], x, cfg.norm), cfg.act)
+    x = maybe_shard(x, ("batch", "seq", "embed"))
+    return x, aux
+
+
+def _scan_blocks(stacked: Params, x, cfg: ModelConfig, positions, *, remat=False):
+    def body(carry, layer_p):
+        h, aux = _block_fwd(layer_p, carry, cfg, positions)
+        return h, aux
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, auxs = jax.lax.scan(body, x, stacked)
+    return x, auxs.sum()
+
+
+def forward(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,                  # (b, s) or (b, K, s) for audio
+    *,
+    enc: Optional[jax.Array] = None,    # (b, t_img, d) vlm stub embeddings
+    remat: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward. Returns (logits, aux_loss)."""
+    if cfg.family == "audio":
+        x = sum(
+            params[f"embed_{c}"][tokens[:, c]] for c in range(cfg.num_codebooks)
+        )
+        b, s = tokens.shape[0], tokens.shape[-1]
+    else:
+        x = params["embed"][tokens]
+        b, s = tokens.shape
+    x = maybe_shard(x, ("batch", "seq", "embed"))
+    positions = jnp.arange(s)[None, :]
+    aux = jnp.zeros((), jnp.float32)
+
+    if cfg.family in ("dense", "moe", "audio"):
+        x, aux = _scan_blocks(params["layers"], x, cfg, positions, remat=remat)
+
+    elif cfg.family == "vlm":
+        assert enc is not None, "vlm needs image embeddings (stub frontend)"
+
+        def superblock(carry, ps):
+            self_p, cross_p = ps
+            h, a = _scan_blocks(self_p, carry, cfg, positions, remat=remat)
+            hn = apply_norm(cross_p["norm"], h, cfg.norm)
+            h = h + attn.cross_attention(
+                cross_p["xattn"], hn, enc, num_heads=cfg.num_heads,
+                kv_heads=cfg.kv_heads, head_dim=cfg.resolved_head_dim,
+            )
+            h = h + apply_mlp(cross_p["mlp"], apply_norm(cross_p["norm_mlp"], h, cfg.norm), cfg.act)
+            return h, a
+
+        if remat:
+            superblock = jax.checkpoint(superblock)
+        x, auxs = jax.lax.scan(
+            superblock, x, (params["layers"]["super"], params["layers"]["cross"])
+        )
+        aux = auxs.sum()
+
+    elif cfg.family == "ssm":
+        x = _xlstm_forward(params["layers"], x, cfg, remat=remat)
+
+    elif cfg.family == "hybrid":
+        x = _zamba_forward(params["layers"], x, cfg, positions, remat=remat)
+
+    else:
+        raise ValueError(f"unknown family {cfg.family}")
+
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    if cfg.family == "audio":
+        logits = jnp.stack(
+            [x @ params[f"head_{c}"] for c in range(cfg.num_codebooks)], axis=1
+        )  # (b, K, s, V)
+    else:
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = x @ head
+        logits = maybe_shard(logits, ("batch", "seq", "vocab"))
+    return logits, aux
+
+
+MLSTM_CHUNK_THRESHOLD = 256  # seqs >= this use the chunkwise-parallel mLSTM
+
+
+def _mlstm_apply(cell_p, x, num_heads):
+    """Chunkwise-parallel mLSTM for long sequences (O(chunk) BPTT memory,
+    MXU-friendly), exact sequential scan for short ones."""
+    if x.shape[1] >= MLSTM_CHUNK_THRESHOLD:
+        y, _ = xlstm.mlstm_chunked(cell_p, x, num_heads)
+    else:
+        y, _ = xlstm.mlstm_scan(cell_p, x, num_heads)
+    return y
+
+
+def _xlstm_forward(layers: Params, x, cfg: ModelConfig, *, remat: bool = False):
+    """Alternating sLSTM / mLSTM blocks: sLSTM at i % slstm_every == 0."""
+    period = cfg.slstm_every or cfg.num_layers + 1
+    n_s = layers["slstm"]["norm"]["scale"].shape[0] if "slstm" in layers else 0
+    n_m_per = period - 1
+
+    m_stacked = layers["mlstm"]
+    if n_s:
+        m_stacked = jax.tree.map(
+            lambda a: a.reshape(n_s, n_m_per, *a.shape[1:]), m_stacked
+        )
+
+        def superblock(carry, ps):
+            s_p, m_p = ps
+            h, _ = xlstm.slstm_scan(
+                s_p["cell"], apply_norm(s_p["norm"], carry, cfg.norm), cfg.num_heads
+            )
+            carry = carry + h
+
+            def mbody(c, mp):
+                y = _mlstm_apply(
+                    mp["cell"], apply_norm(mp["norm"], c, cfg.norm), cfg.num_heads
+                )
+                return c + y, None
+
+            carry, _ = jax.lax.scan(mbody, carry, m_p)
+            return carry, None
+
+        if remat:
+            superblock = jax.checkpoint(superblock)
+        x, _ = jax.lax.scan(superblock, x, (layers["slstm"], m_stacked))
+    else:
+        def mbody(c, mp):
+            y = _mlstm_apply(
+                mp["cell"], apply_norm(mp["norm"], c, cfg.norm), cfg.num_heads
+            )
+            return c + y, None
+
+        if remat:
+            mbody = jax.checkpoint(mbody)
+        x, _ = jax.lax.scan(mbody, x, m_stacked)
+    return x
+
+
+def _zamba_forward(
+    layers: Params, x, cfg: ModelConfig, positions, *, window: int = 0,
+    remat: bool = False,
+):
+    """Mamba2 backbone with ONE shared attention block every period layers."""
+    shared = layers["shared_attn"]
+
+    def mamba_block(c, mp):
+        y = mamba2.apply_mamba2(
+            mp["mamba"], apply_norm(mp["norm"], c, cfg.norm), ssm_state=cfg.ssm_state
+        )
+        return c + y, None
+
+    s = x.shape[1]
+    # long sequences: windowed + chunked shared attention (sub-quadratic)
+    if s >= CHUNKED_ATTN_THRESHOLD:
+        window = window or 4096
+        attn_fn = functools.partial(attn.chunked_self_attention, window=window)
+    else:
+        attn_fn = functools.partial(attn.self_attention, window=window)
+
+    def superblock(carry, ps):
+        h, _ = jax.lax.scan(mamba_block, carry, ps)
+        # shared attention (same params every application)
+        a = attn_fn(
+            shared["attn"], apply_norm(shared["norm"], h, cfg.norm),
+            num_heads=cfg.num_heads, kv_heads=cfg.kv_heads,
+            head_dim=cfg.resolved_head_dim, positions=positions,
+            rope_theta=cfg.rope_theta,
+        )
+        return h + a, None
+
+    if remat:
+        superblock = jax.checkpoint(superblock)
+    x, _ = jax.lax.scan(superblock, x, layers["super"])
+    if "tail" in layers:
+        x, _ = jax.lax.scan(mamba_block, x, layers["tail"])
+    return x
+
+
+# ============================================================= loss ======
+
+
+def lm_loss(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    labels: jax.Array,
+    *,
+    enc: Optional[jax.Array] = None,
+    remat: bool = False,
+    aux_weight: float = 0.01,
+) -> jax.Array:
+    logits, aux = forward(params, cfg, tokens, enc=enc, remat=remat)
+    logits = logits.astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab_size:
+        # mask the padded vocab tail out of the softmax normalizer
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, -1e30, logits)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1).mean()
+    return nll + aux_weight * aux

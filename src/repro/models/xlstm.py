@@ -1,0 +1,255 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) and sLSTM.
+
+mLSTM: per-head matrix memory ``C ∈ R^{d×d}`` with exponential input gate
+and forget gate, stabilized by the running max ``m`` (log-space gating).
+Implemented as a ``lax.scan`` over time carrying ``(C, n, m)``; O(1)-state
+decode falls out of the same step function — this is what makes
+xlstm-125m eligible for the 500 k-token cell.
+
+sLSTM: scalar-memory LSTM with exponential gating and per-head recurrent
+weights, also a time scan carrying ``(c, n, h, m)``.
+
+xlstm-125m alternates: layer i is sLSTM when ``(i % slstm_every) == 0``
+(when slstm_every > 0), else mLSTM; both are preceded by RMSNorm and wrap
+a residual.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, dense_init
+
+
+# ------------------------------------------------------------- mLSTM ----
+
+def init_mlstm(rng, d_model: int, num_heads: int, dtype) -> Params:
+    hd = d_model // num_heads
+    kq, kk, kv, ko, kg = jax.random.split(rng, 5)
+    return {
+        "wq": dense_init(kq, d_model, d_model, dtype),
+        "wk": dense_init(kk, d_model, d_model, dtype),
+        "wv": dense_init(kv, d_model, d_model, dtype),
+        "wo": dense_init(ko, d_model, d_model, dtype, scale=0.5),
+        # input & forget gate projections (scalar per head, f32 for stability)
+        "wif": dense_init(kg, d_model, 2 * num_heads, jnp.float32),
+        "b_i": jnp.zeros((num_heads,), jnp.float32),
+        "b_f": jnp.full((num_heads,), 3.0, jnp.float32),  # forget-bias init
+    }
+
+
+def mlstm_scan(
+    p: Params,
+    x: jax.Array,          # (b, s, d_model)
+    num_heads: int,
+    *,
+    init_state: tuple | None = None,
+) -> Tuple[jax.Array, tuple]:
+    """Returns (y (b,s,d), (C, n, m) final state)."""
+    b, s, d = x.shape
+    hd = d // num_heads
+    scale = 1.0 / math.sqrt(hd)
+
+    q = (x @ p["wq"]).reshape(b, s, num_heads, hd)
+    k = (x @ p["wk"]).reshape(b, s, num_heads, hd) * scale
+    v = (x @ p["wv"]).reshape(b, s, num_heads, hd)
+    gates = (x.astype(jnp.float32) @ p["wif"]).reshape(b, s, 2, num_heads)
+    log_i = gates[:, :, 0] + p["b_i"]          # (b, s, H) pre-activation
+    log_f = jax.nn.log_sigmoid(gates[:, :, 1] + p["b_f"])
+
+    if init_state is None:
+        C0 = jnp.zeros((b, num_heads, hd, hd), jnp.float32)
+        n0 = jnp.zeros((b, num_heads, hd), jnp.float32)
+        m0 = jnp.full((b, num_heads), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = init_state
+
+    def step(carry, inp):
+        C, n, m = carry
+        qt, kt, vt, li, lf = inp  # (b,H,hd), (b,H,hd), (b,H,hd), (b,H), (b,H)
+        m_new = jnp.maximum(lf + m, li)
+        f_eff = jnp.exp(lf + m - m_new)[..., None]
+        i_eff = jnp.exp(li - m_new)[..., None]
+        C = C * f_eff[..., None] + i_eff[..., None] * (
+            kt.astype(jnp.float32)[..., :, None] * vt.astype(jnp.float32)[..., None, :]
+        )
+        n = n * f_eff + i_eff * kt.astype(jnp.float32)
+        num = jnp.einsum("bhd,bhde->bhe", qt.astype(jnp.float32), C)
+        den = jnp.abs(jnp.einsum("bhd,bhd->bh", qt.astype(jnp.float32), n))
+        h = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+        return (C, n, m_new), h.astype(x.dtype)
+
+    inputs = (
+        q.transpose(1, 0, 2, 3),
+        k.transpose(1, 0, 2, 3),
+        v.transpose(1, 0, 2, 3),
+        log_i.transpose(1, 0, 2),
+        log_f.transpose(1, 0, 2),
+    )
+    state, hs = jax.lax.scan(step, (C0, n0, m0), inputs)
+    y = hs.transpose(1, 0, 2, 3).reshape(b, s, d)
+    return y @ p["wo"], state
+
+
+def mlstm_chunked(
+    p: Params,
+    x: jax.Array,          # (b, s, d_model)
+    num_heads: int,
+    *,
+    chunk: int = 256,
+) -> Tuple[jax.Array, tuple]:
+    """Chunkwise-parallel mLSTM — numerically identical to
+    :func:`mlstm_scan` but O(s/chunk) sequential steps and O(chunk²)
+    MXU-friendly intra-chunk work (the linear-attention duality).
+
+    Log-space bookkeeping: with F_t = Σ lf (cumulative log forget) and
+    g_t = li_t − F_t, the stabilizer is m_t = F_t + G_t, G_t = max g_{≤t};
+    the carried matrix memory is C̃ = Σ exp(g − M) k vᵀ with M the carried
+    max.  BPTT memory is per-chunk boundaries, not per-step — this is the
+    memory-term fix recorded in EXPERIMENTS.md §Perf.
+    """
+    b, s, d = x.shape
+    hd = d // num_heads
+    scale = 1.0 / math.sqrt(hd)
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    sp = s + pad
+    nc = sp // chunk
+
+    q = (x @ p["wq"]).reshape(b, sp, num_heads, hd).astype(jnp.float32)
+    k = (x @ p["wk"]).reshape(b, sp, num_heads, hd).astype(jnp.float32) * scale
+    v = (x @ p["wv"]).reshape(b, sp, num_heads, hd).astype(jnp.float32)
+    gates = (x.astype(jnp.float32) @ p["wif"]).reshape(b, sp, 2, num_heads)
+    log_i = gates[:, :, 0] + p["b_i"]                   # (b, sp, H)
+    log_f = jax.nn.log_sigmoid(gates[:, :, 1] + p["b_f"])
+    if pad:
+        # padded steps: forget-gate 0 in log space, input gate -inf
+        padmask = jnp.arange(sp) >= s
+        log_i = jnp.where(padmask[None, :, None], -1e30, log_i)
+        log_f = jnp.where(padmask[None, :, None], 0.0, log_f)
+
+    cs = lambda a: a.reshape(b, nc, chunk, *a.shape[2:]).transpose(1, 0, 2, *range(3, a.ndim + 1))
+    qc, kc, vc = cs(q), cs(k), cs(v)
+    lic, lfc = cs(log_i), cs(log_f)
+
+    def chunk_step(carry, inp):
+        C, n, M, F = carry       # C:(b,H,hd,hd) n:(b,H,hd) M,F:(b,H)
+        q_blk, k_blk, v_blk, li, lf = inp
+        Floc = jnp.cumsum(lf, axis=1)                   # (b, t, H)
+        Fg = F[:, None, :] + Floc                       # global F at each t
+        g = li - Fg                                     # (b, t, H)
+        Gloc = jax.lax.cummax(g, axis=1)
+        G = jnp.maximum(M[:, None, :], Gloc)            # (b, t, H) running max
+        # intra-chunk scores: w[t, t'] = exp(g_t' - G_t), causal
+        wlog = g[:, None, :, :] - G[:, :, None, :]      # (b, t, t', H)
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))[None, :, :, None]
+        w = jnp.exp(jnp.where(causal, wlog, -1e30))
+        # inter-chunk: exp(M - G_t)
+        inter = jnp.exp(M[:, None, :] - G)              # (b, t, H)
+        qk = jnp.einsum("bthd,buhd->btuh", q_blk, k_blk)    # (b, t, t', H)
+        scores = w * qk
+        num = (
+            jnp.einsum("bthd,bhde->bthe", q_blk, C) * inter[..., None]
+            + jnp.einsum("btuh,buhe->bthe", scores, v_blk)
+        )
+        den_vec = (
+            jnp.einsum("bthd,bhd->bth", q_blk, n) * inter
+            + scores.sum(axis=2)
+        )
+        m_t = Fg + G
+        h = num / jnp.maximum(jnp.abs(den_vec), jnp.exp(-m_t))[..., None]
+        # end-of-chunk state update
+        M_new = G[:, -1]                                # (b, H)
+        decay = jnp.exp(M - M_new)
+        wk = jnp.exp(g - M_new[:, None, :])             # (b, t, H)
+        C_new = C * decay[..., None, None] + jnp.einsum(
+            "bth,bthd,bthe->bhde", wk, k_blk, v_blk
+        )
+        n_new = n * decay[..., None] + jnp.einsum("bth,bthd->bhd", wk, k_blk)
+        F_new = F + Floc[:, -1]
+        return (C_new, n_new, M_new, F_new), h
+
+    C0 = jnp.zeros((b, num_heads, hd, hd), jnp.float32)
+    n0 = jnp.zeros((b, num_heads, hd), jnp.float32)
+    M0 = jnp.full((b, num_heads), -1e30, jnp.float32)
+    F0 = jnp.zeros((b, num_heads), jnp.float32)
+    (C, n, M, F), hs = jax.lax.scan(chunk_step, (C0, n0, M0, F0), (qc, kc, vc, lic, lfc))
+    y = hs.transpose(1, 0, 2, 3, 4).reshape(b, sp, d)[:, :s].astype(x.dtype)
+    # sequential-compatible final state: m = F_end + M_end
+    return y @ p["wo"], (C, n, F + M)
+
+
+def mlstm_decode_step(p: Params, x: jax.Array, state: tuple, num_heads: int):
+    """One-token step. x: (b, 1, d). Returns (y (b,1,d), new_state)."""
+    y, new_state = mlstm_scan(p, x, num_heads, init_state=state)
+    return y, new_state
+
+
+# ------------------------------------------------------------- sLSTM ----
+
+def init_slstm(rng, d_model: int, num_heads: int, dtype) -> Params:
+    hd = d_model // num_heads
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        # input projections for [z, i, f, o]
+        "w_in": dense_init(k1, d_model, 4 * d_model, dtype),
+        # block-diagonal recurrent weights per head: (H, hd, 4*hd)
+        "w_rec": (jax.random.truncated_normal(k2, -3, 3, (num_heads, hd, 4 * hd))
+                  * (1.0 / math.sqrt(hd))).astype(jnp.float32),
+        "bias": jnp.concatenate([
+            jnp.zeros((2 * d_model,), jnp.float32),
+            jnp.full((d_model,), 3.0, jnp.float32),   # forget bias
+            jnp.zeros((d_model,), jnp.float32),
+        ]),
+        "wo": dense_init(k3, d_model, d_model, dtype, scale=0.5),
+    }
+
+
+def slstm_scan(
+    p: Params,
+    x: jax.Array,
+    num_heads: int,
+    *,
+    init_state: tuple | None = None,
+) -> Tuple[jax.Array, tuple]:
+    b, s, d = x.shape
+    hd = d // num_heads
+    xin = (x @ p["w_in"]).astype(jnp.float32)  # (b, s, 4d)
+
+    if init_state is None:
+        c0 = jnp.zeros((b, d), jnp.float32)
+        n0 = jnp.ones((b, d), jnp.float32)
+        h0 = jnp.zeros((b, d), jnp.float32)
+        m0 = jnp.zeros((b, d), jnp.float32)
+    else:
+        c0, n0, h0, m0 = init_state
+
+    def step(carry, xt):
+        c, n, h, m = carry
+        hh = h.reshape(b, num_heads, hd)
+        rec = jnp.einsum("bhd,hde->bhe", hh, p["w_rec"]).reshape(b, 4 * d)
+        za, ia, fa, oa = jnp.split(xt + rec + p["bias"], 4, axis=-1)
+        z = jnp.tanh(za)
+        o = jax.nn.sigmoid(oa)
+        lf = jax.nn.log_sigmoid(fa)
+        m_new = jnp.maximum(lf + m, ia)
+        i_eff = jnp.exp(ia - m_new)
+        f_eff = jnp.exp(lf + m - m_new)
+        c = f_eff * c + i_eff * z
+        n = f_eff * n + i_eff
+        h = o * (c / jnp.maximum(n, 1e-6))
+        return (c, n, h, m_new), h
+
+    state, hs = jax.lax.scan(step, (c0, n0, h0, m0), xin.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2).astype(x.dtype)
+    return y @ p["wo"], state
+
+
+def slstm_decode_step(p: Params, x: jax.Array, state: tuple, num_heads: int):
+    y, new_state = slstm_scan(p, x, num_heads, init_state=state)
+    return y, new_state

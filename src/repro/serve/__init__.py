@@ -1,0 +1,5 @@
+from repro.serve.decode import decode_step
+from repro.serve.kvcache import cache_bytes, init_cache
+from repro.serve.batching import RequestBatcher, ServeMetrics
+
+__all__ = ["decode_step", "init_cache", "cache_bytes", "RequestBatcher", "ServeMetrics"]

@@ -1,0 +1,349 @@
+"""serve_step: one-token decode for every family, cache-carrying.
+
+``decode_step(params, cfg, tokens, cache, enc=None)`` consumes the newest
+token(s) and returns (logits, cache').  Layer stacks are scanned with the
+per-layer cache rows as scan inputs/outputs, so decode lowers to one block
+body like the forward pass.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import maybe_shard
+from repro.models import attention as attn
+from repro.models import mamba2, xlstm
+from repro.models.layers import apply_mlp, apply_norm
+from repro.models.moe import apply_moe
+
+
+def _attn_block_decode(p, x, kc, vc, length, cfg: ModelConfig):
+    h, kc, vc = attn.decode_attention(
+        p["attn"], apply_norm(p["norm_attn"], x, cfg.norm), kc, vc, length,
+        num_heads=cfg.num_heads, kv_heads=cfg.kv_heads,
+        head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+        rope_partial=cfg.rope_2d,
+    )
+    x = x + h
+    x = _block_ffn(p, x, cfg)
+    return x, kc, vc
+
+
+def _block_ffn(p, x, cfg: ModelConfig):
+    if cfg.moe:
+        y, _ = apply_moe(p["moe"], apply_norm(p["norm_mlp"], x, cfg.norm), cfg.moe, cfg.act)
+        x = x + y
+    elif cfg.d_ff:
+        x = x + apply_mlp(p["mlp"], apply_norm(p["norm_mlp"], x, cfg.norm), cfg.act)
+    return x
+
+
+def _attn_block_decode_readonly(p, x, kc, vc, length, cfg: ModelConfig, kv_scale=None):
+    """Read-only cache variant: returns (x, k_new, v_new) — cache writes are
+    batched outside the layer scan (decode memory optimization, §Perf)."""
+    h, k_new, v_new = attn.decode_attention_readonly(
+        p["attn"], apply_norm(p["norm_attn"], x, cfg.norm), kc, vc, length,
+        num_heads=cfg.num_heads, kv_heads=cfg.kv_heads,
+        head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+        rope_partial=cfg.rope_2d, kv_scale=kv_scale,
+    )
+    x = x + h
+    x = _block_ffn(p, x, cfg)
+    return x, k_new, v_new
+
+
+def decode_step(
+    params: Dict[str, Any],
+    cfg: ModelConfig,
+    tokens: jax.Array,                  # (b, 1) or (b, K, 1) audio
+    cache: Dict[str, Any],
+    *,
+    enc: Optional[jax.Array] = None,
+    readonly_cache: bool = True,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    if cfg.family in ("dense", "moe", "audio"):
+        if readonly_cache:
+            return _decode_attn_family_readonly(params, cfg, tokens, cache)
+        return _decode_attn_family(params, cfg, tokens, cache)
+    if cfg.family == "vlm":
+        return _decode_vlm(params, cfg, tokens, cache, enc)
+    if cfg.family == "ssm":
+        return _decode_xlstm(params, cfg, tokens, cache)
+    if cfg.family == "hybrid":
+        return _decode_zamba(params, cfg, tokens, cache)
+    raise ValueError(cfg.family)
+
+
+def _embed_tokens(params, cfg: ModelConfig, tokens):
+    if cfg.family == "audio":
+        return sum(
+            params[f"embed_{c}"][tokens[:, c]] for c in range(cfg.num_codebooks)
+        )
+    return params["embed"][tokens]
+
+
+def _project_logits(params, cfg: ModelConfig, x):
+    if cfg.family == "audio":
+        return jnp.stack(
+            [x @ params[f"head_{c}"] for c in range(cfg.num_codebooks)], axis=1
+        )
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ head
+
+
+def _decode_attn_family_readonly(params, cfg, tokens, cache):
+    """Layer scan reads caches; all layers' new K/V are written in ONE
+    dynamic_update_slice after the scan (in-place with donation).  Supports
+    int8-quantized caches (keys k_scale/v_scale present)."""
+    x = _embed_tokens(params, cfg, tokens)          # (b, 1, d)
+    length = cache["len"]
+    quant = "k_scale" in cache
+
+    def body(carry, xs):
+        if quant:
+            layer_p, kc, vc, ks, vs = xs
+            h, k_new, v_new = _attn_block_decode_readonly(
+                layer_p, carry, kc, vc, length, cfg, kv_scale=(ks, vs)
+            )
+        else:
+            layer_p, kc, vc = xs
+            h, k_new, v_new = _attn_block_decode_readonly(
+                layer_p, carry, kc, vc, length, cfg
+            )
+        return h, (k_new, v_new)
+
+    xs = (params["layers"], cache["k"], cache["v"])
+    if quant:
+        xs = xs + (cache["k_scale"], cache["v_scale"])
+    x, (k_new, v_new) = jax.lax.scan(body, x, xs)   # k_new: (L, b, 1, kvh, hd)
+
+    if quant:
+        ks_new = jnp.max(jnp.abs(k_new), axis=-1) / 127.0 + 1e-8   # (L,b,1,kvh)
+        vs_new = jnp.max(jnp.abs(v_new), axis=-1) / 127.0 + 1e-8
+        kq = jnp.round(k_new.astype(jnp.float32) / ks_new[..., None]).astype(jnp.int8)
+        vq = jnp.round(v_new.astype(jnp.float32) / vs_new[..., None]).astype(jnp.int8)
+        new_cache = {
+            "k": jax.lax.dynamic_update_slice(cache["k"], kq, (0, 0, length, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(cache["v"], vq, (0, 0, length, 0, 0)),
+            "k_scale": jax.lax.dynamic_update_slice(
+                cache["k_scale"], ks_new.astype(cache["k_scale"].dtype),
+                (0, 0, length, 0)),
+            "v_scale": jax.lax.dynamic_update_slice(
+                cache["v_scale"], vs_new.astype(cache["v_scale"].dtype),
+                (0, 0, length, 0)),
+            "len": length + 1,
+        }
+    else:
+        new_cache = {
+            "k": jax.lax.dynamic_update_slice(
+                cache["k"], k_new.astype(cache["k"].dtype), (0, 0, length, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(
+                cache["v"], v_new.astype(cache["v"].dtype), (0, 0, length, 0, 0)),
+            "len": length + 1,
+        }
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = _project_logits(params, cfg, x)
+    return logits, new_cache
+
+
+def _decode_attn_family(params, cfg, tokens, cache):
+    x = _embed_tokens(params, cfg, tokens)          # (b, 1, d)
+    length = cache["len"]
+
+    def body(carry, xs):
+        layer_p, kc, vc = xs
+        h, kc, vc = _attn_block_decode(layer_p, carry, kc, vc, length, cfg)
+        return h, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = _project_logits(params, cfg, x)
+    return logits, {"k": ks, "v": vs, "len": length + 1}
+
+
+def _decode_vlm(params, cfg, tokens, cache, enc):
+    assert enc is not None
+    x = params["embed"][tokens]
+    length = cache["len"]
+    period = cfg.cross_attn_period
+    n_super = cfg.num_layers // (period + 1)
+    # self-attn caches reshaped per superblock
+    k5 = cache["k"].reshape(n_super, period, *cache["k"].shape[1:])
+    v5 = cache["v"].reshape(n_super, period, *cache["v"].shape[1:])
+
+    def superblock(carry, xs):
+        self_p, cross_p, kc, vc = xs
+
+        def body(c, inner):
+            lp, k1, v1 = inner
+            h, k1, v1 = _attn_block_decode(lp, c, k1, v1, length, cfg)
+            return h, (k1, v1)
+
+        h, (kc, vc) = jax.lax.scan(body, carry, (self_p, kc, vc))
+        hn = apply_norm(cross_p["norm"], h, cfg.norm)
+        h = h + attn.cross_attention(
+            cross_p["xattn"], hn, enc, num_heads=cfg.num_heads,
+            kv_heads=cfg.kv_heads, head_dim=cfg.resolved_head_dim,
+        )
+        h = h + apply_mlp(cross_p["mlp"], apply_norm(cross_p["norm_mlp"], h, cfg.norm), cfg.act)
+        return h, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(
+        superblock, x,
+        (params["layers"]["super"], params["layers"]["cross"], k5, v5),
+    )
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = _project_logits(params, cfg, x)
+    new_cache = {
+        "k": ks.reshape(cache["k"].shape),
+        "v": vs.reshape(cache["v"].shape),
+        "len": length + 1,
+    }
+    return logits, new_cache
+
+
+def _decode_xlstm(params, cfg, tokens, cache):
+    x = params["embed"][tokens]
+    layers = params["layers"]
+    period = cfg.slstm_every or (cfg.num_layers + 1)
+    n_s = cache["s_c"].shape[0]
+    n_m_per = period - 1
+
+    if n_s:
+        m_view = lambda a: a.reshape(n_s, n_m_per, *a.shape[1:])
+        ml = jax.tree.map(m_view, layers["mlstm"])
+        mC = m_view(cache["m_C"]); mn = m_view(cache["m_n"]); mm = m_view(cache["m_m"])
+
+        def superblock(carry, xs):
+            s_p, m_p, sc, sn, sh, sm, C, n, m = xs
+            y, (sc, sn, sh, sm) = xlstm.slstm_scan(
+                s_p["cell"], apply_norm(s_p["norm"], carry, cfg.norm),
+                cfg.num_heads, init_state=(sc, sn, sh, sm),
+            )
+            carry = carry + y
+
+            def mbody(c, inner):
+                mp, C1, n1, m1 = inner
+                y1, (C1, n1, m1) = xlstm.mlstm_scan(
+                    mp["cell"], apply_norm(mp["norm"], c, cfg.norm),
+                    cfg.num_heads, init_state=(C1, n1, m1),
+                )
+                return c + y1, (C1, n1, m1)
+
+            carry, (C, n, m) = jax.lax.scan(mbody, carry, (m_p, C, n, m))
+            return carry, (sc, sn, sh, sm, C, n, m)
+
+        x, (sc, sn, sh, sm, C, n, m) = jax.lax.scan(
+            superblock, x,
+            (layers["slstm"], ml, cache["s_c"], cache["s_n"], cache["s_h"],
+             cache["s_m"], mC, mn, mm),
+        )
+        new_cache = {
+            "m_C": C.reshape(cache["m_C"].shape),
+            "m_n": n.reshape(cache["m_n"].shape),
+            "m_m": m.reshape(cache["m_m"].shape),
+            "s_c": sc, "s_n": sn, "s_h": sh, "s_m": sm,
+            "len": cache["len"] + 1,
+        }
+    else:
+        def mbody(c, inner):
+            mp, C1, n1, m1 = inner
+            y1, (C1, n1, m1) = xlstm.mlstm_scan(
+                mp["cell"], apply_norm(mp["norm"], c, cfg.norm),
+                cfg.num_heads, init_state=(C1, n1, m1),
+            )
+            return c + y1, (C1, n1, m1)
+
+        x, (C, n, m) = jax.lax.scan(
+            mbody, x, (layers["mlstm"], cache["m_C"], cache["m_n"], cache["m_m"])
+        )
+        new_cache = dict(cache, m_C=C, m_n=n, m_m=m, len=cache["len"] + 1)
+
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    return _project_logits(params, cfg, x), new_cache
+
+
+def _decode_zamba(params, cfg, tokens, cache):
+    x = params["embed"][tokens]
+    layers = params["layers"]
+    length = cache["len"]
+    period = cfg.shared_attn_period
+    n_super = layers["super"]["norm"]["scale"].shape[0]
+
+    mamba_st = cache["mamba"]
+    h5 = mamba_st["h"].reshape(n_super, period, *mamba_st["h"].shape[1:])
+    c5 = mamba_st["conv"].reshape(n_super, period, *mamba_st["conv"].shape[1:])
+
+    ring = cache["shared"]
+    shared_p = params["layers"]["shared_attn"]
+
+    def mamba_block(c, inner):
+        mp, h1, cv1 = inner
+        y, h1, cv1 = mamba2.mamba2_decode_step(
+            mp["mamba"], apply_norm(mp["norm"], c, cfg.norm), h1, cv1,
+            ssm_state=cfg.ssm_state,
+        )
+        return c + y, (h1, cv1)
+
+    def superblock(x_in, xs):
+        mp, hs, cvs, rk, rv, rp = xs
+        h, (hs, cvs) = jax.lax.scan(mamba_block, x_in, (mp, hs, cvs))
+        h, rk, rv, rp = _ring_attention_at(
+            shared_p, h, rk, rv, rp, length, cfg
+        )
+        return h, (hs, cvs, rk, rv, rp)
+
+    x, (hs, cvs, rk, rv, rp) = jax.lax.scan(
+        superblock, x,
+        (layers["super"], h5, c5, ring["k"], ring["v"], ring["pos"]),
+    )
+    new_mamba = {
+        "h": hs.reshape(mamba_st["h"].shape),
+        "conv": cvs.reshape(mamba_st["conv"].shape),
+    }
+    tail_st = cache["tail"]
+    if "tail" in layers:
+        x, (th, tc) = jax.lax.scan(
+            mamba_block, x, (layers["tail"], tail_st["h"], tail_st["conv"])
+        )
+        tail_st = {"h": th, "conv": tc}
+
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = _project_logits(params, cfg, x)
+    new_cache = {
+        "mamba": new_mamba,
+        "tail": tail_st,
+        "shared": {"k": rk, "v": rv, "pos": rp, "len": ring["len"] + 1},
+        "len": length + 1,
+    }
+    return logits, new_cache
+
+
+def _ring_attention_at(p, x, kc, vc, pc, length, cfg: ModelConfig):
+    """Ring-buffer shared attention for one (scanned) layer instance."""
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    W = kc.shape[1]
+    pos = jnp.full((b, 1), length, jnp.int32)
+    xn = apply_norm(p["norm"], x, cfg.norm)
+    q, k, v = attn._project(p["attn"], xn, cfg.num_heads, cfg.kv_heads, hd)
+    from repro.models.rope import apply_rope
+
+    q = apply_rope(q, pos, theta=cfg.rope_theta)
+    k = apply_rope(k, pos, theta=cfg.rope_theta)
+
+    slot = length % W
+    kc = jax.lax.dynamic_update_slice(kc, k, (0, slot, 0, 0))
+    vc = jax.lax.dynamic_update_slice(vc, v, (0, slot, 0, 0))
+    pc = jax.lax.dynamic_update_slice(pc, jnp.full((b, 1), length, jnp.int32), (0, slot))
+    scores = attn._gqa_scores(q, kc).astype(jnp.float32) / math.sqrt(hd)
+    valid = (pc >= 0) & (pc <= length)
+    scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = attn._gqa_out(w, vc) @ p["attn"]["wo"]
+    return x + out, kc, vc, pc

@@ -1,0 +1,18 @@
+from repro.train.optimizer import (
+    AdamW,
+    Adafactor,
+    clip_by_global_norm,
+    cosine_schedule,
+    make_optimizer,
+    make_schedule,
+    wsd_schedule,
+)
+from repro.train.loop import TrainState, init_train_state, make_eval_step, make_train_step
+from repro.train import checkpoint, compression, fault_tolerance
+
+__all__ = [
+    "AdamW", "Adafactor", "clip_by_global_norm", "cosine_schedule",
+    "make_optimizer", "make_schedule", "wsd_schedule",
+    "TrainState", "init_train_state", "make_eval_step", "make_train_step",
+    "checkpoint", "compression", "fault_tolerance",
+]

@@ -1,0 +1,69 @@
+"""Error-feedback gradient compression for the slow (cross-pod) axis.
+
+At multi-pod scale the data-center interconnect between pods is an order
+of magnitude slower than intra-pod ICI, so cross-pod gradient all-reduce
+gets compressed: int8 quantization with per-leaf scale and *error
+feedback* (the quantization residual is added back into the next step's
+gradient), which keeps SGD convergence unbiased in practice.
+
+The compressor is a pure function pair so it drops into the pjit'd train
+step: ``compress`` before the pod-axis psum, ``decompress`` after;
+the error-feedback buffer rides in the train state.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressionState(NamedTuple):
+    error: Any   # residual pytree, same structure as grads (f32)
+
+
+def init_compression(grads_like) -> CompressionState:
+    return CompressionState(
+        error=jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)
+    )
+
+
+def compress(grads, state: CompressionState) -> Tuple[Any, Any, CompressionState]:
+    """Returns (int8 payload, scales, new_state). Residual goes to state."""
+
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        scale = jnp.max(jnp.abs(gf)) / 127.0 + 1e-12
+        q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        err = gf - q.astype(jnp.float32) * scale
+        return q, scale, err
+
+    qs, scales, errs = [], [], []
+    flat, tree = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(state.error)
+    for g, e in zip(flat, flat_e):
+        q, s, err = one(g, e)
+        qs.append(q)
+        scales.append(s)
+        errs.append(err)
+    return (
+        tree.unflatten(qs),
+        tree.unflatten(scales),
+        CompressionState(error=tree.unflatten(errs)),
+    )
+
+
+def decompress(payload, scales):
+    return jax.tree.map(
+        lambda q, s: q.astype(jnp.float32) * s, payload, scales
+    )
+
+
+def compressed_bytes(grads) -> int:
+    """Bytes on the wire after compression (for the roofline's pod axis)."""
+    return sum(g.size for g in jax.tree.leaves(grads))  # int8: 1 B/elem
+
+
+def raw_bytes(grads) -> int:
+    return sum(g.size * g.dtype.itemsize for g in jax.tree.leaves(grads))

@@ -1,0 +1,103 @@
+"""Train-step builders: value_and_grad + optimizer + microbatching.
+
+``make_train_step`` returns the pure function the launcher pjits.  The
+global batch is optionally split into microbatches accumulated with
+``lax.scan`` (grad accumulation) — the standard memory lever when the
+per-device activation footprint of train_4k exceeds HBM; remat of layer
+bodies is the second lever (forwarded into the model).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import lm_loss
+from repro.train.optimizer import AdamW, Adafactor
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jax.Array
+
+
+def init_train_state(params, optimizer) -> TrainState:
+    return TrainState(
+        params=params,
+        opt_state=optimizer.init(params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    optimizer,
+    *,
+    remat: bool = False,
+    microbatches: int = 1,
+    has_enc: bool = False,
+    accum_dtype=jnp.float32,
+) -> Callable:
+    """Builds train_step(state, batch) -> (state, metrics).
+
+    batch = {"tokens": ..., "labels": ...[, "enc": ...]}; the leading batch
+    dim must be divisible by ``microbatches``.
+    """
+
+    def loss_fn(params, tokens, labels, enc):
+        return lm_loss(params, cfg, tokens, labels, enc=enc, remat=remat)
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, dict]:
+        tokens, labels = batch["tokens"], batch["labels"]
+        enc = batch.get("enc") if has_enc else None
+
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(state.params, tokens, labels, enc)
+        else:
+            def split(x):
+                return x.reshape(microbatches, x.shape[0] // microbatches, *x.shape[1:])
+
+            mb = jax.tree.map(split, {"tokens": tokens, "labels": labels})
+            enc_mb = split(enc) if enc is not None else None
+
+            def acc(carry, idx_mb):
+                loss_acc, grads_acc = carry
+                tk, lb = idx_mb["tokens"], idx_mb["labels"]
+                ec = idx_mb.get("enc")
+                l, g = jax.value_and_grad(loss_fn)(state.params, tk, lb, ec)
+                return (
+                    loss_acc + l / microbatches,
+                    jax.tree.map(
+                        lambda a, b: a + (b / microbatches).astype(a.dtype),
+                        grads_acc, g,
+                    ),
+                ), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype), state.params)
+            xs = dict(mb)
+            if enc_mb is not None:
+                xs["enc"] = enc_mb
+            (loss, grads), _ = jax.lax.scan(acc, (jnp.zeros((), jnp.float32), zeros), xs)
+
+        new_params, new_opt = optimizer.update(grads, state.opt_state, state.params)
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads)
+        ))
+        metrics = {"loss": loss.astype(jnp.float32), "grad_norm": gnorm}
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, *, has_enc: bool = False) -> Callable:
+    def eval_step(params, batch):
+        enc = batch.get("enc") if has_enc else None
+        return lm_loss(params, cfg, batch["tokens"], batch["labels"], enc=enc)
+
+    return eval_step

@@ -1,0 +1,198 @@
+"""Optimizers and LR schedules (no optax dependency — built on jax.tree).
+
+* AdamW — fp32 moments, decoupled weight decay, global-norm clipping.
+* Adafactor — factored second moment (PaLM-style), the default for ≥100 B
+  configs so optimizer bytes/chip stay inside HBM (DESIGN.md §5).
+* Schedules: cosine and WSD (warmup-stable-decay, MiniCPM's schedule).
+
+Optimizer states are created with the same structure as params, so the
+FSDP/ZeRO sharding rules in dist/sharding.py apply to them verbatim (the
+launcher shards moments over the data axis).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ------------------------------------------------------------ schedules --
+
+def cosine_schedule(base_lr: float, warmup: int, total: int) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def wsd_schedule(base_lr: float, warmup: int, stable: int, total: int) -> Callable:
+    """Warmup-Stable-Decay (MiniCPM): flat plateau then sharp decay tail."""
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        decay_len = max(total - warmup - stable, 1)
+        prog = jnp.clip((step - warmup - stable) / decay_len, 0.0, 1.0)
+        decay = base_lr * (1.0 - prog) ** 2
+        out = jnp.where(step < warmup, warm, base_lr)
+        return jnp.where(step < warmup + stable, out, decay)
+    return lr
+
+
+def make_schedule(kind: str, base_lr: float, total: int, *, warmup: int = 0) -> Callable:
+    warmup = warmup or max(total // 100, 10)
+    if kind == "wsd":
+        return wsd_schedule(base_lr, warmup, int(total * 0.8), total)
+    return cosine_schedule(base_lr, warmup, total)
+
+
+# ---------------------------------------------------------------- AdamW --
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    schedule: Callable
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: Any = jnp.float32
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, self.moment_dtype)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(zeros, params),
+            nu=jax.tree.map(zeros, params),
+        )
+
+    def update(self, grads, state: AdamWState, params) -> Tuple[Any, AdamWState]:
+        grads = clip_by_global_norm(grads, self.clip_norm)
+        step = state.step + 1
+        lr = self.schedule(step)
+        b1, b2 = self.b1, self.b2
+
+        mu = jax.tree.map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(m.dtype), state.mu, grads
+        )
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(v.dtype)),
+            state.nu, grads,
+        )
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m, v):
+            mhat = m / bc1
+            vhat = v / bc2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps) + self.weight_decay * p.astype(m.dtype)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, AdamWState(step=step, mu=mu, nu=nu)
+
+
+# ------------------------------------------------------------ Adafactor --
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    vr: Any      # row second-moment factors (or full v for <2D leaves)
+    vc: Any      # col factors (zeros for <2D leaves)
+
+
+@dataclasses.dataclass(frozen=True)
+class Adafactor:
+    """Factored AdaGrad-style optimizer (Shazeer & Stern), momentum-free.
+
+    Second moment of an (r, c) matrix is stored as (r,) + (c,) factors —
+    O(r+c) instead of O(r·c); >2-D leaves factor over the trailing two
+    dims.  This is what makes the 314 B grok config's optimizer fit.
+    """
+
+    schedule: Callable
+    decay: float = 0.8
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+
+    def init(self, params) -> AdafactorState:
+        def vr_init(p):
+            if p.ndim >= 2:
+                return jnp.zeros(p.shape[:-1], jnp.float32)
+            return jnp.zeros(p.shape, jnp.float32)
+
+        def vc_init(p):
+            if p.ndim >= 2:
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return jnp.zeros((), jnp.float32)
+
+        return AdafactorState(
+            step=jnp.zeros((), jnp.int32),
+            vr=jax.tree.map(vr_init, params),
+            vc=jax.tree.map(vc_init, params),
+        )
+
+    def update(self, grads, state: AdafactorState, params):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** (-self.decay)
+        lr = self.schedule(step)
+
+        def upd(p, g, vr, vc):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + self.eps
+            if p.ndim >= 2:
+                vr = beta * vr + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * vc + (1 - beta) * g2.mean(axis=-2)
+                denom = vr.mean(axis=-1, keepdims=True)[..., None]
+                prec = (vr[..., None] / denom) * vc[..., None, :]
+                u = g * jax.lax.rsqrt(prec + self.eps)
+            else:
+                vr = beta * vr + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(vr + self.eps)
+                vc = vc
+            # update clipping (RMS(u) <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + self.eps)
+            u = u / jnp.maximum(1.0, rms / self.clip_threshold)
+            newp = p.astype(jnp.float32) - lr * (u + self.weight_decay * p.astype(jnp.float32))
+            return newp.astype(p.dtype), vr, vc
+
+        flat_p, tree = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_vr = jax.tree.leaves(state.vr)
+        flat_vc = jax.tree.leaves(state.vc)
+        outs = [upd(p, g, vr, vc) for p, g, vr, vc in zip(flat_p, flat_g, flat_vr, flat_vc)]
+        new_p = tree.unflatten([o[0] for o in outs])
+        new_vr = tree.unflatten([o[1] for o in outs])
+        new_vc = tree.unflatten([o[2] for o in outs])
+        return new_p, AdafactorState(step=step, vr=new_vr, vc=new_vc)
+
+
+# ---------------------------------------------------------------- utils --
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    )
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads)
+
+
+def make_optimizer(kind: str, schedule: Callable, **kw):
+    if kind == "adamw":
+        return AdamW(schedule=schedule, **kw)
+    if kind == "adafactor":
+        return Adafactor(schedule=schedule, **kw)
+    raise ValueError(f"unknown optimizer {kind!r}")

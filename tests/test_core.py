@@ -1,0 +1,244 @@
+"""Unit + property tests for the ReCross core (the paper's algorithms)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    CoOccurrenceGraph,
+    build_cooccurrence,
+    correlation_aware_grouping,
+    frequency_grouping,
+    naive_grouping,
+    activations_per_query,
+    log_scaled_copies,
+    plan_replication,
+    build_layout,
+    query_tile_bitmaps,
+    select_mode,
+    popcount,
+    energy_breakeven_rows,
+    mode_statistics,
+    simulate_batch,
+    simulate_nmars_baseline,
+    merge_graphs,
+    baselines,
+    READ_MODE, MAC_MODE,
+)
+from repro.core.energy import DEFAULT_RERAM
+from repro.data import zipf_queries
+
+
+# ------------------------------------------------------------ fixtures --
+
+def small_trace(rows=512, n=128, seed=0, bag=12.0):
+    return zipf_queries(rows, n, bag, seed=seed)
+
+
+# --------------------------------------------------------- cooccurrence --
+
+def test_cooccurrence_counts_and_symmetry():
+    queries = [[0, 1, 2], [1, 2], [2, 3], [0, 2]]
+    g = build_cooccurrence(queries, 4)
+    assert g.num_queries == 4
+    assert g.freq.tolist() == [2, 2, 4, 1]
+    assert g.weight(1, 2) == 2 and g.weight(2, 1) == 2
+    assert g.weight(0, 3) == 0
+    assert g.edge_count() == 4  # (0,1),(0,2),(1,2),(2,3)
+
+def test_cooccurrence_dedups_within_query():
+    g = build_cooccurrence([[5, 5, 5]], 8)
+    assert g.freq[5] == 1
+    assert g.degree(5) == 0
+
+
+def test_merge_graphs_adds():
+    a = build_cooccurrence([[0, 1]], 4)
+    b = build_cooccurrence([[0, 1], [1, 2]], 4)
+    m = merge_graphs(a, b)
+    assert m.weight(0, 1) == 2
+    assert m.freq.tolist() == [2, 3, 1, 0]
+
+
+# ------------------------------------------------------------- grouping --
+
+@given(st.integers(1, 8), st.integers(20, 200), st.integers(0, 5))
+@settings(max_examples=20, deadline=None)
+def test_grouping_is_partition(group_pow, rows, seed):
+    """Property: every row grouped exactly once, group sizes <= group_size."""
+    group_size = 2 ** group_pow
+    qs = small_trace(rows=rows, n=40, seed=seed, bag=6.0)
+    g = build_cooccurrence(qs, rows)
+    grouping = correlation_aware_grouping(g, group_size)
+    seen = sorted(r for grp in grouping.groups for r in grp)
+    assert seen == list(range(rows))
+    assert all(len(grp) <= group_size for grp in grouping.groups)
+    # only the last group may be short
+    assert all(len(grp) == group_size for grp in grouping.groups[:-1])
+    # index maps consistent
+    for gi, grp in enumerate(grouping.groups):
+        for slot, r in enumerate(grp):
+            assert grouping.group_of[r] == gi and grouping.slot_of[r] == slot
+
+
+def test_grouping_reduces_activations_vs_naive():
+    rows = 1024
+    qs = small_trace(rows=rows, n=256, seed=1)
+    g = build_cooccurrence(qs[:128], rows)
+    rx = correlation_aware_grouping(g, 64)
+    nv = naive_grouping(rows, 64)
+    fr = frequency_grouping(g, 64)
+    a_rx = activations_per_query(rx, qs[128:]).sum()
+    a_nv = activations_per_query(nv, qs[128:]).sum()
+    a_fr = activations_per_query(fr, qs[128:]).sum()
+    assert a_rx < a_nv, "correlation grouping must beat naive"
+    # frequency grouping can come within noise at small synthetic scale;
+    # correlation grouping must never be meaningfully worse
+    assert a_rx <= a_fr * 1.05, "correlation grouping must not lose to frequency"
+
+
+# ---------------------------------------------------------- replication --
+
+def test_log_scaled_copies_matches_eq1():
+    """Eq. 1: floor(log(freq)/log(freq_total) * log(batch)) extra copies."""
+    import math
+    freq = np.array([1000, 100, 10, 1, 0])
+    batch = 256
+    out = log_scaled_copies(freq, batch)
+    total = freq.sum()
+    for f, c in zip(freq, out):
+        if f < 1:
+            assert c == 1
+        else:
+            expect = 1 + max(
+                int(math.floor(math.log(f) / math.log(total) * math.log(batch))), 0
+            )
+            assert c == expect, (f, c, expect)
+
+
+@given(st.integers(2, 512))
+@settings(max_examples=20, deadline=None)
+def test_log_scaling_bounds(batch):
+    """Property: copies >= 1; hottest group gets the most copies; total
+    extra copies bounded by log(batch) per group."""
+    import math
+    freq = np.array([10_000, 500, 20, 3, 1, 0])
+    out = log_scaled_copies(freq, batch)
+    assert (out >= 1).all()
+    assert out[0] == out.max()
+    assert (out - 1 <= math.log(batch) + 1).all()
+
+
+def test_area_budget_caps_extra_copies():
+    qs = small_trace(rows=512, n=256, seed=2)
+    g = build_cooccurrence(qs, 512)
+    grouping = correlation_aware_grouping(g, 32)
+    for budget in (0.0, 0.05, 0.2):
+        plan = plan_replication(grouping, g.freq, 256, area_budget_ratio=budget)
+        assert plan.extra_tiles() <= int(budget * grouping.num_groups)
+
+
+# ------------------------------------------------------ layout / bitmaps --
+
+def test_layout_physical_row_and_image():
+    rows, dim = 64, 8
+    qs = [[i, (i + 1) % rows] for i in range(rows)]
+    g = build_cooccurrence(qs, rows)
+    grouping = correlation_aware_grouping(g, 16)
+    plan = plan_replication(grouping, g.freq, 8)
+    layout = build_layout(grouping, plan, dim)
+    table = np.arange(rows * dim, dtype=np.float32).reshape(rows, dim)
+    image = layout.build_image(table)
+    assert image.shape == (layout.num_tiles * 16, dim)
+    for r in range(rows):
+        for rep in range(int(layout.copies[layout.group_of[r]])):
+            assert (image[layout.physical_row(r, rep)] == table[r]).all()
+
+
+def test_query_bitmaps_round_robin_balances_replicas():
+    rows = 64
+    g = build_cooccurrence([[0]] * 10, rows)
+    grouping = naive_grouping(rows, 16)
+    plan = plan_replication(grouping, g.freq * 0 + 100, 64)  # force copies
+    layout = build_layout(grouping, plan, 8)
+    if layout.copies[0] > 1:
+        bitmaps, counts = query_tile_bitmaps(layout, [[0]] * 6)
+        used_tiles = set(np.nonzero(counts.sum(axis=0))[0].tolist())
+        assert len(used_tiles) > 1, "round robin should spread replicas"
+
+
+# ------------------------------------------------------- dynamic switch --
+
+def test_select_mode_and_popcount():
+    bm = np.zeros((4, 8), np.uint8)
+    bm[1, 3] = 1
+    bm[2, [1, 2]] = 1
+    counts = popcount(bm)
+    assert counts.tolist() == [0, 1, 2, 0]
+    modes = select_mode(counts)
+    assert modes[1] == READ_MODE and modes[2] == MAC_MODE
+
+def test_energy_breakeven_row_count():
+    """READ strictly beats MAC for single rows (the paper's rule is sound);
+    the model's actual breakeven is ~9 rows (flash-ADC dominance) — the
+    headroom exploited by the beyond-paper multi-read policy."""
+    be = energy_breakeven_rows(DEFAULT_RERAM)
+    assert be > 1, "single-row READ must be cheaper than MAC"
+    assert 4 <= be <= 16, f"breakeven {be} outside plausible ADC-dominated range"
+
+
+def test_mode_statistics_fractions():
+    counts = np.array([[0, 1, 1, 5], [2, 0, 1, 0]])
+    s = mode_statistics(counts)
+    assert s["activations"] == 5
+    assert abs(s["read_fraction"] - 3 / 5) < 1e-9
+
+
+# ------------------------------------------------------------ simulator --
+
+def test_simulator_energy_single_vs_mac():
+    """Dynamic switching must strictly reduce energy when single-row
+    activations exist, and never change the math."""
+    rows = 256
+    qs = small_trace(rows=rows, n=64, seed=3, bag=3.0)
+    g = build_cooccurrence(qs[:32], rows)
+    layout, _ = baselines.recross_pipeline(g, qs[32:], group_size=16, dim=8)
+    on = simulate_batch(layout, qs[32:], dynamic_switching=True)
+    off = simulate_batch(layout, qs[32:], dynamic_switching=False)
+    assert on.activations == off.activations
+    if on.read_activations > 0:
+        assert on.energy_pj < off.energy_pj
+
+def test_simulator_replication_reduces_completion_time():
+    rows = 256
+    qs = small_trace(rows=rows, n=256, seed=4, bag=4.0)
+    g = build_cooccurrence(qs[:128], rows)
+    _, with_rep = baselines.recross_pipeline(
+        g, qs[128:], group_size=16, dim=8, batch_size=128, replication_scheme="log"
+    )
+    _, without = baselines.recross_pipeline(
+        g, qs[128:], group_size=16, dim=8, batch_size=128, replication_scheme="none"
+    )
+    assert with_rep.completion_time_ns <= without.completion_time_ns
+
+def test_nmars_slower_than_recross():
+    rows = 512
+    qs = small_trace(rows=rows, n=256, seed=5)
+    g = build_cooccurrence(qs[:128], rows)
+    _, rx = baselines.recross_pipeline(g, qs[128:], batch_size=128)
+    _, nm = baselines.nmars_pipeline(rows, qs[128:])
+    assert rx.completion_time_ns < nm.completion_time_ns
+    assert rx.energy_pj < nm.energy_pj
+
+
+@given(st.integers(0, 100))
+@settings(max_examples=10, deadline=None)
+def test_simulation_deterministic(seed):
+    rows = 128
+    qs = small_trace(rows=rows, n=32, seed=seed, bag=4.0)
+    g = build_cooccurrence(qs, rows)
+    l1, r1 = baselines.recross_pipeline(g, qs, group_size=16, dim=8)
+    l2, r2 = baselines.recross_pipeline(g, qs, group_size=16, dim=8)
+    assert r1.completion_time_ns == r2.completion_time_ns
+    assert r1.energy_pj == r2.energy_pj
+    assert (l1.gather_index_map() == l2.gather_index_map()).all()

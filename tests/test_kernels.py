@@ -1,0 +1,135 @@
+"""Per-kernel correctness: shape/dtype sweeps, kernel vs pure-jnp oracle."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import (
+    crossbar_reduce,
+    crossbar_reduce_ref,
+    embedding_bag,
+    embedding_bag_ref,
+)
+from repro.kernels.crossbar_reduce import crossbar_reduce_pallas
+
+
+def _case(rng, T, R, D, B, S, single_hot_frac=0.3, dtype=np.float32):
+    image = rng.normal(size=(T, R, D)).astype(dtype)
+    ids = rng.integers(0, T, size=(B, S)).astype(np.int32)
+    npad = max(1, S // 4)
+    ids[:, -npad:] = -1
+    bm = (rng.random((B, S, R)) < 0.08).astype(dtype)
+    bm[:, -npad:] = 0
+    # force a mix of READ-path (single-hot) and empty tiles
+    for b in range(B):
+        if rng.random() < single_hot_frac and S > npad:
+            bm[b, 0] = 0
+            bm[b, 0, int(rng.integers(0, R))] = 1
+        if S - npad > 1:
+            bm[b, 1] = 0  # activated-but-empty tile
+    return jnp.asarray(image), jnp.asarray(ids), jnp.asarray(bm)
+
+
+TOL = {np.dtype(np.float32): 1e-5, np.dtype(jnp.bfloat16): 0.15}
+
+
+@pytest.mark.parametrize("T,R,D,B,S", [
+    (4, 8, 128, 2, 4),
+    (12, 16, 128, 4, 8),
+    (7, 8, 256, 3, 8),
+    (32, 64, 128, 8, 16),
+    (3, 8, 512, 1, 4),
+])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_crossbar_reduce_matches_ref(T, R, D, B, S, dtype):
+    rng = np.random.default_rng(T * 1000 + R + D + B + S)
+    image, ids, bm = _case(rng, T, R, D, B, S, dtype=np.dtype(dtype))
+    out = crossbar_reduce(image, ids, bm)
+    ref = crossbar_reduce_ref(image, ids, bm)
+    assert out.shape == (B, D) and out.dtype == image.dtype
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=TOL[np.dtype(dtype)], rtol=1e-2,
+    )
+
+
+def test_crossbar_reduce_no_dynamic_switch_same_values():
+    rng = np.random.default_rng(0)
+    image, ids, bm = _case(rng, 10, 16, 128, 4, 8)
+    a = crossbar_reduce_pallas(image, ids, bm, dynamic_switch=True)
+    b = crossbar_reduce_pallas(image, ids, bm, dynamic_switch=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_crossbar_reduce_grad_matches_ref():
+    rng = np.random.default_rng(1)
+    image, ids, bm = _case(rng, 8, 16, 128, 4, 8)
+
+    def loss_k(img):
+        return (crossbar_reduce(img, ids, bm) ** 2).sum()
+
+    def loss_r(img):
+        return (crossbar_reduce_ref(img, ids, bm) ** 2).sum()
+
+    gk = jax.grad(loss_k)(image)
+    gr = jax.grad(loss_r)(image)
+    np.testing.assert_allclose(np.asarray(gk), np.asarray(gr), atol=1e-3, rtol=1e-3)
+
+
+def test_crossbar_reduce_alignment_errors():
+    rng = np.random.default_rng(2)
+    image, ids, bm = _case(rng, 4, 8, 128, 2, 4)
+    with pytest.raises(ValueError):
+        crossbar_reduce_pallas(image[:, :, :100], ids, bm)  # dim not 128-mult
+    with pytest.raises(ValueError):
+        crossbar_reduce_pallas(image[:, :7, :], ids, bm[:, :, :7])  # rows not 8-mult
+
+
+@pytest.mark.parametrize("rows,D,B,K", [
+    (64, 128, 4, 8),
+    (100, 128, 2, 5),     # rows not multiple of block
+    (257, 256, 8, 16),
+    (16, 512, 1, 3),
+])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_embedding_bag_matches_ref(rows, D, B, K, dtype):
+    rng = np.random.default_rng(rows + D + B + K)
+    table = jnp.asarray(rng.normal(size=(rows, D)).astype(np.dtype(dtype)))
+    idx = rng.integers(0, rows, size=(B, K)).astype(np.int32)
+    idx[:, -1] = -1
+    idx = jnp.asarray(idx)
+    out = embedding_bag(table, idx)
+    ref = embedding_bag_ref(table, idx)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=TOL[np.dtype(dtype)], rtol=1e-2,
+    )
+
+
+def test_embedding_bag_grad_matches_ref():
+    rng = np.random.default_rng(3)
+    table = jnp.asarray(rng.normal(size=(50, 128)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, 50, size=(4, 6)).astype(np.int32))
+    gk = jax.grad(lambda t: (embedding_bag(t, idx) ** 2).sum())(table)
+    gr = jax.grad(lambda t: (embedding_bag_ref(t, idx) ** 2).sum())(table)
+    np.testing.assert_allclose(np.asarray(gk), np.asarray(gr), atol=1e-3, rtol=1e-3)
+
+
+def test_kernel_end_to_end_with_layout():
+    """crossbar_reduce through a real ReCross layout == dense oracle."""
+    from repro.core import baselines, build_cooccurrence, compile_queries
+    from repro.core.reduction import reduce_dense_oracle
+    from repro.data import zipf_queries
+
+    rows, dim = 512, 128
+    qs = zipf_queries(rows, 128, 10.0, seed=5)
+    graph = build_cooccurrence(qs[:64], rows)
+    layout, _ = baselines.recross_pipeline(graph, qs[64:], group_size=16, dim=dim)
+    rng = np.random.default_rng(0)
+    table = rng.normal(size=(rows, dim)).astype(np.float32)
+    image = layout.build_image(table).reshape(layout.num_tiles, layout.tile_rows, dim)
+    cq = compile_queries(layout, qs[64:96])
+    out = crossbar_reduce(jnp.asarray(image), cq.tile_ids, cq.bitmaps)
+    ref = reduce_dense_oracle(jnp.asarray(table), qs[64:96])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4, rtol=1e-4)

@@ -1,0 +1,159 @@
+"""Numerical equivalence tests for every optimized model path against its
+simple reference implementation."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models import attention as attn
+from repro.models import mamba2, xlstm
+from repro.models.moe import apply_moe, init_moe
+from repro.models.rope import apply_rope
+
+
+def test_mlstm_chunked_equals_sequential():
+    p = xlstm.init_mlstm(jax.random.PRNGKey(0), 64, 4, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 70, 64)) * 0.5
+    y_seq, (C1, n1, m1) = xlstm.mlstm_scan(p, x, 4)
+    y_chk, (C2, n2, m2) = xlstm.mlstm_chunked(p, x, 4, chunk=16)
+    np.testing.assert_allclose(np.asarray(y_seq), np.asarray(y_chk), atol=3e-5)
+    np.testing.assert_allclose(np.asarray(C1), np.asarray(C2), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), atol=1e-5)
+
+
+def test_mlstm_chunked_grad_finite_long_gates():
+    """Extreme gate pre-activations must not produce NaN gradients."""
+    p = xlstm.init_mlstm(jax.random.PRNGKey(0), 32, 2, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 64, 32)) * 4.0  # big inputs
+    g = jax.grad(lambda xx: xlstm.mlstm_chunked(p, xx, 2, chunk=16)[0].sum())(x)
+    assert bool(jnp.isfinite(g).all())
+
+
+def test_mamba2_chunked_equals_stepwise():
+    p = mamba2.init_mamba2(jax.random.PRNGKey(0), 48, 16, jnp.float32, head_dim=32)
+    b, s = 2, 33
+    u = jax.random.normal(jax.random.PRNGKey(1), (b, s, 48)) * 0.5
+    y_chunk, (h_last, _) = mamba2.mamba2_scan(p, u, ssm_state=16, head_dim=32, chunk=8)
+    state = jnp.zeros((b, 3, 32, 16), jnp.float32)
+    conv = jnp.zeros((b, mamba2.CONV_W - 1, 96), jnp.float32)
+    ys = []
+    for t in range(s):
+        y, state, conv = mamba2.mamba2_decode_step(
+            p, u[:, t:t + 1], state, conv, ssm_state=16, head_dim=32
+        )
+        ys.append(y)
+    np.testing.assert_allclose(
+        np.asarray(y_chunk), np.asarray(jnp.concatenate(ys, 1)), atol=2e-5
+    )
+    np.testing.assert_allclose(np.asarray(h_last), np.asarray(state), atol=1e-5)
+
+
+def test_mamba2_grad_finite():
+    p = mamba2.init_mamba2(jax.random.PRNGKey(0), 32, 8, jnp.float32, head_dim=16)
+    u = jax.random.normal(jax.random.PRNGKey(1), (2, 24, 32))
+    g = jax.grad(lambda uu: mamba2.apply_mamba2(p, uu, ssm_state=8, head_dim=16, chunk=8).sum())(u)
+    assert bool(jnp.isfinite(g).all())
+
+
+def test_chunked_attention_equals_full():
+    d, H, KV, hd = 64, 4, 2, 16
+    p = attn.init_attention(jax.random.PRNGKey(0), d, H, KV, hd, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, d)) * 0.3
+    full = attn.self_attention(p, x, num_heads=H, kv_heads=KV, head_dim=hd)
+    chunked = attn.chunked_self_attention(
+        p, x, num_heads=H, kv_heads=KV, head_dim=hd, q_chunk=16, k_chunk=16
+    )
+    np.testing.assert_allclose(np.asarray(full), np.asarray(chunked), atol=2e-5)
+
+
+def test_chunked_attention_windowed_equals_full_windowed():
+    d, H, KV, hd = 32, 2, 2, 16
+    p = attn.init_attention(jax.random.PRNGKey(0), d, H, KV, hd, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 64, d)) * 0.3
+    full = attn.self_attention(p, x, num_heads=H, kv_heads=KV, head_dim=hd, window=8)
+    chunked = attn.chunked_self_attention(
+        p, x, num_heads=H, kv_heads=KV, head_dim=hd, q_chunk=16, k_chunk=16, window=8
+    )
+    np.testing.assert_allclose(np.asarray(full), np.asarray(chunked), atol=2e-5)
+
+
+def test_cross_attention_chunked_equals_direct():
+    d, H, KV, hd = 32, 4, 2, 8
+    p = attn.init_cross_attention(jax.random.PRNGKey(0), d, H, KV, hd, d, jnp.float32)
+    # non-zero gate so the output is informative
+    p = dict(p, gate=jnp.ones((1,)))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, d)) * 0.3
+    enc = jax.random.normal(jax.random.PRNGKey(2), (2, 7, d)) * 0.3
+    direct = attn.cross_attention(p, x, enc, num_heads=H, kv_heads=KV, head_dim=hd,
+                                  q_chunk=1024)  # no chunking (s < q_chunk)
+    chunked = attn.cross_attention(p, x, enc, num_heads=H, kv_heads=KV, head_dim=hd,
+                                   q_chunk=16)
+    np.testing.assert_allclose(np.asarray(direct), np.asarray(chunked), atol=2e-5)
+
+
+def test_rope_partial_rotates_half():
+    x = jnp.ones((1, 4, 2, 8))
+    pos = jnp.arange(4)[None, :]
+    full = apply_rope(x, pos, theta=100.0, partial=False)
+    part = apply_rope(x, pos, theta=100.0, partial=True)
+    # partial: second half of head dims untouched
+    np.testing.assert_array_equal(np.asarray(part[..., 4:]), np.ones((1, 4, 2, 4)))
+    assert not np.allclose(np.asarray(full[..., 4:]), np.ones((1, 4, 2, 4)))
+    # position 0 is identity everywhere
+    np.testing.assert_allclose(np.asarray(part[0, 0]), np.ones((2, 8)), atol=1e-6)
+
+
+def test_moe_grouped_dispatch_equals_global_nodrop():
+    d, f, E, k = 32, 64, 8, 2
+    moe = MoEConfig(num_experts=E, top_k=k, capacity_factor=float(E))
+    p = init_moe(jax.random.PRNGKey(0), d, f, moe, "swiglu", jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, d))
+    y1, _ = apply_moe(p, x, moe, num_groups=1)
+    y4, _ = apply_moe(p, x, moe, num_groups=4)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y4), atol=1e-6)
+
+
+def test_moe_capacity_drops_bounded():
+    """With cf=1.0, the per-token output must be either the full top-k
+    combination or a partial one — never amplified."""
+    d, f, E, k = 16, 32, 4, 2
+    moe = MoEConfig(num_experts=E, top_k=k, capacity_factor=1.0)
+    p = init_moe(jax.random.PRNGKey(0), d, f, moe, "swiglu", jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, d))
+    y, aux = apply_moe(p, x, moe)
+    assert bool(jnp.isfinite(y).all()) and float(aux) > 0
+    # upper bound: no output exceeds the no-drop magnitude by more than fp noise
+    y_full, _ = apply_moe(p, x, MoEConfig(E, k, float(E)))
+    assert float(jnp.abs(y).max()) <= float(jnp.abs(y_full).max()) * 1.5 + 1e-3
+
+
+def test_moe_grad_finite():
+    d, f, E, k = 16, 32, 4, 2
+    moe = MoEConfig(num_experts=E, top_k=k)
+    p = init_moe(jax.random.PRNGKey(0), d, f, moe, "swiglu", jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, d))
+    g = jax.grad(lambda pp: apply_moe(pp, x, moe)[0].sum())(p)
+    assert all(bool(jnp.isfinite(l).all()) for l in jax.tree.leaves(g))
+
+
+def test_int8_kv_cache_quantization_error_bounded():
+    from repro.configs import get_config
+    from repro.models import forward, init_lm
+    from repro.serve.decode import decode_step
+    from repro.serve.kvcache import init_cache
+
+    cfg = get_config("stablelm-3b", smoke=True)
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab_size)
+    full, _ = forward(params, cfg, tokens)
+    cache = init_cache(cfg, 2, 16, quant=True)
+    outs = []
+    for t in range(8):
+        lg, cache = decode_step(params, cfg, tokens[:, t:t + 1], cache)
+        outs.append(lg)
+    dec = jnp.concatenate(outs, axis=1)
+    # int8 cache: logits deviation stays small relative to logit scale
+    scale = float(jnp.abs(full).max())
+    assert float(jnp.abs(full - dec).max()) < 0.05 * max(scale, 1.0)

@@ -1,0 +1,90 @@
+"""Serving stack: KV caches, continuous batching, long-context decode."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import forward, init_lm
+from repro.serve.batching import Request, RequestBatcher
+from repro.serve.decode import decode_step
+from repro.serve.kvcache import cache_bytes, init_cache
+
+
+def test_cache_shapes_and_bytes():
+    cfg = get_config("chatglm3-6b", smoke=True)
+    cache = init_cache(cfg, batch=2, max_seq=32)
+    assert cache["k"].shape == (cfg.num_layers, 2, 32, cfg.kv_heads,
+                                cfg.resolved_head_dim)
+    assert cache_bytes(cache) > 0
+
+
+def test_ring_cache_window_bounded():
+    cfg = get_config("zamba2-7b", smoke=True)
+    cache = init_cache(cfg, batch=1, max_seq=1 << 19, window=16)
+    # hybrid cache memory must NOT scale with max_seq (ring window + states)
+    assert cache["shared"]["k"].shape[2] == 16
+    assert cache_bytes(cache) < 50e6
+
+
+def test_zamba_ring_decode_beyond_window():
+    """Decode past the ring window: old entries are overwritten and the
+    model keeps producing finite logits (sliding-window semantics)."""
+    cfg = get_config("zamba2-7b", smoke=True)
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    W = 8
+    cache = init_cache(cfg, batch=1, max_seq=1 << 12, window=W)
+    tok = jnp.zeros((1, 1), jnp.int32)
+    step = jax.jit(lambda c, t: decode_step(params, cfg, t, c))
+    for t in range(2 * W + 3):
+        logits, cache = step(cache, (tok + t) % cfg.vocab_size)
+        assert bool(jnp.isfinite(logits).all()), f"NaN at step {t}"
+    assert int(cache["len"]) == 2 * W + 3
+
+
+def test_decode_window_equals_full_within_window():
+    """While total length <= window, ring decode == unbounded decode."""
+    cfg = get_config("zamba2-7b", smoke=True)
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 6), 0, cfg.vocab_size)
+    c_big = init_cache(cfg, 1, 64, window=64)
+    c_small = init_cache(cfg, 1, 64, window=8)
+    outs = []
+    for c in (c_big, c_small):
+        got = []
+        cc = c
+        for t in range(6):
+            lg, cc = decode_step(params, cfg, toks[:, t:t + 1], cc)
+            got.append(np.asarray(lg))
+        outs.append(np.concatenate(got, axis=1))
+    np.testing.assert_allclose(outs[0], outs[1], atol=1e-5)
+
+
+def test_request_batcher_drains_and_measures():
+    batcher = RequestBatcher(batch_size=2, eos_id=-1)
+    for uid in range(5):
+        batcher.submit(Request(uid=uid, prompt=np.array([1, 2]), max_new_tokens=4))
+
+    def prefill_fn(slot, prompt):
+        return int(prompt[-1]) + 1
+
+    def decode_fn(active, last):
+        return last + 1
+
+    ticks = 0
+    while not batcher.idle:
+        batcher.tick(prefill_fn, decode_fn)
+        ticks += 1
+        assert ticks < 100
+    s = batcher.metrics.summary()
+    assert s["completed"] == 5
+    assert s["tokens_out"] > 0
+
+
+def test_request_batcher_respects_slot_limit():
+    batcher = RequestBatcher(batch_size=2, eos_id=-1)
+    for uid in range(4):
+        batcher.submit(Request(uid=uid, prompt=np.array([1]), max_new_tokens=100))
+    active = batcher.tick(lambda s, p: 0, lambda a, l: l)
+    assert active == 2  # only two slots admitted

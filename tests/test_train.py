@@ -1,0 +1,188 @@
+"""Training substrate: optimizers, schedules, checkpoint/restart,
+fault tolerance, gradient compression."""
+
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.train.optimizer import (
+    AdamW, Adafactor, clip_by_global_norm, cosine_schedule, wsd_schedule,
+)
+from repro.train import checkpoint as ckpt
+from repro.train.compression import (
+    compress, decompress, init_compression, compressed_bytes, raw_bytes,
+)
+from repro.train.fault_tolerance import (
+    HeartbeatMonitor, StragglerDetector, plan_remesh, run_with_restarts,
+)
+
+
+# ------------------------------------------------------------ optimizer --
+
+def _quadratic_params():
+    return {"w": jnp.array([3.0, -2.0, 1.0]), "b": jnp.array([0.5])}
+
+
+def _loss(p):
+    return jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)
+
+
+@pytest.mark.parametrize("opt_cls", [AdamW, Adafactor])
+def test_optimizer_converges_on_quadratic(opt_cls):
+    opt = opt_cls(schedule=lambda s: 0.1)
+    params = _quadratic_params()
+    state = opt.init(params)
+    for _ in range(200):
+        grads = jax.grad(_loss)(params)
+        params, state = opt.update(grads, state, params)
+    assert float(_loss(params)) < 1e-2
+
+
+def test_adamw_weight_decay_shrinks_params():
+    opt = AdamW(schedule=lambda s: 0.01, weight_decay=0.5)
+    params = {"w": jnp.ones((4,))}
+    state = opt.init(params)
+    zero_grads = {"w": jnp.zeros((4,))}
+    for _ in range(50):
+        params, state = opt.update(zero_grads, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 1.0
+
+
+def test_adafactor_memory_is_factored():
+    params = {"w": jnp.zeros((128, 64)), "e": jnp.zeros((1000, 32))}
+    opt = Adafactor(schedule=lambda s: 1e-3)
+    st = opt.init(params)
+    full = sum(p.size for p in jax.tree.leaves(params))
+    fact = sum(x.size for x in jax.tree.leaves((st.vr, st.vc)))
+    assert fact < full / 10, "second moment must be factored"
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 100.0)}
+    clipped = clip_by_global_norm(g, 1.0)
+    norm = float(jnp.linalg.norm(clipped["a"]))
+    assert abs(norm - 1.0) < 1e-5
+
+
+def test_schedules_shapes():
+    cos = cosine_schedule(1e-3, warmup=10, total=100)
+    assert float(cos(0)) == 0.0
+    assert abs(float(cos(10)) - 1e-3) < 1e-9
+    assert float(cos(100)) < 1e-5
+    wsd = wsd_schedule(1e-3, warmup=10, stable=50, total=100)
+    assert abs(float(wsd(30)) - 1e-3) < 1e-9  # plateau
+    assert float(wsd(100)) < 1e-5
+
+
+# ----------------------------------------------------------- checkpoint --
+
+def test_checkpoint_roundtrip_and_atomicity(tmp_path):
+    tree = {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "nested": {"b": jnp.ones((4,), jnp.bfloat16), "step": jnp.array(7)},
+    }
+    d = str(tmp_path)
+    ckpt.save(d, 5, tree)
+    ckpt.save(d, 10, tree)
+    # torn write: step 15 without COMMITTED must be ignored
+    os.makedirs(os.path.join(d, "step_000000015"))
+    assert ckpt.latest_step(d) == 10
+    like = jax.eval_shape(lambda: tree)
+    restored = ckpt.restore(d, 10, like)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_checkpoint_async(tmp_path):
+    tree = {"w": jnp.ones((32, 32))}
+    h = ckpt.save_async(str(tmp_path), 3, tree)
+    h.wait()
+    assert ckpt.latest_step(str(tmp_path)) == 3
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    ckpt.save(str(tmp_path), 1, {"w": jnp.ones((4,))})
+    with pytest.raises(ValueError):
+        ckpt.restore(str(tmp_path), 1, {"w": jax.ShapeDtypeStruct((5,), jnp.float32)})
+
+
+# ------------------------------------------------------ fault tolerance --
+
+def test_heartbeat_monitor_flags_dead_hosts():
+    hb = HeartbeatMonitor(timeout_s=10)
+    hb.beat(0, 1, t=100.0)
+    hb.beat(1, 1, t=100.0)
+    hb.beat(0, 2, t=115.0)
+    assert hb.dead_hosts(now=116.0) == [1]
+    assert hb.membership(now=116.0) == [0]
+
+
+def test_straggler_detector():
+    sd = StragglerDetector(window=8, threshold=2.0)
+    for step in range(8):
+        for h in range(4):
+            sd.record(h, 1.0 if h != 2 else 3.5)
+    assert sd.stragglers() == [2]
+
+
+def test_plan_remesh_preserves_model_axis():
+    assert plan_remesh(64, 4, model_parallelism=16) == (16, 16)
+    assert plan_remesh(60, 4, model_parallelism=16) == (15, 16)   # lost hosts
+    assert plan_remesh(64, 8, model_parallelism=16, pods=2) == (2, 16, 16)
+    with pytest.raises(RuntimeError):
+        plan_remesh(1, 4, model_parallelism=16)
+
+
+def test_run_with_restarts_replays_to_same_result(tmp_path):
+    """Injected crash mid-run; resumed run must match the uninterrupted one
+    (deterministic data + checkpointed state)."""
+    def make_runner(fail_at=None):
+        calls = {"n": 0}
+        store = {}
+
+        def step_fn(step, state):
+            if fail_at is not None and step == fail_at and calls["n"] == 0:
+                calls["n"] += 1
+                raise RuntimeError("injected node failure")
+            return state + (step + 1)
+
+        def save_fn(step, state):
+            store["ckpt"] = (step, state)
+
+        def restore_fn():
+            return store.get("ckpt", (0, 0))
+
+        return step_fn, save_fn, restore_fn
+
+    s1, sv1, r1 = make_runner(fail_at=None)
+    clean, _ = run_with_restarts(s1, 0, 25, save_fn=sv1, restore_fn=r1, save_every=10)
+    s2, sv2, r2 = make_runner(fail_at=17)
+    faulty, stats = run_with_restarts(s2, 0, 25, save_fn=sv2, restore_fn=r2, save_every=10)
+    assert faulty == clean
+    assert stats["restarts"] == 1
+    assert stats["replayed_steps"] == 7  # 17 back to checkpoint at 10
+
+
+# ----------------------------------------------------------- compression --
+
+def test_compression_error_feedback_preserves_signal():
+    rng = np.random.default_rng(0)
+    grads = {"w": jnp.asarray(rng.normal(size=(256,)).astype(np.float32))}
+    state = init_compression(grads)
+    # accumulate many compressed steps of the SAME gradient; error feedback
+    # must make the mean reconstruction converge to the true gradient
+    acc = np.zeros(256, np.float32)
+    n = 50
+    for _ in range(n):
+        payload, scales, state = compress(grads, state)
+        acc += np.asarray(decompress(payload, scales)["w"])
+    np.testing.assert_allclose(acc / n, np.asarray(grads["w"]), atol=2e-2)
+
+
+def test_compression_wire_ratio():
+    grads = {"w": jnp.ones((1024,), jnp.float32)}
+    assert raw_bytes(grads) / compressed_bytes(grads) == 4.0
