@@ -1,0 +1,208 @@
+"""Offline-pipeline throughput benchmark → BENCH_pipeline.json.
+
+Measures the vectorized offline pipeline (build_cooccurrence →
+grouping → replication/layout → query compile → simulate_batch) at
+production scale — a 100k-query / 100k-row synthetic history by default —
+and the retained ``_reference_*`` loop implementations on a subsample
+(the loops cannot hold the full history: the reference bitmap path alone
+would materialize a multi-GiB dense tensor).  Speedups are reported as
+per-query throughput ratios measured on the same workload distribution,
+plus a direct same-size comparison on the subsample.
+
+Also records interpret-mode wall times for the flat vs query-blocked
+Pallas kernel (regression tracking only — interpret mode is not TPU
+performance; the grid-cell count is the hardware-independent signal).
+
+Env knobs: ``RECROSS_PIPELINE_QUERIES`` / ``RECROSS_PIPELINE_ROWS``
+(defaults 100_000 / 100_000), ``RECROSS_PIPELINE_REF_SAMPLE`` (500).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core import (
+    baselines,
+    build_cooccurrence,
+    block_compiled_queries,
+    compile_activations,
+    compile_queries,
+    correlation_aware_grouping,
+    build_layout,
+    plan_replication,
+    query_tile_bitmaps,
+    simulate_batch,
+)
+from repro.core.cooccurrence import _reference_build_cooccurrence
+from repro.core.mapping import _reference_query_tile_bitmaps
+from repro.core.simulator import _reference_simulate_batch
+from repro.data import zipf_queries
+from repro.kernels import crossbar_reduce, crossbar_reduce_blocked
+
+JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_pipeline.json")
+
+NUM_QUERIES = int(os.environ.get("RECROSS_PIPELINE_QUERIES", 100_000))
+NUM_ROWS = int(os.environ.get("RECROSS_PIPELINE_ROWS", 100_000))
+REF_SAMPLE = int(os.environ.get("RECROSS_PIPELINE_REF_SAMPLE", 500))
+# paper Table I "Avg. Lat": bags of 41-96 lookups; software = 41.32
+MEAN_BAG = float(os.environ.get("RECROSS_PIPELINE_MEAN_BAG", 41.32))
+GROUP_SIZE = 64
+BATCH_SIZE = 256
+
+
+def _t(fn, *args, repeats: int = 1, **kw):
+    """(best wall time, last result) — best-of-N tames container noise."""
+    best = float("inf")
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def run() -> list:
+    rows_out = []
+    record: dict = {
+        "config": {
+            "num_queries": NUM_QUERIES,
+            "num_rows": NUM_ROWS,
+            "mean_bag": MEAN_BAG,
+            "group_size": GROUP_SIZE,
+            "ref_sample_queries": REF_SAMPLE,
+        },
+    }
+
+    qs = zipf_queries(NUM_ROWS, NUM_QUERIES, MEAN_BAG, seed=0,
+                      num_baskets=max(256, NUM_QUERIES // 32))
+    sample = qs[:REF_SAMPLE]
+
+    # ---- build_cooccurrence: full history vectorized vs sampled loop ----
+    t_cooc, graph = _t(build_cooccurrence, qs, NUM_ROWS, repeats=2)
+    t_cooc_ref, _ = _t(_reference_build_cooccurrence, sample, NUM_ROWS, repeats=2)
+    sp_cooc = (t_cooc_ref / REF_SAMPLE) / (t_cooc / NUM_QUERIES)
+    record["build_cooccurrence"] = {
+        "vectorized_s_full": t_cooc,
+        "reference_s_sample": t_cooc_ref,
+        "throughput_speedup": sp_cooc,
+        "edges": graph.edge_count(),
+    }
+
+    # ---- grouping / replication / layout (vectorized-consumer timing) ----
+    t_group, grouping = _t(correlation_aware_grouping, graph, GROUP_SIZE)
+    t_plan, plan = _t(plan_replication, grouping, graph.freq, BATCH_SIZE)
+    layout = build_layout(grouping, plan, dim=128)
+    record["grouping"] = {"seconds": t_group, "num_groups": grouping.num_groups}
+    record["replication"] = {"seconds": t_plan, "num_tiles": layout.num_tiles}
+
+    # ---- query compile: full history sparse + same-size dense vs loop ----
+    t_acts, acts = _t(compile_activations, layout, qs, repeats=2)
+    t_bm_vec, _ = _t(query_tile_bitmaps, layout, sample, repeats=2)
+    t_bm_ref, _ = _t(_reference_query_tile_bitmaps, layout, sample, repeats=2)
+    sp_bm_rate = (t_bm_ref / REF_SAMPLE) / (t_acts / NUM_QUERIES)
+    record["query_tile_bitmaps"] = {
+        "vectorized_sparse_s_full": t_acts,
+        "activations_full": acts.num_activations,
+        "vectorized_dense_s_sample": t_bm_vec,
+        "reference_dense_s_sample": t_bm_ref,
+        "same_size_speedup": t_bm_ref / max(t_bm_vec, 1e-12),
+        "throughput_speedup": sp_bm_rate,
+    }
+
+    # ---- simulate_batch: full history vectorized vs sampled loop --------
+    t_sim, rep = _t(simulate_batch, layout, qs, repeats=2)
+    t_sim_ref, _ = _t(_reference_simulate_batch, layout, sample, repeats=2)
+    sp_sim = (t_sim_ref / REF_SAMPLE) / (t_sim / NUM_QUERIES)
+    record["simulate_batch"] = {
+        "vectorized_s_full": t_sim,
+        "reference_s_sample": t_sim_ref,
+        "throughput_speedup": sp_sim,
+        "activations": rep.activations,
+        "read_fraction": rep.read_fraction,
+    }
+
+    total_vec = t_cooc + t_group + t_plan + t_acts + t_sim
+    record["pipeline_total_vectorized_s"] = total_vec
+    record["min_stage_throughput_speedup"] = min(sp_cooc, sp_bm_rate, sp_sim)
+    # acceptance metric: the three rewritten stages TOGETHER, per-query
+    vec_rate = (t_cooc + t_acts + t_sim) / NUM_QUERIES
+    ref_rate = (t_cooc_ref + t_bm_ref + t_sim_ref) / REF_SAMPLE
+    record["aggregate_stage_speedup"] = ref_rate / vec_rate
+    record["meets_20x_target"] = bool(ref_rate / vec_rate >= 20.0)
+
+    # ---- kernel interpret-mode wall times (flat vs query-blocked) -------
+    dim = 128
+    kbatch = 32
+    table = np.random.default_rng(0).normal(size=(NUM_ROWS, dim)).astype(np.float32)
+    image = jnp.asarray(
+        layout.build_image(table).reshape(layout.num_tiles, layout.tile_rows, dim)
+    )
+    cq = compile_queries(layout, qs[:kbatch])
+    kern = {}
+    out_flat = crossbar_reduce(image, cq.tile_ids, cq.bitmaps)  # warm
+    t0 = time.perf_counter()
+    crossbar_reduce(image, cq.tile_ids, cq.bitmaps).block_until_ready()
+    kern["flat_us"] = (time.perf_counter() - t0) * 1e6
+    kern["flat_grid_cells"] = int(cq.tile_ids.shape[0] * cq.tile_ids.shape[1])
+    for qb in (4, 8):
+        cq_b = compile_queries(layout, qs[:kbatch], replica_block=qb)
+        bq = block_compiled_queries(cq_b, qb)
+        out_blk = crossbar_reduce_blocked(image, bq.tile_ids, bq.bitmaps)  # warm
+        np.testing.assert_allclose(
+            np.asarray(out_blk[: bq.batch]), np.asarray(out_flat), atol=1e-4
+        )
+        t0 = time.perf_counter()
+        crossbar_reduce_blocked(image, bq.tile_ids, bq.bitmaps).block_until_ready()
+        kern[f"blocked_q{qb}_us"] = (time.perf_counter() - t0) * 1e6
+        kern[f"blocked_q{qb}_grid_cells"] = int(bq.num_blocks * bq.max_tiles)
+    record["kernel_interpret"] = kern
+
+    with open(JSON_PATH, "w") as f:
+        json.dump(record, f, indent=1)
+
+    rows_out.append({
+        "name": "pipeline_build_cooccurrence",
+        "us_per_call": f"{t_cooc * 1e6:.0f}",
+        "derived": f"speedup_vs_ref={sp_cooc:.1f}x",
+    })
+    rows_out.append({
+        "name": "pipeline_query_compile",
+        "us_per_call": f"{t_acts * 1e6:.0f}",
+        "derived": f"speedup_vs_ref={sp_bm_rate:.1f}x",
+    })
+    rows_out.append({
+        "name": "pipeline_simulate_batch",
+        "us_per_call": f"{t_sim * 1e6:.0f}",
+        "derived": f"speedup_vs_ref={sp_sim:.1f}x",
+    })
+    rows_out.append({
+        "name": "pipeline_aggregate_speedup",
+        "us_per_call": "",
+        "derived": (
+            f"{record['aggregate_stage_speedup']:.1f}x(target>=20x);"
+            "json=BENCH_pipeline.json"
+        ),
+    })
+    rows_out.append({
+        "name": "kernel_blocked_grid_shrink",
+        "us_per_call": "",
+        "derived": (
+            f"flat={kern['flat_grid_cells']};q4={kern['blocked_q4_grid_cells']};"
+            f"q8={kern['blocked_q8_grid_cells']}"
+        ),
+    })
+    return rows_out
+
+
+def main():
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

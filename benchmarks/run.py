@@ -19,6 +19,7 @@ from benchmarks import (
     fig10_duplication,
     fig11_cpu_gpu,
     kernel_bench,
+    pipeline_bench,
 )
 from benchmarks.common import emit
 
@@ -30,6 +31,7 @@ MODULES = {
     "fig456": fig456_distributions,
     "kernels": kernel_bench,
     "multiread": beyond_multiread,
+    "pipeline": pipeline_bench,
 }
 
 

@@ -19,7 +19,13 @@ from repro.core.replication import (
     plan_replication,
     shard_replication_sets,
 )
-from repro.core.mapping import CrossbarLayout, build_layout, query_tile_bitmaps
+from repro.core.mapping import (
+    ActivationSet,
+    CrossbarLayout,
+    build_layout,
+    compile_activations,
+    query_tile_bitmaps,
+)
 from repro.core.dynamic_switch import (
     MAC_MODE,
     READ_MODE,
@@ -37,7 +43,9 @@ from repro.core.simulator import (
     simulate_nmars_baseline,
 )
 from repro.core.reduction import (
+    BlockedQueries,
     CompiledQueries,
+    block_compiled_queries,
     compile_queries,
     reduce_dense_oracle,
     reduce_via_layout,
@@ -50,13 +58,14 @@ __all__ = [
     "naive_grouping", "activations_per_query",
     "ReplicationPlan", "log_scaled_copies", "plan_replication",
     "shard_replication_sets",
-    "CrossbarLayout", "build_layout", "query_tile_bitmaps",
+    "ActivationSet", "CrossbarLayout", "build_layout",
+    "compile_activations", "query_tile_bitmaps",
     "READ_MODE", "MAC_MODE", "popcount", "select_mode", "jnp_select_mode",
     "energy_breakeven_rows", "mode_statistics",
     "ReRAMCostModel", "TPUCostModel", "DEFAULT_RERAM", "DEFAULT_TPU",
     "SimReport", "simulate_batch", "simulate_cpu_baseline",
     "simulate_nmars_baseline",
-    "CompiledQueries", "compile_queries", "reduce_dense_oracle",
-    "reduce_via_layout",
+    "BlockedQueries", "CompiledQueries", "block_compiled_queries",
+    "compile_queries", "reduce_dense_oracle", "reduce_via_layout",
     "baselines",
 ]

@@ -22,6 +22,8 @@ from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
 
 @dataclasses.dataclass(frozen=True)
 class ReRAMCostModel:
@@ -107,16 +109,19 @@ class ReRAMCostModel:
         )
         return lat, energy
 
-    def crossbar_static_mac_event(self, active_rows: int) -> tuple[float, float]:
+    def crossbar_static_mac_event(self, active_rows) -> tuple[float, float]:
         """MAC event *without* dynamic switching (nMARS / naive ADС path).
 
         Always pays the full 6-bit conversion even for one active row, and
-        no popcount circuit exists.
+        no popcount circuit exists.  ``active_rows`` may be an int or an
+        int array (the vectorized simulator charges whole batches at once;
+        all event formulas are affine in the row count).
         """
         lat = self.mac_latency_ns + self.adc_latency_ns
+        floor_rows = np.maximum(active_rows, 1)
         energy = (
-            max(active_rows, 1) * self.cols * self.cell_mac_energy_pj
-            + max(active_rows, 1) * self.wordline_driver_energy_pj
+            floor_rows * self.cols * self.cell_mac_energy_pj
+            + floor_rows * self.wordline_driver_energy_pj
             + self.cols * self.adc_energy(mac_mode=True)
             + self.bus_energy_pj
         )

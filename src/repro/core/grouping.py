@@ -10,7 +10,9 @@ production-grade refinements that do not change the algorithm's semantics:
 
   * the candidate list is a lazy max-heap keyed by co-occurrence weight
     *into the current group* (Algorithm 1 recomputes the max by a linear
-    scan; the heap makes the whole pass O(E log E) instead of O(V·E)),
+    scan; the heap makes the whole pass O(E log E) instead of O(V·E));
+    neighbor expansion reads the graph's CSR slices directly
+    (:meth:`CoOccurrenceGraph.neighbor_arrays`), no per-row dicts,
   * rows with no ungrouped neighbours left fall back to frequency order,
     which is what "foreach embedding in sorted(embeddingList)" yields
     anyway once candidateList is empty.
@@ -90,9 +92,11 @@ def correlation_aware_grouping(
         heap: List[tuple] = []
 
         def push_neighbors(row: int) -> None:
-            for j, w in graph.neighbors(row).items():
-                if grouped[j]:
-                    continue
+            nbr_ids, nbr_w = graph.neighbor_arrays(row)
+            if nbr_ids.size == 0:
+                return
+            live = ~grouped[nbr_ids]
+            for j, w in zip(nbr_ids[live].tolist(), nbr_w[live].tolist()):
                 new_w = weight_into.get(j, 0) + w
                 weight_into[j] = new_w
                 heapq.heappush(heap, (-new_w, j))
@@ -175,8 +179,17 @@ def _repack_short_groups(
 def activations_per_query(
     grouping: Grouping, queries: Sequence[Sequence[int]]
 ) -> np.ndarray:
-    """Distinct groups (crossbars) activated by each query (paper Fig. 9 metric)."""
-    out = np.empty(len(queries), dtype=np.int64)
-    for k, q in enumerate(queries):
-        out[k] = len({int(grouping.group_of[i]) for i in q})
-    return out
+    """Distinct groups (crossbars) activated by each query (paper Fig. 9 metric).
+
+    Vectorized: one unique over packed (query, group) keys for the whole
+    batch instead of a Python set per query.
+    """
+    from repro.core.cooccurrence import flatten_ragged
+
+    flat, lens, nq = flatten_ragged(queries)
+    if flat.size == 0:
+        return np.zeros(nq, dtype=np.int64)
+    qid = np.repeat(np.arange(nq, dtype=np.int64), lens)
+    ngroups = np.int64(grouping.num_groups)
+    touched = np.unique(qid * ngroups + grouping.group_of[flat].astype(np.int64))
+    return np.bincount(touched // ngroups, minlength=nq).astype(np.int64)

@@ -84,25 +84,27 @@ class CrossbarLayout:
         Returns ``(num_tiles * tile_rows, dim)`` — replica tiles hold
         identical data; padding slots are zero (so a stray access
         contributes nothing to a sum, mirroring an unprogrammed ReRAM
-        cell at high resistance).
+        cell at high resistance).  One vectorized scatter: every
+        (row, replica) pair's physical row index is computed with
+        repeat/cumsum arithmetic, then assigned in a single fancy index.
         """
         if table.shape != (self.num_rows, self.dim):
             raise ValueError(f"table shape {table.shape} != ({self.num_rows},{self.dim})")
         image = np.zeros((self.padded_rows, self.dim), dtype=table.dtype)
-        for g in range(self.num_groups):
-            rows = np.where(self.group_of == g)[0]
-            slots = self.slot_of[rows]
-            for c in range(int(self.copies[g])):
-                tile = int(self.tile_base[g]) + c
-                image[tile * self.tile_rows + slots] = table[rows]
+        from repro.core.cooccurrence import segment_ranks
+
+        per_row_copies = self.copies[self.group_of].astype(np.int64)
+        src = np.repeat(np.arange(self.num_rows, dtype=np.int64), per_row_copies)
+        replica = segment_ranks(per_row_copies)
+        tile = self.tile_base[self.group_of[src]].astype(np.int64) + replica
+        image[tile * self.tile_rows + self.slot_of[src]] = table[src]
         return image
 
     def tile_of_groups(self) -> np.ndarray:
         """(num_tiles,) group id owning each physical tile."""
-        out = np.empty(self.num_tiles, dtype=np.int32)
-        for g in range(self.num_groups):
-            out[self.tile_base[g] : self.tile_base[g] + self.copies[g]] = g
-        return out
+        return np.repeat(
+            np.arange(self.num_groups, dtype=np.int32), self.copies
+        )
 
 
 def build_layout(
@@ -129,25 +131,180 @@ def build_layout(
     )
 
 
+@dataclasses.dataclass
+class ActivationSet:
+    """Sparse compiled form of a query batch against a layout.
+
+    The CSR-style contract every consumer (simulator, query compiler,
+    dense bitmap scatter) builds on: one entry per *activation* (a
+    (query, tile) pair with ≥1 active wordline), sorted by (query, tile),
+    plus the flat (query, tile, slot) wordline entries behind them.
+
+    Attributes:
+      act_qid / act_tile / act_rows: ``(A,)`` — per-activation query id,
+        physical tile id, and popcount, lexicographically sorted by
+        (query, tile) (the order ``np.nonzero`` yields on the dense form).
+      ent_qid / ent_tile / ent_slot: ``(E,)`` — deduplicated activated
+        wordline entries, sorted by (query, tile, slot).
+      batch / num_tiles / tile_rows: dense-form dimensions.
+    """
+
+    act_qid: np.ndarray
+    act_tile: np.ndarray
+    act_rows: np.ndarray
+    ent_qid: np.ndarray
+    ent_tile: np.ndarray
+    ent_slot: np.ndarray
+    batch: int
+    num_tiles: int
+    tile_rows: int
+
+    @property
+    def num_activations(self) -> int:
+        return int(self.act_qid.shape[0])
+
+    def per_query_tiles(self) -> np.ndarray:
+        """(batch,) distinct tiles activated by each query."""
+        return np.bincount(self.act_qid, minlength=self.batch).astype(np.int64)
+
+    def max_tiles_per_query(self) -> int:
+        per_q = self.per_query_tiles()
+        return int(per_q.max()) if per_q.size else 0
+
+
+def compile_activations(
+    layout: CrossbarLayout,
+    queries: Sequence[Sequence[int]],
+    *,
+    balance_replicas: bool = True,
+    replica_block: int = 1,
+) -> ActivationSet:
+    """Query batch → sparse activation set, fully vectorized.
+
+    For each query, rows are bucketed by group; each touched group
+    contributes one activated tile (one of its replicas, chosen
+    round-robin per group when ``balance_replicas`` — the scheduler's
+    replica-balancing step).  The round-robin state is reproduced
+    without any Python loop: the replica of the r-th query touching a
+    group (in batch order) is ``r % copies[g]``, computed by ranking the
+    unique (query, group) touches within each group.
+
+    ``replica_block > 1`` coarsens the round robin to blocks of that many
+    consecutive queries: all queries of a block touching a group share one
+    replica (the r-th *block* gets ``r % copies[g]``).  Use this when
+    compiling for the query-blocked kernel — per-query balancing would
+    spread a block's queries over replica tiles of identical data,
+    inflating the block's tile union and defeating the DMA amortization.
+    Numerics are unaffected either way (replicas hold identical rows).
+    """
+    if replica_block < 1:
+        raise ValueError("replica_block must be >= 1")
+    from repro.core.cooccurrence import flatten_ragged, segment_ranks
+
+    flat, lens, batch = flatten_ragged(queries)
+    empty = np.empty(0, np.int64)
+    if flat.size == 0:
+        return ActivationSet(
+            act_qid=empty, act_tile=empty, act_rows=empty,
+            ent_qid=empty, ent_tile=empty, ent_slot=empty,
+            batch=batch, num_tiles=layout.num_tiles, tile_rows=layout.tile_rows,
+        )
+    qid = np.repeat(np.arange(batch, dtype=np.int64), lens)
+    group = layout.group_of[flat].astype(np.int64)
+    slot = layout.slot_of[flat].astype(np.int64)
+
+    # one tile choice per unique (query, group) touch
+    num_groups = np.int64(layout.num_groups)
+    touch_key = qid * num_groups + group
+    uniq_touch, inv = np.unique(touch_key, return_inverse=True)
+    t_qid = uniq_touch // num_groups
+    t_group = uniq_touch % num_groups
+    if balance_replicas:
+        # round-robin unit: a (query, group) touch, or a (block, group)
+        # touch when replica_block > 1
+        if replica_block > 1:
+            ukey = (t_qid // replica_block) * num_groups + t_group
+            units, uinv = np.unique(ukey, return_inverse=True)
+            u_group = units % num_groups
+        else:
+            units, uinv = None, None
+            u_group = t_group
+        # rank of each unit within its group, in batch order: unit keys are
+        # sorted by (unit, group), so a stable sort by group preserves batch
+        # order inside each group segment — run-local rank is the round robin.
+        order = np.argsort(u_group, kind="stable")
+        g_sorted = u_group[order]
+        run_lengths = np.bincount(
+            g_sorted, minlength=layout.num_groups
+        ).astype(np.int64)
+        rank = np.empty(g_sorted.size, dtype=np.int64)
+        rank[order] = segment_ranks(run_lengths)
+        replica = rank % layout.copies[u_group].astype(np.int64)
+        if uinv is not None:
+            replica = replica[uinv]
+    else:
+        replica = np.zeros(t_qid.size, dtype=np.int64)
+    t_tile = layout.tile_base[t_group].astype(np.int64) + replica
+
+    # deduplicated (query, tile, slot) wordline entries
+    ent_tile = t_tile[inv]
+    tile_rows = np.int64(layout.tile_rows)
+    ent_key = (qid * np.int64(layout.num_tiles) + ent_tile) * tile_rows + slot
+    ent_uniq = np.unique(ent_key)
+    e_slot = ent_uniq % tile_rows
+    e_qt = ent_uniq // tile_rows
+    e_tile = e_qt % layout.num_tiles
+    e_qid = e_qt // layout.num_tiles
+
+    # popcount per activation: ent entries grouped by (qid, tile); the
+    # unique (qid, tile) keys come out sorted — matching np.nonzero order
+    act_key, act_rows = np.unique(e_qt, return_counts=True)
+    return ActivationSet(
+        act_qid=(act_key // layout.num_tiles).astype(np.int64),
+        act_tile=(act_key % layout.num_tiles).astype(np.int64),
+        act_rows=act_rows.astype(np.int64),
+        ent_qid=e_qid.astype(np.int64),
+        ent_tile=e_tile.astype(np.int64),
+        ent_slot=e_slot.astype(np.int64),
+        batch=batch,
+        num_tiles=layout.num_tiles,
+        tile_rows=layout.tile_rows,
+    )
+
+
 def query_tile_bitmaps(
     layout: CrossbarLayout,
     queries: Sequence[Sequence[int]],
     *,
     balance_replicas: bool = True,
 ) -> tuple[np.ndarray, np.ndarray]:
-    """Compiles a query batch into per-tile wordline bitmaps.
+    """Compiles a query batch into dense per-tile wordline bitmaps.
 
-    For each query, rows are bucketed by group; each touched group
-    contributes one activated tile (one of its replicas, chosen
-    round-robin per group when ``balance_replicas`` — the scheduler's
-    replica-balancing step) with a ``tile_rows`` bitmap of activated
-    wordlines.
+    Vectorized scatter from :func:`compile_activations`.  Prefer the
+    sparse :class:`ActivationSet` for large batches — the dense tensor is
+    ``batch × num_tiles × tile_rows`` and exists for the kernel-compile
+    and diagnostics paths.
 
     Returns:
       bitmaps: ``(batch, num_tiles, tile_rows)`` uint8 — activation image.
       counts:  ``(batch, num_tiles)`` int32 — popcount per tile (input to
         the dynamic switch).
     """
+    acts = compile_activations(layout, queries, balance_replicas=balance_replicas)
+    bitmaps = np.zeros((acts.batch, layout.num_tiles, layout.tile_rows), dtype=np.uint8)
+    bitmaps[acts.ent_qid, acts.ent_tile, acts.ent_slot] = 1
+    counts = np.zeros((acts.batch, layout.num_tiles), dtype=np.int32)
+    counts[acts.act_qid, acts.act_tile] = acts.act_rows
+    return bitmaps, counts
+
+
+def _reference_query_tile_bitmaps(
+    layout: CrossbarLayout,
+    queries: Sequence[Sequence[int]],
+    *,
+    balance_replicas: bool = True,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Original per-row Python loop (equivalence oracle for the tests)."""
     batch = len(queries)
     bitmaps = np.zeros((batch, layout.num_tiles, layout.tile_rows), dtype=np.uint8)
     rr = np.zeros(layout.num_groups, dtype=np.int64)  # per-group round robin

@@ -47,6 +47,31 @@ class CompiledQueries:
         return self.tile_ids.shape[0]
 
 
+@dataclasses.dataclass
+class BlockedQueries:
+    """Query-blocked compiled batch (device-ready, DESIGN.md §3).
+
+    ``q_block`` consecutive queries share one tile schedule (the union of
+    their per-query tile lists, deduplicated): one tile DMA serves the
+    whole block, and the kernel's MAC is a ``(q_block, tile_rows)``
+    matmul.  The batch is padded up to a q_block multiple; kernel output
+    rows beyond :attr:`batch` are padding and should be sliced off.
+    """
+
+    tile_ids: jax.Array   # (nb, max_tiles) int32, -1 = padding — per block
+    bitmaps: jax.Array    # (nb, max_tiles, q_block, tile_rows)
+    q_block: int
+    batch: int            # original (unpadded) query count
+
+    @property
+    def num_blocks(self) -> int:
+        return self.tile_ids.shape[0]
+
+    @property
+    def max_tiles(self) -> int:
+        return self.tile_ids.shape[1]
+
+
 def compile_queries(
     layout: CrossbarLayout,
     queries: Sequence[Sequence[int]],
@@ -54,32 +79,110 @@ def compile_queries(
     max_tiles: int | None = None,
     dtype=jnp.float32,
     balance_replicas: bool = True,
+    replica_block: int = 1,
 ) -> CompiledQueries:
     """Ragged host queries → fixed-shape device arrays.
 
     ``max_tiles`` defaults to the batch's maximum tiles-per-query, rounded
-    up to a multiple of 8 for sublane friendliness.
+    up to a multiple of 8 for sublane friendliness.  Built directly from
+    the sparse :class:`~repro.core.mapping.ActivationSet` with two
+    scatters — the dense ``(batch, num_tiles, tile_rows)`` intermediate is
+    never materialized.  Pass ``replica_block=q_block`` when the result
+    feeds :func:`block_compiled_queries` so replica choice is shared
+    inside each block (see :func:`~repro.core.mapping.compile_activations`).
     """
-    from repro.core.mapping import query_tile_bitmaps
+    from repro.core.mapping import compile_activations
 
-    bm, counts = query_tile_bitmaps(layout, queries, balance_replicas=balance_replicas)
-    batch = bm.shape[0]
-    per_q = [np.nonzero(counts[i])[0] for i in range(batch)]
-    width = max((len(p) for p in per_q), default=1)
+    acts = compile_activations(
+        layout, queries,
+        balance_replicas=balance_replicas, replica_block=replica_block,
+    )
+    batch = acts.batch
+    per_q = acts.per_query_tiles()
+    width = int(per_q.max()) if per_q.size else 1
     if max_tiles is None:
         max_tiles = max(8, int(np.ceil(width / 8)) * 8)
     if width > max_tiles:
         raise ValueError(f"query touches {width} tiles > max_tiles={max_tiles}")
 
+    from repro.core.cooccurrence import segment_ranks
+
     tile_ids = np.full((batch, max_tiles), -1, dtype=np.int32)
     bitmaps = np.zeros((batch, max_tiles, layout.tile_rows), dtype=np.float32)
-    for i, tiles in enumerate(per_q):
-        tile_ids[i, : len(tiles)] = tiles
-        bitmaps[i, : len(tiles)] = bm[i, tiles]
+    # slot position of each activation within its query (activations are
+    # (query, tile)-sorted, so the run-local rank is the position)
+    pos = segment_ranks(per_q)
+    tile_ids[acts.act_qid, pos] = acts.act_tile
+    # wordline entries inherit their activation's slot position
+    ent_pos = np.repeat(pos, acts.act_rows)
+    bitmaps[acts.ent_qid, ent_pos, acts.ent_slot] = 1.0
     return CompiledQueries(
         tile_ids=jnp.asarray(tile_ids),
         bitmaps=jnp.asarray(bitmaps, dtype=dtype),
         max_tiles=max_tiles,
+    )
+
+
+def block_compiled_queries(
+    cq: CompiledQueries,
+    q_block: int,
+    *,
+    max_tiles: int | None = None,
+) -> BlockedQueries:
+    """Flat compiled batch → query-blocked layout for the blocked kernel.
+
+    Each block of ``q_block`` consecutive queries gets the deduplicated
+    union of its members' tile lists.  With a correlation-aware layout the
+    members share hot tiles, so the union width stays close to a single
+    query's — that is what shrinks the kernel grid by ~``q_block``×.
+    Ragged batches are zero-padded up to a block multiple.
+
+    Compile ``cq`` with ``replica_block=q_block`` so replicated hot groups
+    resolve to one tile per block instead of one per query — per-query
+    round robin would put identical replica tiles in the same union.
+    """
+    if q_block < 1:
+        raise ValueError("q_block must be >= 1")
+    ids = np.asarray(cq.tile_ids)
+    bms = np.asarray(cq.bitmaps)
+    batch, s_flat = ids.shape
+    tile_rows = bms.shape[-1]
+    nb = -(-batch // q_block) if batch else 0
+    pad = nb * q_block - batch
+    if pad:
+        ids = np.concatenate([ids, np.full((pad, s_flat), -1, ids.dtype)])
+        bms = np.concatenate([bms, np.zeros((pad, s_flat, tile_rows), bms.dtype)])
+
+    vq, vs = np.nonzero(ids >= 0)
+    vt = ids[vq, vs].astype(np.int64)
+    vblk = vq // q_block
+    num_tiles = int(vt.max()) + 1 if vt.size else 1
+    key = vblk * np.int64(num_tiles) + vt
+    uniq = np.unique(key)
+    ub = (uniq // num_tiles).astype(np.int64)
+    ut = (uniq % num_tiles).astype(np.int64)
+    per_blk = np.bincount(ub, minlength=max(nb, 1))
+    width = int(per_blk.max()) if uniq.size else 0
+    if max_tiles is None:
+        max_tiles = max(8, int(np.ceil(width / 8)) * 8)
+    if width > max_tiles:
+        raise ValueError(f"block touches {width} tiles > max_tiles={max_tiles}")
+
+    from repro.core.cooccurrence import segment_ranks
+
+    blocked_ids = np.full((max(nb, 1), max_tiles), -1, dtype=np.int32)
+    pos_u = segment_ranks(per_blk)
+    blocked_ids[ub, pos_u] = ut
+    blocked_bms = np.zeros(
+        (max(nb, 1), max_tiles, q_block, tile_rows), dtype=np.asarray(bms).dtype
+    )
+    pos_entry = pos_u[np.searchsorted(uniq, key)]
+    blocked_bms[vblk, pos_entry, vq % q_block] = bms[vq, vs]
+    return BlockedQueries(
+        tile_ids=jnp.asarray(blocked_ids),
+        bitmaps=jnp.asarray(blocked_bms),
+        q_block=q_block,
+        batch=batch,
     )
 
 

@@ -1,0 +1,15 @@
+"""Distribution layer: logical-axis sharding rules and pipeline parallelism.
+
+``repro.dist.sharding`` owns the logical→mesh translation used by every
+model, the activation-constraint helpers (no-ops outside a mesh context so
+single-device tests run unchanged), and the name-pattern parameter-spec
+derivation consumed by the dry-run and the elastic-restart path.
+
+``repro.dist.pipeline_parallel`` owns the GPipe-style stage rotation used
+by the pipeline-parallel example and its schedule math.
+"""
+
+from repro.dist import sharding
+from repro.dist import pipeline_parallel
+
+__all__ = ["sharding", "pipeline_parallel"]

@@ -1,0 +1,213 @@
+"""Sharding rules: logical axes, spec derivation, sanitization, contexts.
+
+Every tensor in the codebase is annotated with *logical* axis names
+("batch", "mlp", "vocab", ...).  A rule table maps logical names to mesh
+axes; specs derived from the table are *sanitized* against the actual
+array shapes (an axis that does not divide evenly falls back to
+replicated) so one rule table serves every arch × shape cell.
+
+Three layers:
+
+  * **rule tables** — :data:`LOGICAL_RULES_SINGLE_POD` (16×16 data×model)
+    and :data:`LOGICAL_RULES_MULTI_POD` (2×16×16 pod×data×model; the batch
+    axis spans both pod and data).
+  * **activation constraints** — :func:`maybe_shard` /
+    :func:`maybe_shard_any` apply ``with_sharding_constraint`` *only*
+    inside an :func:`activation_sharding_ctx`; outside a context they are
+    identity, so model code carries its sharding annotations everywhere
+    (unit tests, single device, 512-chip dry-run) without branching.
+  * **parameter specs** — :func:`param_specs_for` derives a PartitionSpec
+    tree from parameter *names* (the stable contract of the model zoo:
+    ``wq/wk/wv/in_gate/w_gate/w_val`` are in-projections sharded
+    (fsdp, tp); ``wo/w_out/out/down`` are out-projections sharded
+    (tp, fsdp); ``embed``/``lm_head`` shard the vocab over model; norms,
+    biases, scalar gates and routers replicate).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import math
+import threading
+from typing import Any, Dict, Iterable, Optional, Sequence, Tuple
+
+import numpy as np
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+Rules = Dict[str, Any]  # logical axis name -> mesh axis | tuple | None
+
+# ---------------------------------------------------------------- rules --
+
+_COMMON_RULES: Rules = {
+    # activations
+    "batch": "data",
+    "seq": None,
+    "embed": None,          # residual stream stays unsharded within a shard
+    "expert_cap_dp": "data",
+    # tensor parallelism
+    "mlp": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "qgroups": "model",
+    "vocab": "model",
+    # parameters
+    "fsdp": "data",
+    # axes that never shard on these meshes
+    "experts": None,
+    "stage": None,
+}
+
+LOGICAL_RULES_SINGLE_POD: Rules = dict(_COMMON_RULES)
+
+LOGICAL_RULES_MULTI_POD: Rules = dict(
+    _COMMON_RULES,
+    batch=("pod", "data"),
+    expert_cap_dp=("pod", "data"),
+)
+
+
+def logical_to_spec(axes: Sequence[Optional[str]], rules: Rules) -> P:
+    """Translates a tuple of logical axis names into a PartitionSpec."""
+    return P(*(rules.get(a) if a is not None else None for a in axes))
+
+
+# ----------------------------------------------------------- sanitation --
+
+
+def _mesh_axis_sizes(mesh) -> Dict[str, int]:
+    # works for jax.sharding.Mesh and for test fakes carrying
+    # .axis_names + .devices (an ndarray whose shape is the mesh shape)
+    return dict(zip(mesh.axis_names, np.shape(mesh.devices)))
+
+
+def sanitize_spec(spec: P, shape: Sequence[int], mesh) -> P:
+    """Drops spec entries whose mesh-axis product does not divide the dim.
+
+    Keeps the spec length (``P("model", None)`` sanitizes to
+    ``P(None, None)``, not ``P()``), so specs stay positionally aligned
+    with the array rank they were written for.
+    """
+    sizes = _mesh_axis_sizes(mesh)
+    out = []
+    for d, part in enumerate(spec):
+        if part is None:
+            out.append(None)
+            continue
+        axes = part if isinstance(part, tuple) else (part,)
+        n = math.prod(sizes.get(a, 1) for a in axes)
+        ok = d < len(shape) and n > 0 and shape[d] % n == 0
+        out.append(part if ok else None)
+    return P(*out)
+
+
+def sanitize_specs_tree(specs, avals, mesh):
+    """Tree-maps :func:`sanitize_spec` over a (specs, avals) pair."""
+    return jax.tree.map(
+        lambda s, a: sanitize_spec(s, a.shape, mesh),
+        specs,
+        avals,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# -------------------------------------------------- activation context --
+
+_CTX = threading.local()
+
+
+def _current() -> Tuple[Optional[Rules], Any]:
+    """(rules, mesh) of the innermost activation context, (None, None) outside."""
+    return getattr(_CTX, "state", (None, None))
+
+
+@contextlib.contextmanager
+def activation_sharding_ctx(mesh, rules: Rules):
+    """Installs (mesh, rules) so :func:`maybe_shard` becomes active."""
+    prev = _current()
+    _CTX.state = (rules, mesh)
+    try:
+        yield
+    finally:
+        _CTX.state = prev
+
+
+def maybe_shard(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+    """Constrains ``x`` to the logical ``axes`` — identity outside a context."""
+    rules, mesh = _current()
+    if mesh is None:
+        return x
+    spec = sanitize_spec(logical_to_spec(axes, rules), x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def maybe_shard_any(
+    x: jax.Array, candidates: Iterable[Sequence[Optional[str]]]
+) -> jax.Array:
+    """First candidate whose spec survives sanitization intact wins.
+
+    Candidates are tried in order; one whose every requested axis divides
+    the shape is applied.  If none fully applies, ``x`` is returned
+    unconstrained (the conservative fallback — never a wrong sharding).
+    """
+    rules, mesh = _current()
+    if mesh is None:
+        return x
+    for axes in candidates:
+        spec = logical_to_spec(axes, rules)
+        san = sanitize_spec(spec, x.shape, mesh)
+        if san == spec:
+            return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, san))
+    return x
+
+
+# ------------------------------------------------------- parameter specs --
+
+# name-pattern contract of the model zoo (exact leaf-name match):
+#   in-projections  (..., d_in, d_out): fsdp on d_in, tp on d_out
+#   out-projections (..., d_out, d_in): tp on d_out, fsdp on d_in
+_IN_PROJ_NAMES = frozenset(
+    {"wq", "wk", "wv", "wqkv", "qkv", "in_gate", "in", "up",
+     "w_gate", "w_val", "w_in", "wi"}
+)
+_OUT_PROJ_NAMES = frozenset({"wo", "w_out", "out", "down"})
+
+
+def _leaf_name(path) -> str:
+    for p in reversed(path):
+        key = getattr(p, "key", None)
+        if key is not None:
+            return str(key)
+    return ""
+
+
+def param_specs_for(params, rules: Rules, *, moe: bool = False):
+    """PartitionSpec tree for a parameter tree, from leaf names alone.
+
+    ``moe`` is accepted for call-site clarity; expert tensors are already
+    covered by the name patterns (``w_gate``/``w_val``/``w_out`` with a
+    leading expert dim that maps to the "experts" rule, None on these
+    meshes) and routers replicate.
+    """
+    del moe  # name patterns cover the expert layout
+    fsdp = rules.get("fsdp", "data")
+    tp = rules.get("mlp", "model")
+    vocab = rules.get("vocab", "model")
+
+    def spec(path, leaf) -> P:
+        name = _leaf_name(path)
+        rank = len(leaf.shape)
+        if rank < 2:
+            return P()
+        lead = [None] * (rank - 2)
+        if name in _IN_PROJ_NAMES:
+            return P(*lead, fsdp, tp)
+        if name in _OUT_PROJ_NAMES:
+            return P(*lead, tp, fsdp)
+        if name == "embed":
+            return P(*lead, vocab, fsdp)
+        if name == "lm_head":
+            return P(*lead, fsdp, vocab)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec, params)

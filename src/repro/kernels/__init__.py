@@ -11,6 +11,8 @@ Kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling) and run under
 
 from repro.kernels.ops import (
     crossbar_reduce,
+    crossbar_reduce_blocked,
+    crossbar_reduce_blocked_ref,
     crossbar_reduce_ref,
     embedding_bag,
     embedding_bag_ref,
@@ -22,6 +24,7 @@ from repro.kernels.ref import fused_decode_attention_ref
 
 __all__ = [
     "crossbar_reduce", "crossbar_reduce_ref", "crossbar_reduce_pallas",
+    "crossbar_reduce_blocked", "crossbar_reduce_blocked_ref",
     "embedding_bag", "embedding_bag_ref", "embedding_bag_pallas",
     "fused_decode_attention_pallas", "fused_decode_attention_ref",
 ]

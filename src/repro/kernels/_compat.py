@@ -1,0 +1,6 @@
+"""Version shims for jax.experimental.pallas.tpu API drift."""
+
+from jax.experimental.pallas import tpu as pltpu
+
+# renamed TPUCompilerParams -> CompilerParams across jax versions
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

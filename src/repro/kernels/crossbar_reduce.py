@@ -14,14 +14,28 @@ TPU-native re-expression of the ReCross crossbar datapath (DESIGN.md §2):
   * partial sums accumulate in a float32 VMEM scratch (the "ADC output
     register"), written back once per query.
 
-Grid: ``(batch, max_tiles)`` — batch-parallel, tile-sequential so the
-accumulator carries across the inner dimension.
+Two layouts (DESIGN.md §3):
+
+**Flat** — ``bitmaps (batch, max_tiles, tile_rows)``, grid
+``(batch, max_tiles)``: one query per grid row, one ``(1, tile_rows)``
+bitmap per tile DMA.
+
+**Query-blocked** — ``bitmaps (nb, max_tiles, q_block, tile_rows)`` with
+``tile_ids (nb, max_tiles)`` *shared by the whole block* (the host
+compiler deduplicates the block's tile set; correlated queries share hot
+tiles, so the union stays near one query's tile count).  Grid shrinks to
+``(batch // q_block, max_tiles)`` and the MAC becomes a
+``(q_block, tile_rows) @ (tile_rows, dim)`` matmul — one tile DMA is
+amortized over ``q_block`` queries and the MXU sees a real LHS instead of
+a single row.  The accumulator widens to a ``(q_block, dim)`` VMEM
+scratch (the multi-buffered "ADC output register": one live partial sum
+per in-flight query of the block), flushed once per block.
 
 VMEM budget per grid step: one ``(tile_rows, dim)`` tile + one
-``(1, dim)`` f32 accumulator + one ``(1, tile_rows)`` bitmap.  With the
-production defaults (tile_rows=64 padded to 128-friendly dims,
-dim ≤ 8192, bf16) that is ≤ 64·8192·2 B = 1 MiB ≪ VMEM; block shapes are
-asserted MXU-aligned (dim % 128 == 0, tile_rows % 8 == 0).
+``(q_block, dim)`` f32 accumulator + one ``(q_block, tile_rows)`` bitmap.
+With the production defaults (tile_rows=64, dim ≤ 8192, bf16, q_block ≤ 8)
+that is ≲ 1.3 MiB ≪ VMEM; block shapes are asserted MXU-aligned
+(dim % 128 == 0, tile_rows % 8 == 0).
 """
 
 from __future__ import annotations
@@ -33,6 +47,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._compat import CompilerParams
 
 
 def _kernel(
@@ -84,19 +100,89 @@ def _kernel(
         out_ref[...] = acc_ref[...].astype(out_ref.dtype)
 
 
+def _blocked_kernel(
+    pad_ids_ref,    # scalar-prefetch: (nb, max_tiles) int32, -1 padding
+    safe_ids_ref,   # scalar-prefetch: ids clipped to >= 0 (feeds index_map)
+    bitmap_ref,     # VMEM (1, 1, q_block, tile_rows)
+    tile_ref,       # VMEM (1, tile_rows, dim) — shared by the whole block
+    out_ref,        # VMEM (1, q_block, dim)
+    acc_ref,        # scratch VMEM (q_block, dim) float32 — one row per query
+    *,
+    max_tiles: int,
+    dynamic_switch: bool,
+):
+    n = pl.program_id(0)
+    s = pl.program_id(1)
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    bm = bitmap_ref[0, 0].astype(jnp.float32)         # (q_block, tile_rows)
+    q_block, tile_rows = bm.shape
+    count = jnp.sum(bm)
+
+    def mac_path():
+        tile = tile_ref[0].astype(jnp.float32)        # (tile_rows, dim)
+        return jnp.dot(bm, tile, preferred_element_type=jnp.float32)
+
+    def read_path():
+        # exactly one active wordline in the whole block: copy that row
+        # into the single active query's accumulator lane, no MXU issue
+        flat = bm.reshape(-1)
+        idx = jnp.argmax(flat).astype(jnp.int32)
+        row = jnp.remainder(idx, tile_rows)
+        q = idx // tile_rows
+        val = tile_ref[0, pl.ds(row, 1), :].astype(jnp.float32)   # (1, dim)
+        lane = (
+            lax.broadcasted_iota(jnp.int32, (q_block, 1), 0) == q
+        ).astype(jnp.float32)
+        return lane * val * (count > 0).astype(jnp.float32)
+
+    if dynamic_switch:
+        contrib = lax.cond(count <= 1.0, read_path, mac_path)
+    else:
+        contrib = mac_path()
+
+    valid = (pad_ids_ref[n, s] >= 0).astype(jnp.float32)
+    acc_ref[...] += contrib * valid
+
+    @pl.when(s == max_tiles - 1)
+    def _flush():
+        out_ref[...] = acc_ref[...][None].astype(out_ref.dtype)
+
+
 def crossbar_reduce_pallas(
     image: jax.Array,     # (num_tiles, tile_rows, dim)
-    tile_ids: jax.Array,  # (batch, max_tiles) int32, -1 padding
-    bitmaps: jax.Array,   # (batch, max_tiles, tile_rows)
+    tile_ids: jax.Array,  # (batch | nb, max_tiles) int32, -1 padding
+    bitmaps: jax.Array,   # flat (batch, max_tiles, tile_rows)
+                          # or blocked (nb, max_tiles, q_block, tile_rows)
     *,
     dynamic_switch: bool = True,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Raw pallas_call wrapper (no custom_vjp; see ops.crossbar_reduce)."""
+    """Raw pallas_call wrapper (no custom_vjp; see ops.crossbar_reduce).
+
+    Dispatches on the bitmap rank: 3-D bitmaps run the flat one-query-per-
+    grid-row kernel; 4-D bitmaps run the query-blocked kernel (``q_block``
+    queries share each tile DMA; see ``repro.core.reduction.
+    block_compiled_queries`` for the host-side block compiler).  The
+    blocked form returns ``(nb * q_block, dim)`` — block-major query
+    order, matching the flat batch order the block compiler consumed.
+    """
     num_tiles, tile_rows, dim = image.shape
     batch, max_tiles = tile_ids.shape
-    if bitmaps.shape != (batch, max_tiles, tile_rows):
+    if bitmaps.ndim == 4:
+        nb, s_blk, q_block, r = bitmaps.shape
+        if (nb, s_blk, r) != (batch, max_tiles, tile_rows):
+            raise ValueError(
+                f"blocked bitmaps {bitmaps.shape} inconsistent with "
+                f"tile_ids {tile_ids.shape} / tile_rows {tile_rows}"
+            )
+    elif bitmaps.shape != (batch, max_tiles, tile_rows):
         raise ValueError(f"bitmaps shape {bitmaps.shape} inconsistent")
+    else:
+        q_block = None
     if dim % 128 != 0:
         raise ValueError(f"dim={dim} must be a multiple of 128 (MXU lanes)")
     if tile_rows % 8 != 0:
@@ -108,27 +194,50 @@ def crossbar_reduce_pallas(
     safe_ids = jnp.maximum(tile_ids, 0).astype(jnp.int32)
     padded_ids = tile_ids.astype(jnp.int32)
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,  # padded_ids (mask), safe_ids (index map)
-        grid=(batch, max_tiles),
-        in_specs=[
-            pl.BlockSpec((1, 1, tile_rows), lambda b, s, pad, safe: (b, s, 0)),
-            pl.BlockSpec((1, tile_rows, dim), lambda b, s, pad, safe: (safe[b, s], 0, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, dim), lambda b, s, pad, safe: (b, 0)),
-        scratch_shapes=[pltpu.VMEM((1, dim), jnp.float32)],
-    )
+    if q_block is None:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,  # padded_ids (mask), safe_ids (index map)
+            grid=(batch, max_tiles),
+            in_specs=[
+                pl.BlockSpec((1, 1, tile_rows), lambda b, s, pad, safe: (b, s, 0)),
+                pl.BlockSpec((1, tile_rows, dim), lambda b, s, pad, safe: (safe[b, s], 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, dim), lambda b, s, pad, safe: (b, 0)),
+            scratch_shapes=[pltpu.VMEM((1, dim), jnp.float32)],
+        )
+        kernel = functools.partial(
+            _kernel, max_tiles=max_tiles, dynamic_switch=dynamic_switch
+        )
+        out_shape = jax.ShapeDtypeStruct((batch, dim), image.dtype)
+    else:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(batch, max_tiles),
+            in_specs=[
+                pl.BlockSpec(
+                    (1, 1, q_block, tile_rows), lambda n, s, pad, safe: (n, s, 0, 0)
+                ),
+                pl.BlockSpec(
+                    (1, tile_rows, dim), lambda n, s, pad, safe: (safe[n, s], 0, 0)
+                ),
+            ],
+            out_specs=pl.BlockSpec((1, q_block, dim), lambda n, s, pad, safe: (n, 0, 0)),
+            scratch_shapes=[pltpu.VMEM((q_block, dim), jnp.float32)],
+        )
+        kernel = functools.partial(
+            _blocked_kernel, max_tiles=max_tiles, dynamic_switch=dynamic_switch
+        )
+        out_shape = jax.ShapeDtypeStruct((batch, q_block, dim), image.dtype)
 
-    kernel = functools.partial(
-        _kernel, max_tiles=max_tiles, dynamic_switch=dynamic_switch
-    )
-
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((batch, dim), image.dtype),
-        compiler_params=pltpu.CompilerParams(
+        out_shape=out_shape,
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,
     )(padded_ids, safe_ids, bitmaps, image)
+    if q_block is not None:
+        out = out.reshape(batch * q_block, dim)
+    return out

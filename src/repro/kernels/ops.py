@@ -60,6 +60,51 @@ def _cr_bwd(dynamic_switch, res, g):
 crossbar_reduce.defvjp(_cr_fwd, _cr_bwd)
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def crossbar_reduce_blocked(image, tile_ids, bitmaps, dynamic_switch=True):
+    """Query-blocked reduction: out[n*q+k] = Σ_s bitmaps[n,s,k] @ image[tile_ids[n,s]].
+
+    Args:
+      image: (num_tiles, tile_rows, dim) permuted/replicated table image.
+      tile_ids: (nb, max_tiles) int32, -1 padded — the *block's* shared
+        tile schedule (see reduction.block_compiled_queries).
+      bitmaps: (nb, max_tiles, q_block, tile_rows) 0/1 activation masks.
+      dynamic_switch: READ path when the block's popcount <= 1 (§III-D).
+
+    Returns:
+      (nb * q_block, dim) reduced embeddings in block-major query order.
+    """
+    return crossbar_reduce_pallas(
+        image, tile_ids, bitmaps, dynamic_switch=dynamic_switch
+    )
+
+
+def _crb_fwd(image, tile_ids, bitmaps, dynamic_switch):
+    out = crossbar_reduce_pallas(
+        image, tile_ids, bitmaps, dynamic_switch=dynamic_switch
+    )
+    return out, (image, tile_ids, bitmaps)
+
+
+def _crb_bwd(dynamic_switch, res, g):
+    image, tile_ids, bitmaps = res
+    (num_tiles, tile_rows, dim), dtype = image.shape, image.dtype
+    nb, max_tiles, q_block, _ = bitmaps.shape
+    gq = g.reshape(nb, q_block, dim)
+    # d_image[t] += Σ_{n,s: ids[n,s]==t} Σ_k bitmaps[n,s,k]^T ⊗ g[n,k]
+    valid = (tile_ids >= 0)
+    outer = jnp.einsum(
+        "nskr,nkd->nsrd", bitmaps.astype(jnp.float32), gq.astype(jnp.float32)
+    ) * valid[..., None, None]
+    flat = outer.reshape(-1, tile_rows, dim)
+    ids = jnp.maximum(tile_ids, 0).reshape(-1)
+    d_image = jnp.zeros((num_tiles, tile_rows, dim), jnp.float32).at[ids].add(flat)
+    return d_image.astype(dtype), None, None
+
+
+crossbar_reduce_blocked.defvjp(_crb_fwd, _crb_bwd)
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=())
 def embedding_bag(table, indices):
     """out[b] = Σ_k table[indices[b,k]]  (-1 padded; Pallas forward)."""
@@ -89,4 +134,5 @@ embedding_bag.defvjp(_eb_fwd, _eb_bwd)
 
 # Re-export oracles so tests and docs have one import point.
 crossbar_reduce_ref = _ref.crossbar_reduce_ref
+crossbar_reduce_blocked_ref = _ref.crossbar_reduce_blocked_ref
 embedding_bag_ref = _ref.embedding_bag_ref

@@ -30,6 +30,24 @@ def crossbar_reduce_ref(
     return jax.vmap(per_query)(tile_ids, bitmaps.astype(image.dtype)).astype(image.dtype)
 
 
+def crossbar_reduce_blocked_ref(
+    image: jax.Array,     # (num_tiles, tile_rows, dim)
+    tile_ids: jax.Array,  # (nb, max_tiles) int32, -1 padding — per BLOCK
+    bitmaps: jax.Array,   # (nb, max_tiles, q_block, tile_rows) float 0/1
+) -> jax.Array:
+    """Oracle for the query-blocked kernel layout.
+
+    Expands the blocked form back to the flat per-query layout (every
+    query of a block shares the block's tile list) and reuses
+    :func:`crossbar_reduce_ref`.  Output is (nb * q_block, dim),
+    block-major query order.
+    """
+    nb, s, q_block, r = bitmaps.shape
+    flat_ids = jnp.repeat(tile_ids, q_block, axis=0)              # (nb*q, S)
+    flat_bms = bitmaps.transpose(0, 2, 1, 3).reshape(nb * q_block, s, r)
+    return crossbar_reduce_ref(image, flat_ids, flat_bms)
+
+
 def embedding_bag_ref(
     table: jax.Array,     # (rows, dim)
     indices: jax.Array,   # (batch, bag) int32, -1 padding

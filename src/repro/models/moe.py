@@ -177,6 +177,19 @@ def apply_moe_shardmap(
         y_loc, aux = apply_moe(pl, x_loc, moe, act, shard_buffers=False)
         return y_loc, jax.lax.pmean(aux, dp_axes[-1])
 
+    try:
+        shard_map = jax.shard_map
+        partial_kw = {"axis_names": manual}
+    except AttributeError:
+        # jax < 0.5 only has the experimental API (param spelled `auto`),
+        # and its partial-auto regions hard-abort XLA-CPU's SPMD
+        # partitioner when the manual body issues collectives
+        # (spmd_partitioner.cc IsManualSubgroup check, verified on 0.4.37).
+        # Fall back to the GSPMD auto path rather than risk a process
+        # abort — slower (buffer-sized all-reduces) but correct.
+        del auto
+        return apply_moe(p, x, moe, act)
+
     in_specs = (
         P(dp, None, None),        # x: batch over dp
         P(),                      # router replicated
@@ -185,9 +198,9 @@ def apply_moe_shardmap(
         P(None, None, dp),        # w_out (E, f, d/fsdp)
     )
     out_specs = (P(dp, None, None), P())
-    y, aux = jax.shard_map(
+    y, aux = shard_map(
         local, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-        axis_names=manual,
+        **partial_kw,
     )(x, p["router"], p["w_gate"], p["w_val"], p["w_out"])
     return y, aux
 

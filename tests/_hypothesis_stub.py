@@ -1,0 +1,69 @@
+"""Minimal deterministic stand-in for `hypothesis` when it is not installed.
+
+The real package is preferred (tests/conftest.py only installs this stub
+on ImportError).  The stub keeps the property-test *shape*: ``@given``
+re-runs the test over a deterministic sample sweep of each strategy
+(bounds, midpoints, and seeded pseudorandom draws), so the properties are
+still exercised across a spread of inputs — just without shrinking or
+adaptive search.
+"""
+
+from __future__ import annotations
+
+import functools
+import itertools
+
+import numpy as np
+
+_DEFAULT_EXAMPLES = 8
+
+
+class _Strategy:
+    def samples(self, n: int):  # pragma: no cover - interface
+        raise NotImplementedError
+
+
+class _Integers(_Strategy):
+    def __init__(self, lo: int, hi: int):
+        self.lo, self.hi = int(lo), int(hi)
+
+    def samples(self, n: int):
+        lo, hi = self.lo, self.hi
+        base = [lo, hi, (lo + hi) // 2, min(lo + 1, hi), max(hi - 1, lo)]
+        rng = np.random.default_rng(abs(hash((lo, hi))) % (2**32))
+        while len(base) < n:
+            base.append(int(rng.integers(lo, hi + 1)))
+        return base[:n]
+
+
+class strategies:  # noqa: N801 - mimics `hypothesis.strategies` module
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Integers:
+        return _Integers(min_value, max_value)
+
+
+def given(*strats: _Strategy):
+    def deco(fn):
+        n = getattr(fn, "_stub_max_examples", _DEFAULT_EXAMPLES)
+
+        # no functools.wraps: pytest must see a zero-arg signature, not the
+        # strategy parameters (it would try to resolve them as fixtures)
+        def wrapper():
+            cols = [s.samples(n) for s in strats]
+            for combo in itertools.islice(zip(*cols), n):
+                fn(*combo)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__module__ = fn.__module__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+
+    return deco
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, **_ignored):
+    def deco(fn):
+        fn._stub_max_examples = min(max_examples, _DEFAULT_EXAMPLES)
+        return fn
+
+    return deco

@@ -1,0 +1,13 @@
+"""Test bootstrap: fall back to the deterministic hypothesis stub when the
+real `hypothesis` package is absent (this container does not ship it; the
+CI workflow installs the real one when available)."""
+
+import sys
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import _hypothesis_stub
+
+    sys.modules["hypothesis"] = _hypothesis_stub
+    sys.modules["hypothesis.strategies"] = _hypothesis_stub.strategies

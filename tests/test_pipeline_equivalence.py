@@ -1,0 +1,297 @@
+"""Vectorized-pipeline equivalence: every vectorized offline stage must
+reproduce its retained ``_reference_*`` loop implementation exactly, and
+the query-blocked kernel must match the pure-jnp oracle in interpret mode
+for q_block ∈ {1, 4, 8} on ragged/padded batches."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    baselines,
+    build_cooccurrence,
+    block_compiled_queries,
+    compile_activations,
+    compile_queries,
+    merge_graphs,
+    query_tile_bitmaps,
+    simulate_batch,
+    simulate_cpu_baseline,
+)
+from repro.core.cooccurrence import _reference_build_cooccurrence
+from repro.core.mapping import _reference_query_tile_bitmaps
+from repro.core.reduction import reduce_dense_oracle
+from repro.core.simulator import _reference_simulate_batch
+from repro.data import zipf_queries
+from repro.kernels import (
+    crossbar_reduce_blocked,
+    crossbar_reduce_blocked_ref,
+)
+
+
+def _trace(rows, n, seed, bag=6.0):
+    return zipf_queries(rows, n, bag, seed=seed)
+
+
+def _layout(rows, qs, group_size=16, dim=128, batch_size=64):
+    g = build_cooccurrence(qs, rows)
+    layout, _ = baselines.recross_pipeline(
+        g, qs, group_size=group_size, dim=dim, batch_size=batch_size
+    )
+    return layout
+
+
+def _assert_graphs_equal(a, b):
+    assert a.num_rows == b.num_rows
+    assert a.num_queries == b.num_queries
+    np.testing.assert_array_equal(a.freq, b.freq)
+    np.testing.assert_array_equal(a.indptr, b.indptr)
+    np.testing.assert_array_equal(a.indices, b.indices)
+    np.testing.assert_array_equal(a.weights, b.weights)
+
+
+# ------------------------------------------------------ build_cooccurrence --
+
+
+@given(st.integers(0, 1000), st.integers(16, 300), st.integers(8, 120))
+@settings(max_examples=12, deadline=None)
+def test_cooccurrence_matches_reference(seed, rows, n_queries):
+    qs = _trace(rows, n_queries, seed)
+    _assert_graphs_equal(
+        build_cooccurrence(qs, rows), _reference_build_cooccurrence(qs, rows)
+    )
+
+
+def test_cooccurrence_matches_reference_with_pair_cap():
+    qs = _trace(128, 60, seed=3, bag=12.0)
+    for cap in (0, 1, 5, 50):
+        _assert_graphs_equal(
+            build_cooccurrence(qs, 128, max_pairs_per_query=cap),
+            _reference_build_cooccurrence(qs, 128, max_pairs_per_query=cap),
+        )
+
+
+def test_cooccurrence_empty_and_degenerate_queries():
+    cases = [[], [[]], [[], [3], [3, 3, 3]], [[0], [1], [2]]]
+    for qs in cases:
+        _assert_graphs_equal(
+            build_cooccurrence(qs, 8), _reference_build_cooccurrence(qs, 8)
+        )
+
+
+def test_cooccurrence_rejects_out_of_range():
+    with pytest.raises(ValueError):
+        build_cooccurrence([[0, 9]], 8)
+    with pytest.raises(ValueError):
+        build_cooccurrence([[-1]], 8)
+
+
+def test_merge_graphs_matches_joint_build():
+    qa = _trace(96, 40, seed=1)
+    qb = _trace(96, 30, seed=2)
+    merged = merge_graphs(build_cooccurrence(qa, 96), build_cooccurrence(qb, 96))
+    joint = build_cooccurrence(list(qa) + list(qb), 96)
+    _assert_graphs_equal(merged, joint)
+
+
+# ------------------------------------------------------ query_tile_bitmaps --
+
+
+@given(st.integers(0, 500), st.integers(32, 256))
+@settings(max_examples=10, deadline=None)
+def test_bitmaps_match_reference(seed, rows):
+    hist = _trace(rows, 48, seed)
+    ev = _trace(rows, 32, seed + 1)
+    layout = _layout(rows, hist)
+    for balance in (True, False):
+        bm_v, ct_v = query_tile_bitmaps(layout, ev, balance_replicas=balance)
+        bm_r, ct_r = _reference_query_tile_bitmaps(layout, ev, balance_replicas=balance)
+        np.testing.assert_array_equal(bm_v, bm_r)
+        np.testing.assert_array_equal(ct_v, ct_r)
+
+
+def test_bitmaps_round_robin_state_is_batch_order():
+    """The vectorized round robin must reproduce the loop's cross-query
+    counter: with >1 copies, consecutive queries touching the same group
+    land on different replicas."""
+    rows = 64
+    hist = [[0]] * 64
+    g = build_cooccurrence(hist, rows)
+    layout, _ = baselines.recross_pipeline(
+        g, hist, group_size=16, dim=8, batch_size=64
+    )
+    ev = [[0], [0, 1], [0], [1]]
+    bm_v, ct_v = query_tile_bitmaps(layout, ev)
+    bm_r, ct_r = _reference_query_tile_bitmaps(layout, ev)
+    np.testing.assert_array_equal(bm_v, bm_r)
+    np.testing.assert_array_equal(ct_v, ct_r)
+
+
+def test_activation_set_consistent_with_dense():
+    rows = 128
+    hist = _trace(rows, 48, seed=9)
+    ev = _trace(rows, 24, seed=10)
+    layout = _layout(rows, hist)
+    acts = compile_activations(layout, ev)
+    _, counts = query_tile_bitmaps(layout, ev)
+    q, t = np.nonzero(counts)
+    np.testing.assert_array_equal(acts.act_qid, q)
+    np.testing.assert_array_equal(acts.act_tile, t)
+    np.testing.assert_array_equal(acts.act_rows, counts[q, t])
+    np.testing.assert_array_equal(
+        acts.per_query_tiles(), (counts > 0).sum(axis=1)
+    )
+
+
+# ----------------------------------------------------------- simulate_batch --
+
+
+@given(st.integers(0, 300))
+@settings(max_examples=8, deadline=None)
+def test_simulate_batch_matches_reference_bitexact(seed):
+    rows = 192
+    hist = _trace(rows, 48, seed, bag=5.0)
+    ev = _trace(rows, 40, seed + 7, bag=5.0)
+    layout = _layout(rows, hist)
+    for dyn in (True, False):
+        for bal in (True, False):
+            v = simulate_batch(layout, ev, dynamic_switching=dyn, balance_replicas=bal)
+            r = _reference_simulate_batch(
+                layout, ev, dynamic_switching=dyn, balance_replicas=bal
+            )
+            assert v.activations == r.activations
+            assert v.read_activations == r.read_activations
+            assert v.mac_activations == r.mac_activations
+            assert v.completion_time_ns == r.completion_time_ns
+            assert v.energy_pj == r.energy_pj
+            assert v.stall_ns == r.stall_ns
+            assert v.mean_active_rows == r.mean_active_rows
+            np.testing.assert_array_equal(v.per_query_tiles, r.per_query_tiles)
+
+
+def test_simulate_batch_multiread_threshold_matches_reference():
+    rows = 128
+    hist = _trace(rows, 32, seed=4, bag=4.0)
+    ev = _trace(rows, 32, seed=5, bag=4.0)
+    layout = _layout(rows, hist)
+    for thr in (2, 4):
+        v = simulate_batch(layout, ev, switch_threshold=thr)
+        r = _reference_simulate_batch(layout, ev, switch_threshold=thr)
+        assert v.read_activations == r.read_activations
+        assert v.energy_pj == r.energy_pj
+
+
+def test_simulate_batch_empty_batch():
+    layout = _layout(64, _trace(64, 16, seed=0))
+    v = simulate_batch(layout, [])
+    assert v.activations == 0 and v.completion_time_ns == 0.0
+
+
+def test_cpu_baseline_reports_true_mean_rows():
+    qs = [[0, 1, 2], [3, 3], [4]]
+    rep = simulate_cpu_baseline(qs)
+    # unique rows per query: 3, 1, 1 -> mean 5/3
+    assert rep.mean_active_rows == pytest.approx(5 / 3)
+    assert rep.activations == 5
+
+
+# ----------------------------------------------------- query-blocked kernel --
+
+
+def _blocked_setup(seed, batch, dim=128):
+    rows = 256
+    hist = _trace(rows, 64, seed)
+    ev = _trace(rows, batch, seed + 1)
+    layout = _layout(rows, hist, dim=dim)
+    table = np.random.default_rng(seed).normal(size=(rows, dim)).astype(np.float32)
+    image = jnp.asarray(
+        layout.build_image(table).reshape(layout.num_tiles, layout.tile_rows, dim)
+    )
+    cq = compile_queries(layout, ev)
+    ref = reduce_dense_oracle(jnp.asarray(table), ev)
+    return image, cq, ref
+
+
+@pytest.mark.parametrize("q_block", [1, 4, 8])
+@pytest.mark.parametrize("batch", [8, 30])   # 30: ragged (pads to q_block)
+def test_blocked_kernel_matches_ref(q_block, batch):
+    image, cq, ref = _blocked_setup(11, batch)
+    bq = block_compiled_queries(cq, q_block)
+    assert bq.num_blocks == -(-batch // q_block)
+    out = crossbar_reduce_blocked(image, bq.tile_ids, bq.bitmaps)[:bq.batch]
+    oracle = crossbar_reduce_blocked_ref(image, bq.tile_ids, bq.bitmaps)[:bq.batch]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+
+@pytest.mark.parametrize("q_block", [1, 4])
+def test_blocked_kernel_no_dynamic_switch_same_values(q_block):
+    from repro.kernels.crossbar_reduce import crossbar_reduce_pallas
+
+    image, cq, _ = _blocked_setup(13, 16)
+    bq = block_compiled_queries(cq, q_block)
+    a = crossbar_reduce_pallas(image, bq.tile_ids, bq.bitmaps, dynamic_switch=True)
+    b = crossbar_reduce_pallas(image, bq.tile_ids, bq.bitmaps, dynamic_switch=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_blocked_kernel_grad_matches_ref():
+    image, cq, _ = _blocked_setup(17, 12)
+    bq = block_compiled_queries(cq, 4)
+
+    gk = jax.grad(
+        lambda im: (crossbar_reduce_blocked(im, bq.tile_ids, bq.bitmaps) ** 2).sum()
+    )(image)
+    gr = jax.grad(
+        lambda im: (crossbar_reduce_blocked_ref(im, bq.tile_ids, bq.bitmaps) ** 2).sum()
+    )(image)
+    np.testing.assert_allclose(np.asarray(gk), np.asarray(gr), atol=1e-3, rtol=1e-3)
+
+
+def test_blocked_kernel_bf16():
+    image, cq, ref = _blocked_setup(19, 16)
+    image = image.astype(jnp.bfloat16)
+    bq = block_compiled_queries(cq, 4)
+    out = crossbar_reduce_blocked(image, bq.tile_ids, bq.bitmaps)[:bq.batch]
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=0.3, rtol=1e-2
+    )
+
+
+def test_block_compiler_dedups_shared_tiles():
+    """Correlated queries share tiles, so the block union must be smaller
+    than the concatenation of per-query tile lists."""
+    image, cq, _ = _blocked_setup(23, 32)
+    bq = block_compiled_queries(cq, 8)
+    flat_cells = cq.tile_ids.shape[0] * cq.tile_ids.shape[1]
+    blocked_cells = bq.num_blocks * bq.max_tiles
+    assert blocked_cells < flat_cells
+
+
+def test_block_granular_replica_balancing():
+    """replica_block=q_block must never widen the block tile union versus
+    per-query round robin (identical replicas collapse to one tile) and
+    must leave the numerics unchanged."""
+    rows, dim, batch, qb = 512, 128, 64, 8
+    hist = _trace(rows, 128, seed=31)
+    ev = _trace(rows, batch, seed=32)
+    g = build_cooccurrence(hist, rows)
+    layout, _ = baselines.recross_pipeline(
+        g, hist, group_size=16, dim=dim, batch_size=256
+    )
+    table = np.random.default_rng(0).normal(size=(rows, dim)).astype(np.float32)
+    image = jnp.asarray(
+        layout.build_image(table).reshape(layout.num_tiles, layout.tile_rows, dim)
+    )
+    bq_perq = block_compiled_queries(compile_queries(layout, ev), qb)
+    bq_blk = block_compiled_queries(
+        compile_queries(layout, ev, replica_block=qb), qb
+    )
+    union_perq = int((np.asarray(bq_perq.tile_ids) >= 0).sum())
+    union_blk = int((np.asarray(bq_blk.tile_ids) >= 0).sum())
+    assert union_blk <= union_perq
+    ref = reduce_dense_oracle(jnp.asarray(table), ev)
+    out = crossbar_reduce_blocked(image, bq_blk.tile_ids, bq_blk.bitmaps)[:batch]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
