@@ -20,6 +20,7 @@ from benchmarks import (
     fig11_cpu_gpu,
     kernel_bench,
     pipeline_bench,
+    serving_bench,
 )
 from benchmarks.common import emit
 
@@ -32,6 +33,7 @@ MODULES = {
     "kernels": kernel_bench,
     "multiread": beyond_multiread,
     "pipeline": pipeline_bench,
+    "serving": serving_bench,
 }
 
 

@@ -1,0 +1,232 @@
+"""Sharded-serving benchmark → BENCH_serving.json.
+
+Builds the full-scale offline pipeline (same defaults as the pipeline
+bench: 100k rows / 100k-query history, group_size 64), then serves a
+``blocked_q8`` batch through the sharded datapath at shard counts
+{1, 2, 4} and records the sharded path's observability contract:
+
+  * per-shard grid cells (nb × padded per-shard union width) vs the
+    single-device blocked baseline — the acceptance invariant is that
+    shard-local unions never regress the global union;
+  * cross-shard combine bytes (output-sized ring accounting);
+  * wall time vs the 1-shard baseline (interpret mode off-TPU: a
+    regression signal, not TPU performance — the grid-cell and byte
+    numbers are the hardware-independent ones).
+
+Plus a two-table fused section exercising the multi-table path end to
+end through :class:`repro.serve.sharded.ShardedEmbeddingServer`.
+
+Runs under shard_map when the host presents enough devices (CI forces
+``--xla_force_host_platform_device_count=4``), single-device emulation
+otherwise; numerics are identical either way.
+
+Env knobs: ``RECROSS_SERVING_ROWS`` / ``RECROSS_SERVING_HISTORY``
+(defaults 100_000), ``RECROSS_SERVING_BATCH`` (32),
+``RECROSS_SERVING_SHARDS`` ("1,2,4").
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core import (
+    block_compiled_queries,
+    build_cooccurrence,
+    build_layout,
+    compile_queries,
+    correlation_aware_grouping,
+    plan_replication,
+    shard_block_queries,
+)
+from repro.data import zipf_queries
+from repro.dist import build_fused_image, plan_shards
+from repro.kernels import (
+    combine_bytes_per_batch,
+    crossbar_reduce_blocked,
+    crossbar_reduce_sharded,
+)
+
+JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serving.json")
+
+NUM_ROWS = int(os.environ.get("RECROSS_SERVING_ROWS", 100_000))
+NUM_HISTORY = int(os.environ.get("RECROSS_SERVING_HISTORY", 100_000))
+SERVE_BATCH = int(os.environ.get("RECROSS_SERVING_BATCH", 32))
+SHARD_COUNTS = tuple(
+    int(s) for s in os.environ.get("RECROSS_SERVING_SHARDS", "1,2,4").split(",")
+)
+MEAN_BAG = float(os.environ.get("RECROSS_PIPELINE_MEAN_BAG", 41.32))
+GROUP_SIZE = 64
+Q_BLOCK = 8
+DIM = 128
+BATCH_SIZE = 256
+
+
+def _mesh_for(num_shards: int):
+    if num_shards > 1 and len(jax.devices()) >= num_shards:
+        return jax.make_mesh((1, num_shards), ("data", "model"))
+    return None
+
+
+def run() -> list:
+    record: dict = {
+        "config": {
+            "num_rows": NUM_ROWS,
+            "history_queries": NUM_HISTORY,
+            "serve_batch": SERVE_BATCH,
+            "q_block": Q_BLOCK,
+            "group_size": GROUP_SIZE,
+            "dim": DIM,
+            "mean_bag": MEAN_BAG,
+            "shard_counts": list(SHARD_COUNTS),
+            "devices": len(jax.devices()),
+        },
+    }
+    rows_out = []
+
+    # ---- offline pipeline (shared by every shard count) -----------------
+    t0 = time.perf_counter()
+    hist = zipf_queries(NUM_ROWS, NUM_HISTORY, MEAN_BAG, seed=0,
+                        num_baskets=max(256, NUM_HISTORY // 32))
+    graph = build_cooccurrence(hist, NUM_ROWS)
+    grouping = correlation_aware_grouping(graph, GROUP_SIZE)
+    plan = plan_replication(grouping, graph.freq, BATCH_SIZE)
+    layout = build_layout(grouping, plan, DIM)
+    gfreq = grouping.group_freq(graph.freq)
+    record["offline"] = {
+        "seconds": time.perf_counter() - t0,
+        "num_groups": grouping.num_groups,
+        "num_tiles": layout.num_tiles,
+    }
+
+    table = np.random.default_rng(0).normal(size=(NUM_ROWS, DIM)).astype(np.float32)
+    fused = build_fused_image([layout], [table])
+    # serve queries from the history's own basket distribution (same
+    # workload as the pipeline bench's kernel section, so the grid-cell
+    # numbers are directly comparable to its blocked_q8 baseline)
+    ev = hist[:SERVE_BATCH]
+    cq = compile_queries(layout, ev, replica_block=Q_BLOCK)
+
+    # ---- single-device blocked baseline ---------------------------------
+    bq = block_compiled_queries(cq, Q_BLOCK)
+    image_j = jnp.asarray(fused)
+    out_base = crossbar_reduce_blocked(image_j, bq.tile_ids, bq.bitmaps)  # warm
+    t0 = time.perf_counter()
+    crossbar_reduce_blocked(image_j, bq.tile_ids, bq.bitmaps).block_until_ready()
+    base_us = (time.perf_counter() - t0) * 1e6
+    base_cells = int(bq.num_blocks * bq.max_tiles)
+    record["single_device_baseline"] = {
+        "blocked_q8_grid_cells": base_cells,
+        "wall_us": base_us,
+    }
+
+    # ---- sharded path per shard count -----------------------------------
+    shards_rec = {}
+    for S in SHARD_COUNTS:
+        sp = plan_shards([layout], [plan], S, group_freqs=[gfreq])
+        sbq = shard_block_queries(cq, sp, Q_BLOCK)
+        images = jnp.asarray(sp.build_shard_images(fused))
+        mesh = _mesh_for(S)
+        kw = dict(mesh=mesh, combine_chunks=2)
+        out = crossbar_reduce_sharded(images, sbq.tile_ids, sbq.bitmaps, **kw)  # warm
+        np.testing.assert_allclose(
+            np.asarray(out[: sbq.batch]), np.asarray(out_base[: bq.batch]),
+            atol=1e-4,
+        )
+        t0 = time.perf_counter()
+        crossbar_reduce_sharded(
+            images, sbq.tile_ids, sbq.bitmaps, **kw
+        ).block_until_ready()
+        wall_us = (time.perf_counter() - t0) * 1e6
+        cells = sbq.grid_cells_per_shard()
+        shards_rec[str(S)] = {
+            "grid_cells_per_shard": cells,
+            "max_shard_width": int(np.max(sbq.shard_widths, initial=0)),
+            "shard_widths": sbq.shard_widths.tolist(),
+            "replicated_tiles": sp.replicated_tiles,
+            "local_num_tiles": sp.local_num_tiles.tolist(),
+            "combine_bytes": combine_bytes_per_batch(
+                sbq.num_blocks * Q_BLOCK, DIM, S
+            ),
+            "wall_us": wall_us,
+            "mode": "shard_map" if mesh is not None else "emulated",
+        }
+        rows_out.append({
+            "name": f"serving_shards{S}",
+            "us_per_call": f"{wall_us:.0f}",
+            "derived": (
+                f"cells/shard={cells}(base={base_cells});"
+                f"combine_bytes={shards_rec[str(S)]['combine_bytes']}"
+            ),
+        })
+    # wall ratio vs the true 1-shard run (only when 1 was benchmarked)
+    one = shards_rec.get("1")
+    for r in shards_rec.values():
+        r["wall_vs_1shard"] = r["wall_us"] / one["wall_us"] if one else None
+    record["shards"] = shards_rec
+    worst = max(r["grid_cells_per_shard"] for r in shards_rec.values())
+    record["meets_grid_target"] = bool(worst <= base_cells)
+
+    # ---- multi-table fused serving (driver end-to-end) ------------------
+    mt_rows = max(NUM_ROWS // 8, 256)
+    mt_hist = max(NUM_HISTORY // 8, 256)
+    rng = np.random.default_rng(3)
+    tables = {
+        "t0": rng.normal(size=(mt_rows, DIM)).astype(np.float32),
+        "t1": rng.normal(size=(mt_rows, DIM)).astype(np.float32),
+    }
+    histories = {
+        name: zipf_queries(mt_rows, mt_hist, MEAN_BAG, seed=i,
+                           num_baskets=max(256, mt_hist // 32))
+        for i, name in enumerate(tables)
+    }
+    S = max(s for s in SHARD_COUNTS)
+    from repro.serve import ShardedEmbeddingServer
+
+    server = ShardedEmbeddingServer(
+        tables, histories, num_shards=S, mesh=_mesh_for(S),
+        q_block=Q_BLOCK, group_size=GROUP_SIZE, batch_size=SERVE_BATCH,
+    )
+    stream = zipf_queries(mt_rows, SERVE_BATCH * 2, MEAN_BAG, seed=11,
+                          num_baskets=max(256, mt_hist // 32))
+    names = list(tables)
+    for i, q in enumerate(stream):
+        server.submit(names[i % 2], q)
+    server.flush()
+    record["multi_table"] = server.report()
+    rows_out.append({
+        "name": "serving_multi_table",
+        "us_per_call": f"{server.stats.wall_s * 1e6:.0f}",
+        "derived": (
+            f"tables=2;shards={S};"
+            f"cells/shard/flush={server.stats.max_grid_cells_per_flush};"
+            f"combine_bytes={server.stats.combine_bytes}"
+        ),
+    })
+
+    with open(JSON_PATH, "w") as f:
+        json.dump(record, f, indent=1, default=str)
+
+    rows_out.append({
+        "name": "serving_grid_target",
+        "us_per_call": "",
+        "derived": (
+            f"worst_cells/shard={worst}<=base={base_cells}:"
+            f"{record['meets_grid_target']};json=BENCH_serving.json"
+        ),
+    })
+    return rows_out
+
+
+def main():
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

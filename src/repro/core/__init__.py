@@ -45,10 +45,14 @@ from repro.core.simulator import (
 from repro.core.reduction import (
     BlockedQueries,
     CompiledQueries,
+    ShardedBlockedQueries,
     block_compiled_queries,
     compile_queries,
+    concat_compiled_queries,
+    offset_compiled_queries,
     reduce_dense_oracle,
     reduce_via_layout,
+    shard_block_queries,
 )
 from repro.core import baselines
 
@@ -65,7 +69,9 @@ __all__ = [
     "ReRAMCostModel", "TPUCostModel", "DEFAULT_RERAM", "DEFAULT_TPU",
     "SimReport", "simulate_batch", "simulate_cpu_baseline",
     "simulate_nmars_baseline",
-    "BlockedQueries", "CompiledQueries", "block_compiled_queries",
-    "compile_queries", "reduce_dense_oracle", "reduce_via_layout",
+    "BlockedQueries", "CompiledQueries", "ShardedBlockedQueries",
+    "block_compiled_queries", "compile_queries", "concat_compiled_queries",
+    "offset_compiled_queries", "reduce_dense_oracle", "reduce_via_layout",
+    "shard_block_queries",
     "baselines",
 ]

@@ -5,7 +5,7 @@ crossbar height, 64 in the paper) such that rows that co-occur in queries
 land in the same group.  A query then activates few groups (crossbars /
 VMEM tiles) instead of scattering across many.
 
-The implementation follows Algorithm 1 line-for-line, with two
+The implementation follows Algorithm 1 line-for-line, with three
 production-grade refinements that do not change the algorithm's semantics:
 
   * the candidate list is a lazy max-heap keyed by co-occurrence weight
@@ -13,9 +13,21 @@ production-grade refinements that do not change the algorithm's semantics:
     scan; the heap makes the whole pass O(E log E) instead of O(V·E));
     neighbor expansion reads the graph's CSR slices directly
     (:meth:`CoOccurrenceGraph.neighbor_arrays`), no per-row dicts,
+  * candidate weights live in a flat array indexed by row id (bulk
+    scatter-add per pick) and each pick pushes ONE heap entry — the
+    whole neighbor batch, pre-sorted by ``(-weight, id)`` with NumPy and
+    advanced lazily on pop.  Most pushed candidates are never popped
+    (a 64-row group consumes 64 picks out of thousands of candidate
+    updates), so the batch heap turns ~E per-edge ``heappush`` calls
+    into ~V batch pushes,
   * rows with no ungrouped neighbours left fall back to frequency order,
     which is what "foreach embedding in sorted(embeddingList)" yields
     anyway once candidateList is empty.
+
+``_reference_correlation_aware_grouping`` retains the original dict+
+per-edge-push loop as the equivalence oracle; the batch-heap pass is
+bit-identical (pop order is the same total order on ``(-weight, id)``,
+see the invariant note on :func:`correlation_aware_grouping`).
 """
 
 from __future__ import annotations
@@ -78,16 +90,127 @@ def correlation_aware_grouping(
 
     order = graph.nodes_by_frequency()  # sorted(embeddingList)
 
+    # Accumulated co-occurrence into the *current group*, mirroring
+    # ComputeWeight(embedding, currentEmbedding) over the merged list —
+    # array-backed so each pick is one bulk scatter-add, reset between
+    # seeds by zeroing only the touched ids.
+    weight_into = np.zeros(n, dtype=np.int64)
+    # candidate priorities pack into ONE int64: key = id - weight * SCALE.
+    # Ascending key order is (weight descending, id ascending) — exactly
+    # the (-weight, id) pop order of the per-edge heap — so a batch is a
+    # single np.sort and heap comparisons touch plain ints, no tuples.
+    SCALE = 1 << max(n.bit_length(), 1)
+    # bytearray mirror of `grouped` for O(50ns) scalar reads in the pop
+    # loop (numpy bool scalars cost ~3x more); the numpy array serves the
+    # vectorized live-neighbor filter.
+    grouped_b = bytearray(n)
+    indptr = graph.indptr.tolist()
+    indices, weights = graph.indices, graph.weights
+    heappush, heappop, heapreplace = (
+        heapq.heappush, heapq.heappop, heapq.heapreplace
+    )
+
+    for seed in order.tolist():
+        if grouped_b[seed]:  # line 3-5: skip already grouped
+            continue
+        current: List[int] = [seed]
+        grouped_b[seed] = 1
+        grouped[seed] = True
+
+        # candidateList as a lazy max-heap of sorted neighbor BATCHES.
+        # Each entry is (key, seq, cursor, keys): the head of a sorted
+        # packed-key batch plus the array to advance through on pop.
+        # `seq` is a unique tiebreaker so heapq never compares the array
+        # payloads; entries with equal keys are the same candidate at the
+        # same weight, so their relative order cannot change the pick
+        # sequence.  Pop order over distinct (weight, id) is the same
+        # total order the per-edge heap yields — bit-identical groups.
+        heap: List[tuple] = []
+        touched: List[np.ndarray] = []
+        seq = 0
+
+        row = seed
+        while len(current) < group_size:
+            # ---- push_neighbors(row): one batch heap entry per pick.
+            # (The reference loop also pushes after its final pick; that
+            # batch is never popped, so skipping it here cannot change
+            # the pick sequence — weights are per-seed scoped.) ----
+            lo, hi = indptr[row], indptr[row + 1]
+            if hi > lo:
+                nbr_ids = indices[lo:hi]
+                live = ~grouped[nbr_ids]
+                ids = nbr_ids[live]
+                if ids.size:
+                    np.add.at(weight_into, ids, weights[lo:hi][live])
+                    touched.append(ids)
+                    keys = np.sort(ids - weight_into[ids] * SCALE)
+                    heappush(heap, (int(keys[0]), seq, 0, keys))
+                    seq += 1
+
+            # ---- pop the max-weight candidate (lazy deletion of stale
+            # entries): the heap head is the globally best *pushed*
+            # (weight, id); skip it unless it still matches the
+            # candidate's current weight ----
+            best = None
+            while heap:
+                key, s, k, keys = heap[0]
+                k += 1
+                if k < keys.size:
+                    heapreplace(heap, (int(keys[k]), s, k, keys))
+                else:
+                    heappop(heap)
+                # decode key = j - w*SCALE (j in [0, SCALE))
+                w, j = divmod(-key, SCALE)
+                if j:
+                    w += 1
+                    j = SCALE - j
+                if not grouped_b[j] and weight_into[j] == w:
+                    best = j
+                    break
+            if best is None:
+                break  # no correlated candidates left: group stays short
+            current.append(best)
+            grouped_b[best] = 1
+            grouped[best] = True
+            row = best  # line 17: merge neighbours of the pick
+
+        groups.append(current)
+        if touched:
+            weight_into[np.concatenate(touched)] = 0
+
+    # Compact short groups: Algorithm 1 leaves the trailing group short;
+    # greedy filling can also produce mid-stream short groups when a
+    # connected component is exhausted. Pack those rows together so that
+    # only the final group may be short (keeps the crossbar image dense).
+    groups = _repack_short_groups(groups, group_size)
+
+    group_of = np.full(n, -1, dtype=np.int32)
+    slot_of = np.full(n, -1, dtype=np.int32)
+    for g, rows in enumerate(groups):
+        for s, r in enumerate(rows):
+            group_of[r] = g
+            slot_of[r] = s
+    assert (group_of >= 0).all(), "every row must be grouped"
+    return Grouping(groups=groups, group_of=group_of, slot_of=slot_of, group_size=group_size)
+
+
+def _reference_correlation_aware_grouping(
+    graph: CoOccurrenceGraph, group_size: int
+) -> Grouping:
+    """Original dict-backed per-edge-push loop (equivalence oracle)."""
+    if group_size < 1:
+        raise ValueError("group_size must be >= 1")
+    n = graph.num_rows
+    grouped = np.zeros(n, dtype=bool)
+    groups: List[List[int]] = []
+    order = graph.nodes_by_frequency()
+
     for seed in order:
         seed = int(seed)
-        if grouped[seed]:  # line 3-5: skip already grouped
+        if grouped[seed]:
             continue
         current: List[int] = [seed]
         grouped[seed] = True
-
-        # candidateList as a lazy max-heap of (-weight, row). Weights are
-        # accumulated co-occurrence into the *current group*, mirroring
-        # ComputeWeight(embedding, currentEmbedding) over the merged list.
         weight_into: Dict[int, int] = {}
         heap: List[tuple] = []
 
@@ -104,7 +227,6 @@ def correlation_aware_grouping(
         push_neighbors(seed)
 
         while len(current) < group_size:
-            # pop the max-weight candidate (lazy deletion of stale entries)
             best = None
             while heap:
                 negw, j = heapq.heappop(heap)
@@ -113,20 +235,15 @@ def correlation_aware_grouping(
                 best = j
                 break
             if best is None:
-                break  # no correlated candidates left: group stays short
+                break
             current.append(best)
             grouped[best] = True
             weight_into.pop(best, None)
-            push_neighbors(best)  # line 17: merge neighbours of the pick
+            push_neighbors(best)
 
         groups.append(current)
 
-    # Compact short groups: Algorithm 1 leaves the trailing group short;
-    # greedy filling can also produce mid-stream short groups when a
-    # connected component is exhausted. Pack those rows together so that
-    # only the final group may be short (keeps the crossbar image dense).
     groups = _repack_short_groups(groups, group_size)
-
     group_of = np.full(n, -1, dtype=np.int32)
     slot_of = np.full(n, -1, dtype=np.int32)
     for g, rows in enumerate(groups):

@@ -100,10 +100,7 @@ def compile_queries(
     batch = acts.batch
     per_q = acts.per_query_tiles()
     width = int(per_q.max()) if per_q.size else 1
-    if max_tiles is None:
-        max_tiles = max(8, int(np.ceil(width / 8)) * 8)
-    if width > max_tiles:
-        raise ValueError(f"query touches {width} tiles > max_tiles={max_tiles}")
+    max_tiles = _padded_width(width, max_tiles, "query")
 
     from repro.core.cooccurrence import segment_ranks
 
@@ -121,6 +118,37 @@ def compile_queries(
         bitmaps=jnp.asarray(bitmaps, dtype=dtype),
         max_tiles=max_tiles,
     )
+
+
+def _pad_to_blocks(
+    ids: np.ndarray, bms: np.ndarray, q_block: int
+) -> tuple[np.ndarray, np.ndarray, int]:
+    """Zero/-1-pads a flat compiled batch up to a q_block multiple.
+
+    Shared by every block compiler (flat and sharded) so the padding
+    rule — and therefore output row alignment — can never diverge.
+    """
+    batch, s_flat = ids.shape
+    tile_rows = bms.shape[-1]
+    nb = -(-batch // q_block) if batch else 0
+    pad = nb * q_block - batch
+    if pad:
+        ids = np.concatenate([ids, np.full((pad, s_flat), -1, ids.dtype)])
+        bms = np.concatenate([bms, np.zeros((pad, s_flat, tile_rows), bms.dtype)])
+    return ids, bms, nb
+
+
+def _padded_width(width: int, max_tiles: int | None, what: str) -> int:
+    """Union width → tile-axis allocation: sublane-friendly multiple of 8.
+
+    One definition for every block compiler — the per-shard-grid ≤
+    flat-grid invariant relies on both rounding widths identically.
+    """
+    if max_tiles is None:
+        max_tiles = max(8, int(np.ceil(width / 8)) * 8)
+    if width > max_tiles:
+        raise ValueError(f"{what} touches {width} tiles > max_tiles={max_tiles}")
+    return max_tiles
 
 
 def block_compiled_queries(
@@ -143,15 +171,11 @@ def block_compiled_queries(
     """
     if q_block < 1:
         raise ValueError("q_block must be >= 1")
-    ids = np.asarray(cq.tile_ids)
-    bms = np.asarray(cq.bitmaps)
-    batch, s_flat = ids.shape
+    ids, bms, nb = _pad_to_blocks(
+        np.asarray(cq.tile_ids), np.asarray(cq.bitmaps), q_block
+    )
+    batch = cq.tile_ids.shape[0]
     tile_rows = bms.shape[-1]
-    nb = -(-batch // q_block) if batch else 0
-    pad = nb * q_block - batch
-    if pad:
-        ids = np.concatenate([ids, np.full((pad, s_flat), -1, ids.dtype)])
-        bms = np.concatenate([bms, np.zeros((pad, s_flat, tile_rows), bms.dtype)])
 
     vq, vs = np.nonzero(ids >= 0)
     vt = ids[vq, vs].astype(np.int64)
@@ -163,10 +187,7 @@ def block_compiled_queries(
     ut = (uniq % num_tiles).astype(np.int64)
     per_blk = np.bincount(ub, minlength=max(nb, 1))
     width = int(per_blk.max()) if uniq.size else 0
-    if max_tiles is None:
-        max_tiles = max(8, int(np.ceil(width / 8)) * 8)
-    if width > max_tiles:
-        raise ValueError(f"block touches {width} tiles > max_tiles={max_tiles}")
+    max_tiles = _padded_width(width, max_tiles, "block")
 
     from repro.core.cooccurrence import segment_ranks
 
@@ -184,6 +205,172 @@ def block_compiled_queries(
         q_block=q_block,
         batch=batch,
     )
+
+
+@dataclasses.dataclass
+class ShardedBlockedQueries:
+    """Per-shard query-blocked batch for the sharded kernel (DESIGN.md §4).
+
+    The stacked form of ``num_shards`` shard-local :class:`BlockedQueries`:
+    every shard sees the same block axis (so cross-shard partial sums
+    align row-for-row) but its own tile schedule — shard-local tile ids,
+    shard-local tile unions.  ``max_tiles`` is the widest per-(shard,
+    block) union over the whole batch, so each shard's grid is
+    ``(nb, max_tiles)`` with ``max_tiles`` bounded by the busiest shard,
+    never by the global union.
+
+    An activation (query, tile) is owned by exactly one shard: the tile's
+    owner for sharded-once tiles, ``block % num_shards`` for tiles
+    replicated on every shard (hot-group work round-robins over blocks).
+    Summing the shards' kernel outputs therefore reproduces the
+    single-device blocked reduction exactly once per activation.
+    """
+
+    tile_ids: jax.Array   # (S, nb, max_tiles) int32 shard-LOCAL ids, -1 pad
+    bitmaps: jax.Array    # (S, nb, max_tiles, q_block, tile_rows)
+    q_block: int
+    batch: int            # original (unpadded) query count
+    shard_widths: np.ndarray  # (S,) widest per-shard block union, pre-pad
+
+    @property
+    def num_shards(self) -> int:
+        return self.tile_ids.shape[0]
+
+    @property
+    def num_blocks(self) -> int:
+        return self.tile_ids.shape[1]
+
+    @property
+    def max_tiles(self) -> int:
+        return self.tile_ids.shape[2]
+
+    def grid_cells_per_shard(self) -> int:
+        """Kernel grid cells each shard runs (= nb × padded max_tiles)."""
+        return self.num_blocks * self.max_tiles
+
+
+def shard_block_queries(
+    cq: CompiledQueries,
+    plan,
+    q_block: int,
+    *,
+    max_tiles: int | None = None,
+) -> ShardedBlockedQueries:
+    """Flat compiled batch → per-shard blocked layout for ``plan``.
+
+    ``plan`` is a :class:`repro.dist.shard_plan.ShardPlan` (duck-typed:
+    only ``num_shards`` / ``shard_of_tile`` / ``local_tile_of`` /
+    ``max_local_tiles`` are read, keeping ``repro.core`` free of a
+    ``repro.dist`` import).  ``cq.tile_ids`` must be in the plan's fused
+    tile space — offset per-table compiles with
+    :func:`offset_compiled_queries` first.
+
+    Compile ``cq`` with ``replica_block=q_block``, exactly as for
+    :func:`block_compiled_queries`; replicas of a sharded group live on
+    the same shard, so block-granular replica choice stays shard-local.
+    """
+    if q_block < 1:
+        raise ValueError("q_block must be >= 1")
+    S = int(plan.num_shards)
+    ids, bms, nb = _pad_to_blocks(
+        np.asarray(cq.tile_ids), np.asarray(cq.bitmaps), q_block
+    )
+    batch = cq.tile_ids.shape[0]
+    tile_rows = bms.shape[-1]
+    nb_safe = max(nb, 1)
+
+    vq, vs = np.nonzero(ids >= 0)
+    vt = ids[vq, vs].astype(np.int64)
+    vblk = vq // q_block
+    shard_of_tile = np.asarray(plan.shard_of_tile)
+    own = shard_of_tile[vt].astype(np.int64)
+    # replicated-everywhere tiles: block-level round robin over shards
+    own = np.where(own < 0, vblk % S, own)
+    lt = np.asarray(plan.local_tile_of)[own, vt].astype(np.int64)
+    if lt.size and lt.min() < 0:
+        raise ValueError("plan does not hold an activated tile on its owner")
+
+    Lmax = max(int(plan.max_local_tiles), 1)
+    key = (own * nb_safe + vblk) * Lmax + lt
+    uniq = np.unique(key)
+    usb = uniq // Lmax
+    ult = (uniq % Lmax).astype(np.int64)
+    us = (usb // nb_safe).astype(np.int64)
+    ub = (usb % nb_safe).astype(np.int64)
+    per_sb = np.bincount(usb, minlength=S * nb_safe)
+    width = int(per_sb.max()) if uniq.size else 0
+    max_tiles = _padded_width(width, max_tiles, "shard block")
+
+    from repro.core.cooccurrence import segment_ranks
+
+    blocked_ids = np.full((S, nb_safe, max_tiles), -1, dtype=np.int32)
+    pos_u = segment_ranks(per_sb)
+    blocked_ids[us, ub, pos_u] = ult
+    blocked_bms = np.zeros(
+        (S, nb_safe, max_tiles, q_block, tile_rows), dtype=bms.dtype
+    )
+    pos_entry = pos_u[np.searchsorted(uniq, key)]
+    blocked_bms[own, vblk, pos_entry, vq % q_block] = bms[vq, vs]
+    widths = per_sb.reshape(S, nb_safe).max(axis=1) if uniq.size else np.zeros(S, np.int64)
+    return ShardedBlockedQueries(
+        tile_ids=jnp.asarray(blocked_ids),
+        bitmaps=jnp.asarray(blocked_bms),
+        q_block=q_block,
+        batch=batch,
+        shard_widths=widths.astype(np.int64),
+    )
+
+
+def offset_compiled_queries(cq: CompiledQueries, tile_offset: int) -> CompiledQueries:
+    """Rebases a per-table compile into the fused multi-table tile space."""
+    ids = np.asarray(cq.tile_ids)
+    return CompiledQueries(
+        tile_ids=jnp.asarray(np.where(ids >= 0, ids + tile_offset, ids)),
+        bitmaps=cq.bitmaps,
+        max_tiles=cq.max_tiles,
+    )
+
+
+def concat_compiled_queries(
+    cqs: Sequence[CompiledQueries], q_block: int
+) -> tuple[CompiledQueries, list[tuple[int, int]]]:
+    """Stacks per-table compiled batches for one fused kernel invocation.
+
+    Each table's batch is padded up to a ``q_block`` multiple (so blocks
+    never span tables) and all are padded to a common tile width, then
+    concatenated on the query axis.
+
+    Returns:
+      (fused CompiledQueries, per-table ``(row_start, batch)`` spans into
+      the fused — and therefore into the kernel output — row space).
+    """
+    if q_block < 1:
+        raise ValueError("q_block must be >= 1")
+    if not cqs:
+        raise ValueError("need at least one compiled batch")
+    width = max(cq.max_tiles for cq in cqs)
+    ids_parts, bms_parts, spans = [], [], []
+    row = 0
+    for cq in cqs:
+        ids = np.asarray(cq.tile_ids)
+        bms = np.asarray(cq.bitmaps)
+        batch, s_flat = ids.shape
+        rows = -(-batch // q_block) * q_block if batch else 0
+        tile_rows = bms.shape[-1]
+        pid = np.full((rows, width), -1, dtype=ids.dtype)
+        pbm = np.zeros((rows, width, tile_rows), dtype=bms.dtype)
+        pid[:batch, :s_flat] = ids
+        pbm[:batch, :s_flat] = bms
+        ids_parts.append(pid)
+        bms_parts.append(pbm)
+        spans.append((row, batch))
+        row += rows
+    fused = CompiledQueries(
+        tile_ids=jnp.asarray(np.concatenate(ids_parts)),
+        bitmaps=jnp.asarray(np.concatenate(bms_parts)),
+        max_tiles=width,
+    )
+    return fused, spans
 
 
 def reduce_dense_oracle(

@@ -7,9 +7,22 @@ derivation consumed by the dry-run and the elastic-restart path.
 
 ``repro.dist.pipeline_parallel`` owns the GPipe-style stage rotation used
 by the pipeline-parallel example and its schedule math.
+
+``repro.dist.shard_plan`` owns the crossbar shard planner: which groups
+replicate across every model shard (Eq.-1 hot sets) vs live sharded-once,
+over the fused multi-table tile space.
 """
 
 from repro.dist import sharding
 from repro.dist import pipeline_parallel
+from repro.dist.shard_plan import (
+    ShardPlan,
+    TableSegment,
+    build_fused_image,
+    plan_shards,
+)
 
-__all__ = ["sharding", "pipeline_parallel"]
+__all__ = [
+    "sharding", "pipeline_parallel",
+    "ShardPlan", "TableSegment", "build_fused_image", "plan_shards",
+]

@@ -1,0 +1,291 @@
+"""Shard planner: partition the crossbar image over the ``model`` axis.
+
+A single device cannot hold the replicated crossbar image for many DLRM
+tables at production scale, so the image must shard across the model
+mesh axis *without* giving back the per-shard DMA amortization of the
+query-blocked kernel.  The planner decides, per group (and per table —
+multiple tables fuse into one tile id space):
+
+  * **replicated-everywhere** — hot groups whose Eq.-1 copy count
+    reaches the shard count (:func:`repro.core.replication.
+    shard_replication_sets`) are stored on *every* shard.  Their
+    activations never cross shards; ownership round-robins over blocks
+    so the hottest work spreads across the mesh.
+  * **sharded-once** — every other group lives on exactly one shard
+    (all of its intra-shard replica tiles move together, so replica
+    balancing keeps working shard-locally).  Assignment is greedy
+    frequency-balanced: descending group load, least-loaded shard
+    first, ties to the lowest shard id — deterministic.
+
+The plan's unit is the **fused tile space**: table *t*'s physical tiles
+occupy ``[tile_offset[t], tile_offset[t] + num_tiles_t)``, so one shard
+map, one stacked shard image, and one kernel invocation serve every
+table at once.  Consumed by
+:func:`repro.core.reduction.shard_block_queries` (per-shard block
+compiler) and :mod:`repro.kernels.sharded` (the shard_map reduction).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+import numpy as np
+
+from repro.core.mapping import CrossbarLayout
+from repro.core.replication import ReplicationPlan, shard_replication_sets
+
+
+@dataclasses.dataclass
+class TableSegment:
+    """One table's slice of the fused group/tile id spaces."""
+
+    name: str
+    group_offset: int
+    tile_offset: int
+    num_groups: int
+    num_tiles: int
+    tile_rows: int
+
+    @property
+    def tile_end(self) -> int:
+        return self.tile_offset + self.num_tiles
+
+
+@dataclasses.dataclass
+class ShardPlan:
+    """Placement of every fused group/tile onto ``num_shards`` shards.
+
+    Attributes:
+      num_shards: model-parallel degree the plan was built for.
+      tables: per-table segments of the fused id spaces, in input order.
+      replicated_group: ``(G,)`` bool — True where the group is stored on
+        every shard (fused group ids).
+      shard_of_group: ``(G,)`` int32 — owning shard, -1 for replicated.
+      shard_of_tile: ``(T,)`` int32 — owning shard per fused physical
+        tile, -1 for replicated (consumed as the ownership rule by the
+        block compiler).
+      local_tile_of: ``(num_shards, T)`` int32 — fused tile id → local
+        tile id on that shard, -1 where the shard does not hold the tile.
+      local_num_tiles: ``(num_shards,)`` — tiles resident per shard
+        (sharded-owned + replicated).
+      group_load: ``(G,)`` float64 — the load metric used for balancing.
+    """
+
+    num_shards: int
+    tables: List[TableSegment]
+    replicated_group: np.ndarray
+    shard_of_group: np.ndarray
+    shard_of_tile: np.ndarray
+    local_tile_of: np.ndarray
+    local_num_tiles: np.ndarray
+    group_load: np.ndarray
+
+    @property
+    def num_groups(self) -> int:
+        return int(self.replicated_group.shape[0])
+
+    @property
+    def num_tiles(self) -> int:
+        return int(self.shard_of_tile.shape[0])
+
+    @property
+    def max_local_tiles(self) -> int:
+        """Stacked per-shard image depth (max resident tiles over shards)."""
+        return int(self.local_num_tiles.max()) if self.num_shards else 0
+
+    @property
+    def replicated_tiles(self) -> int:
+        return int((self.shard_of_tile < 0).sum())
+
+    def shard_tiles(self, shard: int) -> np.ndarray:
+        """Fused tile ids resident on ``shard``, in local-tile order."""
+        resident = np.nonzero(self.local_tile_of[shard] >= 0)[0]
+        order = np.argsort(self.local_tile_of[shard][resident], kind="stable")
+        return resident[order].astype(np.int64)
+
+    def build_shard_images(self, fused_image: np.ndarray) -> np.ndarray:
+        """Stacks per-shard local images from the fused device image.
+
+        Args:
+          fused_image: ``(num_tiles, tile_rows, dim)`` — per-table images
+            concatenated on the tile axis (see :func:`build_fused_image`).
+
+        Returns:
+          ``(num_shards, max_local_tiles, tile_rows, dim)`` — shard s's
+          resident tiles at their local ids; trailing padding tiles are
+          zero, so a stray access contributes nothing to a sum (the same
+          contract as padding slots inside a tile).
+        """
+        if fused_image.shape[0] != self.num_tiles:
+            raise ValueError(
+                f"fused image has {fused_image.shape[0]} tiles, plan has "
+                f"{self.num_tiles}"
+            )
+        tile_rows, dim = fused_image.shape[1], fused_image.shape[2]
+        out = np.zeros(
+            (self.num_shards, self.max_local_tiles, tile_rows, dim),
+            dtype=fused_image.dtype,
+        )
+        for s in range(self.num_shards):
+            tiles = self.shard_tiles(s)
+            out[s, : tiles.size] = fused_image[tiles]
+        return out
+
+    def memory_summary(self) -> dict:
+        """Tile residency accounting (replication overhead of the plan)."""
+        sharded_tiles = self.num_tiles - self.replicated_tiles
+        stored = sharded_tiles + self.replicated_tiles * self.num_shards
+        return {
+            "num_tiles": self.num_tiles,
+            "replicated_tiles": self.replicated_tiles,
+            "stored_tiles": stored,
+            "storage_ratio": stored / max(self.num_tiles, 1),
+            "local_num_tiles": self.local_num_tiles.tolist(),
+            "max_local_tiles": self.max_local_tiles,
+        }
+
+
+def _fuse_segments(
+    names: Sequence[str], layouts: Sequence[CrossbarLayout]
+) -> List[TableSegment]:
+    segs: List[TableSegment] = []
+    g_off = t_off = 0
+    tile_rows = layouts[0].tile_rows
+    for name, layout in zip(names, layouts):
+        if layout.tile_rows != tile_rows:
+            raise ValueError(
+                f"table {name!r} tile_rows={layout.tile_rows} != {tile_rows}; "
+                "fused serving requires a uniform crossbar height"
+            )
+        segs.append(TableSegment(
+            name=name, group_offset=g_off, tile_offset=t_off,
+            num_groups=layout.num_groups, num_tiles=layout.num_tiles,
+            tile_rows=tile_rows,
+        ))
+        g_off += layout.num_groups
+        t_off += layout.num_tiles
+    return segs
+
+
+def plan_shards(
+    layouts: Sequence[CrossbarLayout],
+    plans: Sequence[ReplicationPlan],
+    num_shards: int,
+    *,
+    names: Sequence[str] | None = None,
+    group_freqs: Sequence[np.ndarray] | None = None,
+) -> ShardPlan:
+    """Builds the shard placement for one or more tables.
+
+    Args:
+      layouts: per-table crossbar layouts (uniform ``tile_rows``).
+      plans: per-table Eq.-1 replication plans (same order).
+      num_shards: model-parallel degree (>= 1).
+      names: optional table names for reporting (default ``t0..tN``).
+      group_freqs: optional per-table per-group access frequencies used
+        as the balancing load; falls back to Eq.-1 copy counts (which are
+        log-frequency, so still hotness-ordered).
+
+    Returns:
+      A :class:`ShardPlan` over the fused group/tile spaces.
+    """
+    if num_shards < 1:
+        raise ValueError("num_shards must be >= 1")
+    if len(layouts) != len(plans) or not layouts:
+        raise ValueError("need one replication plan per layout (>= 1 table)")
+    if names is None:
+        names = [f"t{i}" for i in range(len(layouts))]
+    segs = _fuse_segments(names, layouts)
+
+    G = sum(s.num_groups for s in segs)
+    T = sum(s.num_tiles for s in segs)
+    replicated = np.zeros(G, dtype=bool)
+    load = np.zeros(G, dtype=np.float64)
+    copies = np.zeros(G, dtype=np.int64)
+    for i, (seg, layout, plan) in enumerate(zip(segs, layouts, plans)):
+        gs = slice(seg.group_offset, seg.group_offset + seg.num_groups)
+        # Eq.-1 cross-shard rule: copy count >= shard count → replicate
+        replicated[gs] = shard_replication_sets(plan, num_shards)
+        copies[gs] = layout.copies
+        # the fused tile space assumes each group's replica tiles are
+        # contiguous in fused-group order (what build_layout emits and
+        # build_fused_image concatenates) — pin it rather than trust it
+        expect_base = np.zeros(seg.num_groups, dtype=np.int64)
+        np.cumsum(layout.copies[:-1], out=expect_base[1:])
+        if not np.array_equal(layout.tile_base, expect_base):
+            raise ValueError(
+                f"table {seg.name!r}: tile_base is not the contiguous "
+                "cumsum-of-copies layout the fused tile space requires"
+            )
+        if group_freqs is not None:
+            load[gs] = np.asarray(group_freqs[i], dtype=np.float64)
+        else:
+            load[gs] = plan.copies.astype(np.float64)
+
+    # greedy frequency-balanced assignment of the sharded groups, in
+    # descending load order (ties: fused id order, stable).  Loaded
+    # groups go to the least-loaded shard (ties: fewest resident tiles,
+    # then lowest id).  The ZERO-load cold tail — which contributes no
+    # serving load but most of the image bytes — balances on tile count
+    # instead: adding load 0 never moves a load-argmin, so load-first
+    # placement would pile the entire cold tail onto one shard and
+    # forfeit the memory relief that is half the point of sharding.
+    # Cold groups sort last, so they also repair tile imbalance the hot
+    # phase left behind.
+    shard_of_group = np.full(G, -1, dtype=np.int32)
+    shard_load = np.zeros(num_shards, dtype=np.float64)
+    shard_tiles = np.zeros(num_shards, dtype=np.int64)
+    order = np.argsort(-load, kind="stable")
+    shard_ids = range(num_shards)
+    for g in order.tolist():
+        if replicated[g]:
+            continue
+        if load[g] > 0:
+            s = min(shard_ids, key=lambda i: (shard_load[i], shard_tiles[i], i))
+        else:
+            s = min(shard_ids, key=lambda i: (shard_tiles[i], i))
+        shard_of_group[g] = s
+        shard_load[s] += load[g]
+        shard_tiles[s] += int(copies[g])
+
+    # per-tile placement: a group's replica tiles travel with the group
+    tile_group = np.repeat(np.arange(G, dtype=np.int64), copies)
+    shard_of_tile = shard_of_group[tile_group].astype(np.int32)
+
+    # local tile numbering: resident tiles in ascending fused id order
+    local_tile_of = np.full((num_shards, T), -1, dtype=np.int32)
+    local_num_tiles = np.zeros(num_shards, dtype=np.int64)
+    for s in range(num_shards):
+        resident = np.nonzero((shard_of_tile == s) | (shard_of_tile < 0))[0]
+        local_tile_of[s, resident] = np.arange(resident.size, dtype=np.int32)
+        local_num_tiles[s] = resident.size
+
+    return ShardPlan(
+        num_shards=num_shards,
+        tables=segs,
+        replicated_group=replicated,
+        shard_of_group=shard_of_group,
+        shard_of_tile=shard_of_tile,
+        local_tile_of=local_tile_of,
+        local_num_tiles=local_num_tiles,
+        group_load=load,
+    )
+
+
+def build_fused_image(
+    layouts: Sequence[CrossbarLayout], tables: Sequence[np.ndarray]
+) -> np.ndarray:
+    """Concatenated ``(Σ num_tiles, tile_rows, dim)`` multi-table image."""
+    if len(layouts) != len(tables) or not layouts:
+        raise ValueError("need one table per layout (>= 1 table)")
+    dim = layouts[0].dim
+    parts = []
+    for layout, table in zip(layouts, tables):
+        if layout.dim != dim:
+            raise ValueError("fused serving requires a uniform embedding dim")
+        parts.append(
+            layout.build_image(np.asarray(table))
+            .reshape(layout.num_tiles, layout.tile_rows, dim)
+        )
+    return np.concatenate(parts, axis=0)

@@ -86,7 +86,10 @@ def sanitize_spec(spec: P, shape: Sequence[int], mesh) -> P:
 
     Keeps the spec length (``P("model", None)`` sanitizes to
     ``P(None, None)``, not ``P()``), so specs stay positionally aligned
-    with the array rank they were written for.
+    with the array rank they were written for.  A part naming a mesh
+    axis the mesh does not carry (e.g. ``("pod", "data")`` on a
+    single-pod mesh) is dropped too — treating an unknown axis as size 1
+    would let an invalid spec through to ``with_sharding_constraint``.
     """
     sizes = _mesh_axis_sizes(mesh)
     out = []
@@ -95,8 +98,9 @@ def sanitize_spec(spec: P, shape: Sequence[int], mesh) -> P:
             out.append(None)
             continue
         axes = part if isinstance(part, tuple) else (part,)
+        known = all(a in sizes for a in axes)
         n = math.prod(sizes.get(a, 1) for a in axes)
-        ok = d < len(shape) and n > 0 and shape[d] % n == 0
+        ok = known and d < len(shape) and n > 0 and shape[d] % n == 0
         out.append(part if ok else None)
     return P(*out)
 

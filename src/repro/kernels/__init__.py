@@ -2,6 +2,9 @@
 
 ``crossbar_reduce`` — tiled one-hot MAC embedding reduction with the
 dynamic READ/MAC switch (the paper's §III-B/§III-D datapath).
+``crossbar_reduce_sharded`` — the multi-table serving entry: shard-local
+query-blocked kernels over the ``model`` axis with a psum-scatter-style
+cross-shard combine overlapped with the next block chunk's tile DMAs.
 ``embedding_bag`` — padded gather+sum (naive/nMARS baseline datapath and
 single-hot LM token embedding).
 
@@ -21,10 +24,17 @@ from repro.kernels.crossbar_reduce import crossbar_reduce_pallas
 from repro.kernels.embedding_bag import embedding_bag_pallas
 from repro.kernels.decode_attention import fused_decode_attention_pallas
 from repro.kernels.ref import fused_decode_attention_ref
+from repro.kernels.sharded import (
+    combine_bytes_per_batch,
+    crossbar_reduce_sharded,
+    crossbar_reduce_tables,
+)
 
 __all__ = [
     "crossbar_reduce", "crossbar_reduce_ref", "crossbar_reduce_pallas",
     "crossbar_reduce_blocked", "crossbar_reduce_blocked_ref",
+    "crossbar_reduce_sharded", "crossbar_reduce_tables",
+    "combine_bytes_per_batch",
     "embedding_bag", "embedding_bag_ref", "embedding_bag_pallas",
     "fused_decode_attention_pallas", "fused_decode_attention_ref",
 ]

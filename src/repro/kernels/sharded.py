@@ -1,0 +1,207 @@
+"""Sharded multi-table crossbar reduction over the ``model`` mesh axis.
+
+The serving-scale entry point (DESIGN.md §4): each model shard holds its
+slice of the fused multi-table crossbar image (``repro.dist.shard_plan``)
+and runs the query-blocked Pallas kernel over its *own* tile schedule
+(``repro.core.reduction.shard_block_queries``); the per-shard partial
+sums are combined with a psum-scatter-style reduction.
+
+Combine / DMA overlap: the block axis is split into ``combine_chunks``
+contiguous chunks, each lowered as kernel-then-combine.  Chunk *c*'s
+reduce-scatter has no data dependence on chunk *c+1*'s pallas_call, whose
+grid is ``("parallel", "arbitrary")``, so XLA's async collectives overlap
+chunk *c*'s ICI transfer with chunk *c+1*'s HBM→VMEM tile DMAs — the TPU
+re-expression of "overlap the cross-shard combine with the next block's
+tile fetches".
+
+Two execution paths, numerically identical:
+
+  * **emulation** (``mesh=None``) — a host loop over the shard axis with
+    an f32 partial-sum accumulator; runs on a single device of any
+    backend (tests, CPU benchmarks).
+  * **shard_map** (``mesh=`` a mesh whose ``axis_name`` axis has size
+    ``num_shards``) — each device runs its shard's kernel; partials
+    combine with ``lax.psum_scatter`` over the embedding dim (payload is
+    OUTPUT-sized, never table-sized) + ``all_gather``, or plain
+    ``lax.psum`` when the dim does not divide.
+
+This is inference-path machinery: no custom VJP (training through the
+sharded image goes through the single-shard ``crossbar_reduce`` entries).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels.crossbar_reduce import crossbar_reduce_pallas
+
+
+def _shard_map():
+    try:
+        return jax.shard_map
+    except AttributeError:  # jax < 0.5
+        from jax.experimental.shard_map import shard_map
+
+        return shard_map
+
+
+def _chunk_bounds(nb: int, combine_chunks: int) -> list[tuple[int, int]]:
+    """Contiguous, roughly equal block-axis chunks (static)."""
+    chunks = max(1, min(combine_chunks, nb)) if nb else 1
+    if nb == 0:
+        return [(0, 0)]
+    base, rem = divmod(nb, chunks)
+    bounds, start = [], 0
+    for c in range(chunks):
+        end = start + base + (1 if c < rem else 0)
+        bounds.append((start, end))
+        start = end
+    return bounds
+
+
+def crossbar_reduce_sharded(
+    images: jax.Array,    # (S, local_tiles, tile_rows, dim) stacked shard images
+    tile_ids: jax.Array,  # (S, nb, max_tiles) int32 shard-local ids, -1 pad
+    bitmaps: jax.Array,   # (S, nb, max_tiles, q_block, tile_rows)
+    *,
+    mesh=None,
+    axis_name: str = "model",
+    combine: str = "psum_scatter",
+    combine_chunks: int = 1,
+    dynamic_switch: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Shard-local query-blocked reduction + cross-shard combine.
+
+    Args:
+      images: per-shard local images from ``ShardPlan.build_shard_images``
+        (trailing padding tiles zero).
+      tile_ids / bitmaps: stacked shard-local blocked batch from
+        ``shard_block_queries`` (every shard shares the block axis).
+      mesh: run under shard_map on this mesh's ``axis_name`` axis (size
+        must equal the shard count); ``None`` emulates on one device.
+      combine: "psum_scatter" (reduce-scatter over the embedding dim +
+        all-gather; falls back to psum when dim % shards != 0) or "psum".
+      combine_chunks: block-axis chunks for combine/DMA overlap.
+
+    Returns:
+      ``(nb * q_block, dim)`` summed reduction in block-major query
+      order — the same contract as ``crossbar_reduce_blocked``.
+    """
+    S, _, _, dim = images.shape
+    if tile_ids.shape[0] != S or bitmaps.shape[0] != S:
+        raise ValueError(
+            f"shard axes disagree: images {images.shape[0]}, "
+            f"tile_ids {tile_ids.shape[0]}, bitmaps {bitmaps.shape[0]}"
+        )
+    nb, q_block = bitmaps.shape[1], bitmaps.shape[3]
+    if combine not in ("psum_scatter", "psum"):
+        raise ValueError(f"unknown combine {combine!r}")
+    bounds = _chunk_bounds(nb, combine_chunks)
+
+    def shard_partial(img, ids, bms, c0, c1):
+        return crossbar_reduce_pallas(
+            img, ids[c0:c1], bms[c0:c1],
+            dynamic_switch=dynamic_switch, interpret=interpret,
+        ).astype(jnp.float32)                      # (cnb * q_block, dim)
+
+    if mesh is None:
+        # single-device emulation: shard loop in-program, f32 accumulate
+        out = jnp.zeros((nb * q_block, dim), jnp.float32)
+        for s in range(S):
+            parts = [
+                shard_partial(images[s], tile_ids[s], bitmaps[s], c0, c1)
+                for c0, c1 in bounds
+            ]
+            out = out + jnp.concatenate(parts, axis=0)
+        return out.astype(images.dtype)
+
+    mesh_axis = dict(zip(mesh.axis_names, mesh.devices.shape)).get(axis_name)
+    if mesh_axis != S:
+        raise ValueError(
+            f"mesh axis {axis_name!r} has size {mesh_axis}, need {S} shards"
+        )
+    scatter = combine == "psum_scatter" and dim % S == 0
+
+    def local(img, ids, bms):
+        img, ids, bms = img[0], ids[0], bms[0]
+        outs = []
+        for c0, c1 in bounds:
+            part = shard_partial(img, ids, bms, c0, c1)
+            # chunk c's combine is independent of chunk c+1's kernel →
+            # XLA overlaps this collective with the next chunk's DMAs
+            if scatter:
+                part = lax.psum_scatter(
+                    part, axis_name, scatter_dimension=1, tiled=True
+                )
+            else:
+                part = lax.psum(part, axis_name)
+            outs.append(part)
+        out = jnp.concatenate(outs, axis=0)
+        if scatter:
+            out = lax.all_gather(out, axis_name, axis=1, tiled=True)
+        return out[None]
+
+    out = _shard_map()(
+        local,
+        mesh=mesh,
+        in_specs=(P(axis_name), P(axis_name), P(axis_name)),
+        out_specs=P(axis_name),
+        # pallas_call has no replication rule; replication is re-established
+        # explicitly by the psum/all_gather combine above
+        check_rep=False,
+    )(images, tile_ids, bitmaps)
+    # every shard returns the full combined batch; take shard 0's copy
+    return out[0].astype(images.dtype)
+
+
+def crossbar_reduce_tables(
+    images: jax.Array,
+    sbq,
+    spans,
+    *,
+    mesh=None,
+    axis_name: str = "model",
+    combine: str = "psum_scatter",
+    combine_chunks: int = 1,
+    dynamic_switch: bool = True,
+    interpret: bool | None = None,
+) -> list[jax.Array]:
+    """Multi-table entry: one fused sharded reduction, split per table.
+
+    ``sbq`` is the fused :class:`~repro.core.reduction.
+    ShardedBlockedQueries` (per-table compiles offset into the fused tile
+    space, concatenated with ``concat_compiled_queries``), ``spans`` the
+    per-table ``(row_start, batch)`` list that call returned.
+
+    Returns one ``(batch_t, dim)`` array per table, padding rows sliced.
+    """
+    out = crossbar_reduce_sharded(
+        images, sbq.tile_ids, sbq.bitmaps,
+        mesh=mesh, axis_name=axis_name, combine=combine,
+        combine_chunks=combine_chunks, dynamic_switch=dynamic_switch,
+        interpret=interpret,
+    )
+    return [out[start : start + batch] for start, batch in spans]
+
+
+def combine_bytes_per_batch(
+    out_rows: int, dim: int, num_shards: int, *, dtype_bytes: int = 4,
+) -> int:
+    """Cross-shard combine traffic of one batch, summed over shards.
+
+    Ring accounting: a reduce-scatter (or all-gather) of an ``R × dim``
+    f32 payload moves ``(S-1)/S × R × dim × 4`` bytes per shard; both
+    combine modes cost two such passes (psum_scatter + all_gather, or a
+    ring all-reduce), so the accounting is mode-independent.  Payloads
+    are OUTPUT-sized — the whole point of combining partial sums instead
+    of gathering tiles.
+    """
+    if num_shards <= 1:
+        return 0
+    per_shard = (num_shards - 1) / num_shards * out_rows * dim * dtype_bytes
+    passes = 2  # reduce-scatter + all-gather, or all-reduce
+    return int(passes * per_shard * num_shards)

@@ -1,0 +1,105 @@
+"""Sharded multi-table serving launcher (real shard_map on host devices).
+
+Forces the host platform to present enough devices, builds a
+``(1, num_shards)`` (data, model) mesh, stands up a
+:class:`~repro.serve.sharded.ShardedEmbeddingServer` over synthetic
+Zipf-weighted tables, and drives a continuous stream of per-table
+queries through the batched flush path.  Prints the per-shard grid
+cells / combine bytes / wall time report.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.serve_sharded --shards 4 --tables 2
+    PYTHONPATH=src python -m repro.launch.serve_sharded --emulate   # no mesh
+
+The module is import-safe: args are parsed and ``XLA_FLAGS`` is set only
+when run as ``__main__`` (the device-count flag must land before the
+first jax import, so :func:`main` defers its jax-touching imports).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+
+def parse_args(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--shards", type=int, default=4)
+    ap.add_argument("--tables", type=int, default=2)
+    ap.add_argument("--rows", type=int, default=2048)
+    ap.add_argument("--dim", type=int, default=128)
+    ap.add_argument("--history", type=int, default=2048)
+    ap.add_argument("--requests", type=int, default=512)
+    ap.add_argument("--batch-size", type=int, default=128)
+    ap.add_argument("--q-block", type=int, default=8)
+    ap.add_argument("--group-size", type=int, default=64)
+    ap.add_argument("--mean-bag", type=float, default=12.0)
+    ap.add_argument("--combine", choices=["psum_scatter", "psum"],
+                    default="psum_scatter")
+    ap.add_argument("--combine-chunks", type=int, default=2)
+    ap.add_argument("--emulate", action="store_true",
+                    help="single-device shard loop instead of shard_map")
+    return ap.parse_args(argv)
+
+
+def main(args) -> None:
+    # deferred: jax must initialize AFTER the XLA_FLAGS device forcing
+    import numpy as np
+    import jax
+
+    from repro.data import zipf_queries
+    from repro.serve.sharded import ShardedEmbeddingServer
+
+    rng = np.random.default_rng(0)
+    tables = {
+        f"t{i}": rng.normal(size=(args.rows, args.dim)).astype(np.float32)
+        for i in range(args.tables)
+    }
+    histories = {
+        name: zipf_queries(args.rows, args.history, args.mean_bag, seed=i)
+        for i, name in enumerate(tables)
+    }
+
+    mesh = None
+    if not args.emulate:
+        if len(jax.devices()) < args.shards:
+            raise SystemExit(
+                f"only {len(jax.devices())} devices visible, need {args.shards} "
+                "(XLA_FLAGS forcing failed?)"
+            )
+        mesh = jax.make_mesh((1, args.shards), ("data", "model"))
+
+    server = ShardedEmbeddingServer(
+        tables, histories,
+        num_shards=args.shards, mesh=mesh,
+        q_block=args.q_block, group_size=args.group_size,
+        batch_size=args.batch_size,
+        combine=args.combine, combine_chunks=args.combine_chunks,
+    )
+
+    stream = zipf_queries(args.rows, args.requests, args.mean_bag, seed=1234)
+    names = list(tables)
+    flushed = 0
+    for i, q in enumerate(stream):
+        out = server.submit(names[i % len(names)], q)
+        if out:
+            flushed += 1
+    if server.flush():
+        flushed += 1
+
+    report = server.report()
+    report["flushes"] = flushed
+    print(json.dumps(report, indent=1, default=str))
+
+
+if __name__ == "__main__":
+    _args = parse_args()
+    if not _args.emulate:
+        # must precede the first jax import (inside main)
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={max(_args.shards, 1)} "
+            + os.environ.get("XLA_FLAGS", "")
+        )
+    main(_args)

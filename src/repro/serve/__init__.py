@@ -1,5 +1,9 @@
 from repro.serve.decode import decode_step
 from repro.serve.kvcache import cache_bytes, init_cache
 from repro.serve.batching import RequestBatcher, ServeMetrics
+from repro.serve.sharded import ShardedEmbeddingServer, ShardedServeStats
 
-__all__ = ["decode_step", "init_cache", "cache_bytes", "RequestBatcher", "ServeMetrics"]
+__all__ = [
+    "decode_step", "init_cache", "cache_bytes", "RequestBatcher",
+    "ServeMetrics", "ShardedEmbeddingServer", "ShardedServeStats",
+]

@@ -1,0 +1,243 @@
+"""Sharded multi-table embedding serving driver (DESIGN.md §4).
+
+Glues the offline pipeline to the sharded online path for a *set* of
+DLRM embedding tables:
+
+  per table: history → co-occurrence → grouping (Alg. 1) → Eq.-1
+  replication → layout, then one :class:`~repro.dist.shard_plan.
+  ShardPlan` over the fused tile space decides replicated-everywhere vs
+  sharded-once tiles and one stacked shard image feeds the kernel.
+
+Serving batches per-shard queries: requests accumulate per table in the
+driver's buffer; a flush compiles each table's batch (block-granular
+replica choice), rebases into the fused tile space, block-compiles one
+:class:`~repro.core.reduction.ShardedBlockedQueries` per flush, and runs
+:func:`repro.kernels.crossbar_reduce_tables` — emulation on one device,
+``shard_map`` when a mesh is installed.  Every flush records the
+observability contract of the sharded path: per-shard grid cells,
+per-shard union widths, and cross-shard combine bytes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    build_cooccurrence,
+    build_layout,
+    compile_queries,
+    concat_compiled_queries,
+    correlation_aware_grouping,
+    offset_compiled_queries,
+    plan_replication,
+    shard_block_queries,
+)
+from repro.dist.shard_plan import ShardPlan, build_fused_image, plan_shards
+from repro.kernels.sharded import combine_bytes_per_batch, crossbar_reduce_tables
+
+
+@dataclasses.dataclass
+class ShardedServeStats:
+    """Accumulated per-flush accounting of the sharded datapath."""
+
+    num_shards: int
+    q_block: int
+    batches: int = 0
+    queries: int = 0
+    blocks: int = 0
+    grid_cells_per_shard: int = 0          # Σ over flushes of nb × max_tiles
+    max_grid_cells_per_flush: int = 0
+    max_shard_width: int = 0               # widest per-shard block union seen
+    combine_bytes: int = 0
+    wall_s: float = 0.0
+
+    def record(self, sbq, dim: int, wall_s: float, queries: int) -> None:
+        cells = sbq.grid_cells_per_shard()
+        self.batches += 1
+        self.queries += queries
+        self.blocks += sbq.num_blocks
+        self.grid_cells_per_shard += cells
+        self.max_grid_cells_per_flush = max(self.max_grid_cells_per_flush, cells)
+        self.max_shard_width = max(
+            self.max_shard_width, int(np.max(sbq.shard_widths, initial=0))
+        )
+        self.combine_bytes += combine_bytes_per_batch(
+            sbq.num_blocks * sbq.q_block, dim, self.num_shards
+        )
+        self.wall_s += wall_s
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "num_shards": self.num_shards,
+            "q_block": self.q_block,
+            "batches": self.batches,
+            "queries": self.queries,
+            "blocks": self.blocks,
+            "grid_cells_per_shard": self.grid_cells_per_shard,
+            "max_grid_cells_per_flush": self.max_grid_cells_per_flush,
+            "max_shard_width": self.max_shard_width,
+            "combine_bytes": self.combine_bytes,
+            "wall_s": self.wall_s,
+        }
+
+
+class ShardedEmbeddingServer:
+    """Multi-table embedding-reduction server over the ``model`` axis.
+
+    Args:
+      tables: ``{name: (rows, dim) float array}`` logical tables.
+      histories: ``{name: ragged lookup history}`` driving the offline
+        pipeline (grouping + Eq.-1 replication) per table.
+      num_shards: model-parallel degree to plan for.
+      mesh: optional mesh whose ``axis_name`` axis has ``num_shards``
+        devices → the flush runs under shard_map; ``None`` emulates the
+        shard loop on the local device (identical numerics).
+      q_block: queries per kernel block (DMA amortization factor).
+      group_size: crossbar height (tile rows).
+      batch_size: auto-flush threshold for :meth:`submit`.
+      batch_size_for_eq1: Eq. 1's ``batch`` (replication aggressiveness);
+        defaults to ``batch_size``.
+    """
+
+    def __init__(
+        self,
+        tables: Dict[str, np.ndarray],
+        histories: Dict[str, Sequence[Sequence[int]]],
+        *,
+        num_shards: int = 1,
+        mesh=None,
+        axis_name: str = "model",
+        q_block: int = 8,
+        group_size: int = 64,
+        batch_size: int = 256,
+        batch_size_for_eq1: int | None = None,
+        combine: str = "psum_scatter",
+        combine_chunks: int = 2,
+        dynamic_switch: bool = True,
+        interpret: bool | None = None,
+    ):
+        if set(tables) != set(histories):
+            raise ValueError("tables and histories must cover the same names")
+        if not tables:
+            raise ValueError("need at least one table")
+        self.names = sorted(tables)
+        self.num_shards = num_shards
+        self.mesh = mesh
+        self.axis_name = axis_name
+        self.q_block = q_block
+        self.batch_size = batch_size
+        self.combine = combine
+        self.combine_chunks = combine_chunks
+        self.dynamic_switch = dynamic_switch
+        self.interpret = interpret
+
+        eq1_batch = batch_size_for_eq1 or batch_size
+        self.layouts, plans, gfreqs = [], [], []
+        dims = set()
+        for name in self.names:
+            table = np.asarray(tables[name])
+            hist = histories[name]
+            graph = build_cooccurrence(hist, table.shape[0])
+            grouping = correlation_aware_grouping(graph, group_size)
+            plan = plan_replication(grouping, graph.freq, eq1_batch)
+            self.layouts.append(build_layout(grouping, plan, table.shape[1]))
+            plans.append(plan)
+            gfreqs.append(grouping.group_freq(graph.freq))
+            dims.add(table.shape[1])
+        if len(dims) != 1:
+            raise ValueError("fused serving requires a uniform embedding dim")
+        self.dim = dims.pop()
+
+        self.plan: ShardPlan = plan_shards(
+            self.layouts, plans, num_shards,
+            names=self.names, group_freqs=gfreqs,
+        )
+        fused = build_fused_image(
+            self.layouts, [np.asarray(tables[n]) for n in self.names]
+        )
+        self.shard_images = jnp.asarray(self.plan.build_shard_images(fused))
+        self.stats = ShardedServeStats(num_shards=num_shards, q_block=q_block)
+        self._buffer: Dict[str, List[Sequence[int]]] = {n: [] for n in self.names}
+        self._buffered = 0
+
+    # ------------------------------------------------------------ serving --
+
+    def serve(
+        self, queries_by_table: Dict[str, Sequence[Sequence[int]]]
+    ) -> Dict[str, jax.Array]:
+        """One synchronous batch: compile, reduce, combine, account."""
+        t0 = time.perf_counter()
+        unknown = set(queries_by_table) - set(self.names)
+        if unknown:
+            raise KeyError(f"unknown tables {sorted(unknown)!r}")
+        cqs = []
+        served = [n for n in self.names if queries_by_table.get(n)]
+        if not served:
+            return {}
+        for name in served:
+            i = self.names.index(name)
+            seg = self.plan.tables[i]
+            cq = compile_queries(
+                self.layouts[i], queries_by_table[name],
+                replica_block=self.q_block,
+            )
+            cqs.append(offset_compiled_queries(cq, seg.tile_offset))
+        fused_cq, spans = concat_compiled_queries(cqs, self.q_block)
+        sbq = shard_block_queries(fused_cq, self.plan, self.q_block)
+        outs = crossbar_reduce_tables(
+            self.shard_images, sbq, spans,
+            mesh=self.mesh, axis_name=self.axis_name,
+            combine=self.combine, combine_chunks=self.combine_chunks,
+            dynamic_switch=self.dynamic_switch, interpret=self.interpret,
+        )
+        outs = [jax.block_until_ready(o) for o in outs]
+        n_queries = sum(len(queries_by_table[n]) for n in served)
+        self.stats.record(sbq, self.dim, time.perf_counter() - t0, n_queries)
+        return dict(zip(served, outs))
+
+    # ----------------------------------------------------------- batching --
+
+    def submit(self, table: str, query: Sequence[int]) -> Dict[str, jax.Array]:
+        """Buffers one query; auto-flushes at ``batch_size`` buffered.
+
+        Returns the flush result when a flush fired, else ``{}``.
+        """
+        if table not in self._buffer:
+            raise KeyError(f"unknown table {table!r}")
+        self._buffer[table].append(list(query))
+        self._buffered += 1
+        if self._buffered >= self.batch_size:
+            return self.flush()
+        return {}
+
+    def flush(self) -> Dict[str, jax.Array]:
+        """Serves and clears the buffered per-table batches.
+
+        The buffer is cleared only after a successful serve, so a failed
+        flush (e.g. one malformed query) leaves every buffered request
+        intact for retry after the offender is removed.
+        """
+        if self._buffered == 0:
+            return {}
+        batch = {n: q for n, q in self._buffer.items() if q}
+        out = self.serve(batch)
+        self._buffer = {n: [] for n in self.names}
+        self._buffered = 0
+        return out
+
+    # ------------------------------------------------------------- report --
+
+    def report(self) -> Dict[str, object]:
+        """Serving + placement accounting for dashboards and benches."""
+        return {
+            "tables": self.names,
+            "plan": self.plan.memory_summary(),
+            "serve": self.stats.summary(),
+            "mode": "shard_map" if self.mesh is not None else "emulated",
+        }

@@ -36,10 +36,31 @@ class _Integers(_Strategy):
         return base[:n]
 
 
+class _SampledFrom(_Strategy):
+    def __init__(self, elements):
+        self.elements = list(elements)
+
+    def samples(self, n: int):
+        import zlib
+
+        base = list(self.elements)
+        # crc32, not hash(): str hashing is PYTHONHASHSEED-randomized and
+        # would break the stub's deterministic-sweep contract
+        seed = zlib.crc32(repr(self.elements).encode())
+        rng = np.random.default_rng(seed)
+        while len(base) < n:
+            base.append(self.elements[int(rng.integers(len(self.elements)))])
+        return base[:n]
+
+
 class strategies:  # noqa: N801 - mimics `hypothesis.strategies` module
     @staticmethod
     def integers(min_value: int, max_value: int) -> _Integers:
         return _Integers(min_value, max_value)
+
+    @staticmethod
+    def sampled_from(elements) -> _SampledFrom:
+        return _SampledFrom(elements)
 
 
 def given(*strats: _Strategy):

@@ -47,6 +47,31 @@ def test_sanitize_spec_drops_nondivisible():
                          _FakeMesh({"pod": 2, "data": 16, "model": 16})) == P(None, None)
 
 
+def test_sanitize_spec_tuple_axis_multi_pod_regression():
+    """Tuple specs on the multi-pod mesh: a non-divisible dim falls back to
+    replicated WITHOUT shortening the spec (positional alignment), and a
+    divisible dim keeps the whole tuple."""
+    multi = _FakeMesh({"pod": 2, "data": 16, "model": 16})
+    # 48 % (2*16) != 0 → replicated, spec length preserved
+    assert sanitize_spec(P(("pod", "data")), (48,), multi) == P(None)
+    assert len(sanitize_spec(P(("pod", "data")), (48,), multi)) == 1
+    assert sanitize_spec(P(("pod", "data"), "model"), (48, 31), multi) == P(None, None)
+    # 64 % 32 == 0 → the tuple survives intact
+    assert sanitize_spec(P(("pod", "data")), (64,), multi) == P(("pod", "data"))
+    assert sanitize_spec(P(("pod", "data"), "model"), (64, 32), multi) == \
+        P(("pod", "data"), "model")
+
+
+def test_sanitize_spec_drops_unknown_mesh_axes():
+    """An axis the mesh does not carry must sanitize away even when the
+    dim is divisible — treating it as size 1 would hand an invalid spec
+    to with_sharding_constraint (e.g. "pod" on the single-pod mesh)."""
+    assert sanitize_spec(P(("pod", "data")), (64,), MESH) == P(None)
+    assert sanitize_spec(P("pod", None), (48, 8), MESH) == P(None, None)
+    # known axes in the same spec survive
+    assert sanitize_spec(P("pod", "model"), (48, 32), MESH) == P(None, "model")
+
+
 def test_param_specs_attention_and_mlp():
     params = {
         "layers": {
@@ -114,3 +139,31 @@ def test_maybe_shard_any_fallback_order():
         x = jnp.ones((3, 5))  # nothing divides cleanly except 1-sized axes
         y = maybe_shard_any(x, [("batch", "mlp"), (None, None)])
         assert y.shape == x.shape
+
+
+def test_maybe_shard_any_prefers_first_surviving(monkeypatch):
+    """The FIRST candidate whose spec fully survives sanitization must be
+    the one applied — later candidates are never considered."""
+    import repro.dist.sharding as sh
+
+    applied = []
+
+    def record_constraint(x, sharding):
+        applied.append(sharding.spec)
+        return x
+
+    monkeypatch.setattr(jax.lax, "with_sharding_constraint", record_constraint)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    rules = dict(LOGICAL_RULES_SINGLE_POD)
+    with activation_sharding_ctx(mesh, rules):
+        x = jnp.ones((4, 4))
+        # both candidates survive on the 1x1 mesh → first wins
+        sh.maybe_shard_any(x, [("batch", "mlp"), (None, None)])
+        assert applied[-1] == P("data", "model")
+        # first candidate names an axis this mesh lacks → falls through
+        # to the next fully-surviving candidate
+        multi_rules = dict(rules, batch=("pod", "data"))
+        with activation_sharding_ctx(mesh, multi_rules):
+            sh.maybe_shard_any(x, [("batch", None), (None, "mlp")])
+            assert applied[-1] == P(None, "model")
+    assert len(applied) == 2

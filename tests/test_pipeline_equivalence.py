@@ -96,6 +96,27 @@ def test_merge_graphs_matches_joint_build():
     _assert_graphs_equal(merged, joint)
 
 
+# ------------------------------------------------------------- grouping --
+
+
+@given(st.integers(0, 800), st.integers(2, 300), st.integers(1, 80))
+@settings(max_examples=10, deadline=None)
+def test_grouping_batch_heap_matches_reference(seed, rows, group_size):
+    """The array-backed batch-heap grouping must produce bit-identical
+    groups to the retained dict + per-edge-push loop (same pick order,
+    same tie-breaks) on arbitrary traces and group sizes."""
+    from repro.core import correlation_aware_grouping
+    from repro.core.grouping import _reference_correlation_aware_grouping
+
+    qs = _trace(rows, 60, seed, bag=5.0)
+    g = build_cooccurrence(qs, rows)
+    a = correlation_aware_grouping(g, group_size)
+    b = _reference_correlation_aware_grouping(g, group_size)
+    assert a.groups == b.groups
+    np.testing.assert_array_equal(a.group_of, b.group_of)
+    np.testing.assert_array_equal(a.slot_of, b.slot_of)
+
+
 # ------------------------------------------------------ query_tile_bitmaps --
 
 
