@@ -2,6 +2,8 @@
 
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Callable, Dict, List
 
@@ -28,10 +30,52 @@ def prepared_workload(name: str, *, scale: float = DEFAULT_SCALE,
     return rows, hist, ev, graph
 
 
+def mesh_for(num_shards: int):
+    """A ``(1, num_shards)`` (data, model) mesh when the host presents
+    enough devices (CI forces them via XLA_FLAGS), else ``None`` →
+    single-device emulation.  Shared by every sharded-serving bench so
+    shard_map-vs-emulated selection can never diverge between them."""
+    import jax
+
+    if num_shards > 1 and len(jax.devices()) >= num_shards:
+        return jax.make_mesh((1, num_shards), ("data", "model"))
+    return None
+
+
 def emit(rows: List[Dict]) -> None:
     """Prints ``name,us_per_call,derived`` CSV rows (benchmark contract)."""
     for r in rows:
         print(f"{r['name']},{r.get('us_per_call', '')},{r.get('derived', '')}")
+
+
+def update_bench_json(
+    path: str, updates: Dict, preserve: List[str] | None = None
+) -> None:
+    """Read-modify-write of a bench JSON shared by several benches.
+
+    BENCH_serving.json is written by both the serving bench (its whole
+    record) and the replan bench (the ``"replan"`` section); a rerun of
+    one must never drop the other's recorded section.
+
+    With ``preserve=None`` every prior top-level key survives unless
+    ``updates`` replaces it (section writers).  A whole-record writer
+    passes the explicit list of *foreign* keys to keep — everything
+    else it owns, so keys it stopped emitting are dropped instead of
+    lingering as stale data from an older code version.  An unreadable
+    or missing prior file degrades to a plain write.
+    """
+    prior: Dict = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                prior = json.load(f)
+        except (OSError, ValueError):
+            prior = {}
+    if preserve is not None:
+        prior = {k: v for k, v in prior.items() if k in preserve}
+    prior.update(updates)
+    with open(path, "w") as f:
+        json.dump(prior, f, indent=1, default=str)
 
 
 def time_call(fn: Callable, *args, repeats: int = 3, **kw) -> float:

@@ -9,6 +9,11 @@ would materialize a multi-GiB dense tensor).  Speedups are reported as
 per-query throughput ratios measured on the same workload distribution,
 plus a direct same-size comparison on the subsample.
 
+Every stage is timed best-of-3 and the min/median/max spread is recorded
+in BENCH_pipeline.json (``spread`` per stage), so the ROADMAP timing
+targets (e.g. grouping < 0.8s) are judged against the spread instead of
+a single shot of container noise.
+
 Also records interpret-mode wall times for the flat vs query-blocked
 Pallas kernel (regression tracking only — interpret mode is not TPU
 performance; the grid-cell count is the hardware-independent signal).
@@ -56,15 +61,29 @@ GROUP_SIZE = 64
 BATCH_SIZE = 256
 
 
-def _t(fn, *args, repeats: int = 1, **kw):
-    """(best wall time, last result) — best-of-N tames container noise."""
-    best = float("inf")
+def _t(fn, *args, repeats: int = 3, **kw):
+    """({min, median, max, repeats} wall times, last result).
+
+    Best-of-N (the ``min``) is what speedups are computed from — it is
+    the least noise-contaminated estimate on a shared container — but
+    the full spread is recorded so a single lucky/unlucky shot can be
+    told apart from a real regression (container timings swing 2-4x
+    under load; see ROADMAP on the grouping target).
+    """
+    times = []
     out = None
     for _ in range(repeats):
         t0 = time.perf_counter()
         out = fn(*args, **kw)
-        best = min(best, time.perf_counter() - t0)
-    return best, out
+        times.append(time.perf_counter() - t0)
+    ts = sorted(times)
+    stats = {
+        "min": ts[0],
+        "median": ts[len(ts) // 2],
+        "max": ts[-1],
+        "repeats": repeats,
+    }
+    return stats, out
 
 
 def run() -> list:
@@ -84,34 +103,48 @@ def run() -> list:
     sample = qs[:REF_SAMPLE]
 
     # ---- build_cooccurrence: full history vectorized vs sampled loop ----
-    t_cooc, graph = _t(build_cooccurrence, qs, NUM_ROWS, repeats=2)
-    t_cooc_ref, _ = _t(_reference_build_cooccurrence, sample, NUM_ROWS, repeats=2)
+    st_cooc, graph = _t(build_cooccurrence, qs, NUM_ROWS)
+    st_cooc_ref, _ = _t(_reference_build_cooccurrence, sample, NUM_ROWS)
+    t_cooc, t_cooc_ref = st_cooc["min"], st_cooc_ref["min"]
     sp_cooc = (t_cooc_ref / REF_SAMPLE) / (t_cooc / NUM_QUERIES)
     record["build_cooccurrence"] = {
         "vectorized_s_full": t_cooc,
+        "spread": st_cooc,
         "reference_s_sample": t_cooc_ref,
         "throughput_speedup": sp_cooc,
         "edges": graph.edge_count(),
     }
 
     # ---- grouping / replication / layout (vectorized-consumer timing) ----
-    # repeats=2 (best-of-N) matches the protocol of the other stages;
-    # note the PR-1 recorded grouping baseline (1.95s) was single-shot,
-    # so cross-PR comparisons of this stage carry that protocol delta
-    # on top of the algorithmic change.
-    t_group, grouping = _t(correlation_aware_grouping, graph, GROUP_SIZE, repeats=2)
-    t_plan, plan = _t(plan_replication, grouping, graph.freq, BATCH_SIZE, repeats=2)
+    # best-of-3 with the recorded min/median/max spread, so the < 0.8s
+    # grouping target in ROADMAP is judged against the spread rather
+    # than a single shot of container noise.  (The PR-1 recorded 1.95s
+    # grouping baseline was single-shot; cross-PR comparisons of this
+    # stage carry that protocol delta on top of the algorithmic change.)
+    st_group, grouping = _t(correlation_aware_grouping, graph, GROUP_SIZE)
+    st_plan, plan = _t(plan_replication, grouping, graph.freq, BATCH_SIZE)
+    t_group, t_plan = st_group["min"], st_plan["min"]
     layout = build_layout(grouping, plan, dim=128)
-    record["grouping"] = {"seconds": t_group, "num_groups": grouping.num_groups}
-    record["replication"] = {"seconds": t_plan, "num_tiles": layout.num_tiles}
+    record["grouping"] = {
+        "seconds": t_group,
+        "spread": st_group,
+        "num_groups": grouping.num_groups,
+    }
+    record["replication"] = {
+        "seconds": t_plan,
+        "spread": st_plan,
+        "num_tiles": layout.num_tiles,
+    }
 
     # ---- query compile: full history sparse + same-size dense vs loop ----
-    t_acts, acts = _t(compile_activations, layout, qs, repeats=2)
-    t_bm_vec, _ = _t(query_tile_bitmaps, layout, sample, repeats=2)
-    t_bm_ref, _ = _t(_reference_query_tile_bitmaps, layout, sample, repeats=2)
+    st_acts, acts = _t(compile_activations, layout, qs)
+    st_bm_vec, _ = _t(query_tile_bitmaps, layout, sample)
+    st_bm_ref, _ = _t(_reference_query_tile_bitmaps, layout, sample)
+    t_acts, t_bm_vec, t_bm_ref = st_acts["min"], st_bm_vec["min"], st_bm_ref["min"]
     sp_bm_rate = (t_bm_ref / REF_SAMPLE) / (t_acts / NUM_QUERIES)
     record["query_tile_bitmaps"] = {
         "vectorized_sparse_s_full": t_acts,
+        "spread": st_acts,
         "activations_full": acts.num_activations,
         "vectorized_dense_s_sample": t_bm_vec,
         "reference_dense_s_sample": t_bm_ref,
@@ -120,11 +153,13 @@ def run() -> list:
     }
 
     # ---- simulate_batch: full history vectorized vs sampled loop --------
-    t_sim, rep = _t(simulate_batch, layout, qs, repeats=2)
-    t_sim_ref, _ = _t(_reference_simulate_batch, layout, sample, repeats=2)
+    st_sim, rep = _t(simulate_batch, layout, qs)
+    st_sim_ref, _ = _t(_reference_simulate_batch, layout, sample)
+    t_sim, t_sim_ref = st_sim["min"], st_sim_ref["min"]
     sp_sim = (t_sim_ref / REF_SAMPLE) / (t_sim / NUM_QUERIES)
     record["simulate_batch"] = {
         "vectorized_s_full": t_sim,
+        "spread": st_sim,
         "reference_s_sample": t_sim_ref,
         "throughput_speedup": sp_sim,
         "activations": rep.activations,

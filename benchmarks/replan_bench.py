@@ -1,0 +1,249 @@
+"""Online-replanning benchmark → the ``replan`` section of BENCH_serving.json.
+
+Measures the acceptance contract of the drift-aware replanning datapath
+(DESIGN.md §6) on a synthetic hot-set rotation:
+
+  * **patched vs rebuilt tiles** — tiles the incremental
+    :func:`repro.dist.replan.compute_plan_patch` DMAs per drift event vs
+    the tiles a from-scratch ``plan_shards`` + ``build_shard_images``
+    rebuild would move.  The patch must stay at the moved groups' tiles,
+    never the image.
+  * **per-shard grid cells before/after drift** — the stale plan serving
+    drifted traffic vs the patched plan serving the same traffic (hot
+    groups back in the replicated round-robin set shrink the busiest
+    shard's block unions).
+  * **bit-identity** — the patched images + plan serve the drifted probe
+    bit-identically to the fresh rebuild (integer tables, exact sums);
+    asserted inline, a mismatch fails the bench.
+  * an end-to-end :class:`~repro.serve.sharded.ShardedEmbeddingServer`
+    drift replay recording the replan counters.
+
+Runs per shard count (``RECROSS_REPLAN_SHARDS``, default "2,4");
+emulation unless the host presents enough devices.  Env knobs:
+``RECROSS_REPLAN_ROWS`` / ``RECROSS_REPLAN_HISTORY`` (default 20_000),
+``RECROSS_REPLAN_BATCH`` (32).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, mesh_for, update_bench_json
+from repro.core import (
+    build_cooccurrence,
+    build_layout,
+    compile_queries,
+    correlation_aware_grouping,
+    plan_replication,
+    shard_block_queries,
+)
+from repro.data import zipf_queries
+from repro.dist import (
+    apply_plan_patch,
+    build_fused_image,
+    compute_plan_patch,
+    plan_shards,
+)
+from repro.kernels import crossbar_reduce_sharded, patch_shard_images
+
+JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serving.json")
+
+NUM_ROWS = int(os.environ.get("RECROSS_REPLAN_ROWS", 20_000))
+NUM_HISTORY = int(os.environ.get("RECROSS_REPLAN_HISTORY", 20_000))
+PROBE_BATCH = int(os.environ.get("RECROSS_REPLAN_BATCH", 32))
+SHARD_COUNTS = tuple(
+    int(s) for s in os.environ.get("RECROSS_REPLAN_SHARDS", "2,4").split(",")
+)
+MEAN_BAG = float(os.environ.get("RECROSS_PIPELINE_MEAN_BAG", 41.32))
+GROUP_SIZE = 64
+Q_BLOCK = 8
+DIM = 128
+EQ1_BATCH = 256
+
+
+def _stream_group_freq(stream, layout) -> np.ndarray:
+    """Per-group access frequency of a query stream (unique rows/query)."""
+    gf = np.zeros(layout.num_groups, dtype=np.float64)
+    for q in stream:
+        rows = np.unique(np.asarray(q, dtype=np.int64))
+        np.add.at(gf, layout.group_of[rows], 1.0)
+    return gf
+
+
+def run() -> list:
+    rows_out = []
+    record: dict = {
+        "config": {
+            "num_rows": NUM_ROWS,
+            "history_queries": NUM_HISTORY,
+            "probe_batch": PROBE_BATCH,
+            "q_block": Q_BLOCK,
+            "group_size": GROUP_SIZE,
+            "dim": DIM,
+            "mean_bag": MEAN_BAG,
+            "shard_counts": list(SHARD_COUNTS),
+            "devices": len(jax.devices()),
+        },
+    }
+
+    # ---- offline pipeline + a rotated-hot-set drift workload -----------
+    hist = zipf_queries(NUM_ROWS, NUM_HISTORY, MEAN_BAG, seed=0,
+                        num_baskets=max(256, NUM_HISTORY // 32))
+    graph = build_cooccurrence(hist, NUM_ROWS)
+    grouping = correlation_aware_grouping(graph, GROUP_SIZE)
+    plan = plan_replication(grouping, graph.freq, EQ1_BATCH)
+    layout = build_layout(grouping, plan, DIM)
+    gfreq = grouping.group_freq(graph.freq)
+    table = np.random.default_rng(0).integers(
+        -8, 9, size=(NUM_ROWS, DIM)
+    ).astype(np.float32)
+    fused = build_fused_image([layout], [table])
+
+    perm = np.random.default_rng(7).permutation(NUM_ROWS)
+    drift_stream = [
+        perm[np.asarray(q, dtype=np.int64)]
+        for q in zipf_queries(NUM_ROWS, max(PROBE_BATCH * 8, 256), MEAN_BAG,
+                              seed=11, num_baskets=max(256, NUM_HISTORY // 32))
+    ]
+    drift_gfreq = _stream_group_freq(drift_stream, layout)
+    # Eq. 1 is magnitude-sensitive: evaluate the drifted distribution at
+    # the training-history mass (what the serving driver does too)
+    drift_gfreq *= gfreq.sum() / max(drift_gfreq.sum(), 1e-12)
+    probe = drift_stream[:PROBE_BATCH]
+    cq = compile_queries(layout, probe, replica_block=Q_BLOCK)
+
+    shards_rec = {}
+    for S in SHARD_COUNTS:
+        sp = plan_shards([layout], [plan], S, group_freqs=[gfreq])
+        images = jnp.asarray(sp.build_shard_images(fused))
+        mesh = mesh_for(S)
+
+        # stale plan serving drifted traffic
+        sbq_before = shard_block_queries(cq, sp, Q_BLOCK)
+        cells_before = sbq_before.grid_cells_per_shard()
+
+        # incremental patch to the drifted frequencies
+        t0 = time.perf_counter()
+        patch = compute_plan_patch(
+            sp, drift_gfreq, eq1_batch=EQ1_BATCH,
+            capacity=int(images.shape[1]),
+        )
+        sp_patched = apply_plan_patch(sp, patch)
+        compute_s = time.perf_counter() - t0
+        images_patched = patch_shard_images(images, patch, fused)
+        sbq_after = shard_block_queries(cq, sp_patched, Q_BLOCK)
+        cells_after = sbq_after.grid_cells_per_shard()
+
+        # from-scratch rebuild on the same drifted frequencies
+        fresh = plan_shards([layout], [plan], S,
+                            group_freqs=[drift_gfreq], eq1_batch=EQ1_BATCH)
+        images_fresh = jnp.asarray(fresh.build_shard_images(fused))
+        sbq_fresh = shard_block_queries(cq, fresh, Q_BLOCK)
+        out_patched = np.asarray(crossbar_reduce_sharded(
+            images_patched, sbq_after.tile_ids, sbq_after.bitmaps, mesh=mesh,
+        ))[: sbq_after.batch]
+        out_fresh = np.asarray(crossbar_reduce_sharded(
+            images_fresh, sbq_fresh.tile_ids, sbq_fresh.bitmaps, mesh=mesh,
+        ))[: sbq_fresh.batch]
+        np.testing.assert_array_equal(out_patched, out_fresh)
+
+        rebuilt_tiles = int(fresh.local_num_tiles.sum())
+        shards_rec[str(S)] = {
+            "patched_tiles": patch.num_moved_tiles,
+            "rebuilt_tiles": rebuilt_tiles,
+            "patch_fraction": patch.num_moved_tiles / max(rebuilt_tiles, 1),
+            "promoted_groups": len(patch.promoted),
+            "demoted_groups": len(patch.demoted),
+            "freed_slots": len(patch.freed),
+            "capacity_before": int(images.shape[1]),
+            "capacity_after": patch.new_capacity,
+            "grid_cells_per_shard_before": cells_before,
+            "grid_cells_per_shard_after": cells_after,
+            "compute_patch_s": compute_s,
+            "bit_identical_to_rebuild": True,
+            "mode": "shard_map" if mesh is not None else "emulated",
+        }
+        rows_out.append({
+            "name": f"replan_shards{S}",
+            "us_per_call": f"{compute_s * 1e6:.0f}",
+            "derived": (
+                f"patched={patch.num_moved_tiles}/rebuild={rebuilt_tiles};"
+                f"cells_before={cells_before};cells_after={cells_after}"
+            ),
+        })
+
+    record["shards"] = shards_rec
+    worst = max(r["patch_fraction"] for r in shards_rec.values())
+    record["never_full_rebuild"] = bool(worst < 1.0)
+
+    # ---- end-to-end server drift replay --------------------------------
+    from repro.serve import ReplanConfig, ShardedEmbeddingServer
+
+    srv_rows = max(NUM_ROWS // 8, 256)
+    srv_hist = max(NUM_HISTORY // 8, 256)
+    S = max(SHARD_COUNTS)
+    tables = {
+        "t0": np.random.default_rng(3).integers(
+            -8, 9, size=(srv_rows, DIM)
+        ).astype(np.float32),
+    }
+    histories = {
+        "t0": zipf_queries(srv_rows, srv_hist, MEAN_BAG, seed=5,
+                           num_baskets=max(256, srv_hist // 32)),
+    }
+    server = ShardedEmbeddingServer(
+        tables, histories, num_shards=S, mesh=mesh_for(S),
+        q_block=Q_BLOCK, group_size=GROUP_SIZE, batch_size=PROBE_BATCH,
+        replan=ReplanConfig(threshold=0.2, half_life=2.0,
+                            min_queries=PROBE_BATCH, slack_tiles=8),
+    )
+    sperm = np.random.default_rng(13).permutation(srv_rows)
+    sstream = zipf_queries(srv_rows, PROBE_BATCH * 16, MEAN_BAG, seed=17,
+                           num_baskets=max(256, srv_hist // 32))
+    # rotate the hot set early: most of the replay runs drifted, so the
+    # decayed estimate has time to cross the threshold and the staged
+    # patch has flushes left to apply in
+    cut = len(sstream) // 4
+    sstream = sstream[:cut] + [
+        sperm[np.asarray(q, dtype=np.int64)] for q in sstream[cut:]
+    ]
+    for q in sstream:
+        server.submit("t0", q)
+    server.flush()
+    record["server"] = server.report()
+    srv = server.stats
+    rows_out.append({
+        "name": "replan_server",
+        "us_per_call": f"{srv.wall_s * 1e6:.0f}",
+        "derived": (
+            f"replans={srv.replans};rebases={srv.rebases};"
+            f"patched_tiles={srv.patched_tiles};"
+            f"promoted={srv.promoted_groups};demoted={srv.demoted_groups}"
+        ),
+    })
+    rows_out.append({
+        "name": "replan_never_full_rebuild",
+        "us_per_call": "",
+        "derived": (
+            f"worst_patch_fraction={worst:.3f}<1:"
+            f"{record['never_full_rebuild']};json=BENCH_serving.json"
+        ),
+    })
+
+    # merge into BENCH_serving.json (the serving bench owns the rest)
+    update_bench_json(JSON_PATH, {"replan": record})
+
+    return rows_out
+
+
+def main():
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -20,6 +20,7 @@ from benchmarks import (
     fig11_cpu_gpu,
     kernel_bench,
     pipeline_bench,
+    replan_bench,
     serving_bench,
 )
 from benchmarks.common import emit
@@ -34,6 +35,9 @@ MODULES = {
     "multiread": beyond_multiread,
     "pipeline": pipeline_bench,
     "serving": serving_bench,
+    # after serving: both write BENCH_serving.json (each preserves the
+    # other's sections, but keep the full-run order deterministic)
+    "replan": replan_bench,
 }
 
 

@@ -27,7 +27,6 @@ Env knobs: ``RECROSS_SERVING_ROWS`` / ``RECROSS_SERVING_HISTORY``
 
 from __future__ import annotations
 
-import json
 import os
 import time
 
@@ -35,7 +34,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit
+from benchmarks.common import emit, mesh_for, update_bench_json
 from repro.core import (
     block_compiled_queries,
     build_cooccurrence,
@@ -66,12 +65,6 @@ GROUP_SIZE = 64
 Q_BLOCK = 8
 DIM = 128
 BATCH_SIZE = 256
-
-
-def _mesh_for(num_shards: int):
-    if num_shards > 1 and len(jax.devices()) >= num_shards:
-        return jax.make_mesh((1, num_shards), ("data", "model"))
-    return None
 
 
 def run() -> list:
@@ -132,7 +125,7 @@ def run() -> list:
         sp = plan_shards([layout], [plan], S, group_freqs=[gfreq])
         sbq = shard_block_queries(cq, sp, Q_BLOCK)
         images = jnp.asarray(sp.build_shard_images(fused))
-        mesh = _mesh_for(S)
+        mesh = mesh_for(S)
         kw = dict(mesh=mesh, combine_chunks=2)
         out = crossbar_reduce_sharded(images, sbq.tile_ids, sbq.bitmaps, **kw)  # warm
         np.testing.assert_allclose(
@@ -190,7 +183,7 @@ def run() -> list:
     from repro.serve import ShardedEmbeddingServer
 
     server = ShardedEmbeddingServer(
-        tables, histories, num_shards=S, mesh=_mesh_for(S),
+        tables, histories, num_shards=S, mesh=mesh_for(S),
         q_block=Q_BLOCK, group_size=GROUP_SIZE, batch_size=SERVE_BATCH,
     )
     stream = zipf_queries(mt_rows, SERVE_BATCH * 2, MEAN_BAG, seed=11,
@@ -210,8 +203,9 @@ def run() -> list:
         ),
     })
 
-    with open(JSON_PATH, "w") as f:
-        json.dump(record, f, indent=1, default=str)
+    # whole-record writer: keep only the replan bench's foreign section,
+    # so serving keys this version stopped emitting don't linger
+    update_bench_json(JSON_PATH, record, preserve=["replan"])
 
     rows_out.append({
         "name": "serving_grid_target",

@@ -49,6 +49,7 @@ from repro.core.reduction import (
     block_compiled_queries,
     compile_queries,
     concat_compiled_queries,
+    fused_group_loads,
     offset_compiled_queries,
     reduce_dense_oracle,
     reduce_via_layout,
@@ -71,6 +72,7 @@ __all__ = [
     "simulate_nmars_baseline",
     "BlockedQueries", "CompiledQueries", "ShardedBlockedQueries",
     "block_compiled_queries", "compile_queries", "concat_compiled_queries",
+    "fused_group_loads",
     "offset_compiled_queries", "reduce_dense_oracle", "reduce_via_layout",
     "shard_block_queries",
     "baselines",

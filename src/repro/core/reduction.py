@@ -321,6 +321,42 @@ def shard_block_queries(
     )
 
 
+def fused_group_loads(
+    cq: CompiledQueries, tile_group: np.ndarray, num_groups: int
+) -> np.ndarray:
+    """Per-fused-group active-row counts of a compiled batch.
+
+    The serve-time observation feeding drift tracking (DESIGN.md §6):
+    instead of re-walking the ragged host queries, the load is read off
+    the batch that was compiled for the kernel anyway.  Each valid
+    (query, tile) slot contributes its wordline popcount to the tile's
+    group, so a query touching *k* rows of a group counts *k* — the same
+    per-row semantics as ``CoOccurrenceGraph.freq`` aggregated by
+    ``Grouping.group_freq``, which is what the shard plan's
+    ``group_load`` was built from.  Replica choice does not matter: all
+    replicas of a group map to the same group id.
+
+    Args:
+      cq: a compiled batch in the *fused* tile space (post
+        :func:`offset_compiled_queries` / :func:`concat_compiled_queries`).
+      tile_group: ``(num_tiles,)`` fused tile id → fused group id
+        (``repeat(arange(G), group_copies)``).
+      num_groups: fused group count G.
+
+    Returns:
+      ``(G,)`` float64 active-row counts.
+    """
+    ids = np.asarray(cq.tile_ids)
+    valid = ids >= 0
+    if not valid.any():
+        return np.zeros(num_groups, dtype=np.float64)
+    groups = np.asarray(tile_group)[ids[valid].astype(np.int64)]
+    rows = np.asarray(cq.bitmaps)[valid].sum(axis=-1)
+    return np.bincount(
+        groups, weights=rows.astype(np.float64), minlength=num_groups
+    ).astype(np.float64)
+
+
 def offset_compiled_queries(cq: CompiledQueries, tile_offset: int) -> CompiledQueries:
     """Rebases a per-table compile into the fused multi-table tile space."""
     ids = np.asarray(cq.tile_ids)

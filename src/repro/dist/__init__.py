@@ -11,10 +11,20 @@ by the pipeline-parallel example and its schedule math.
 ``repro.dist.shard_plan`` owns the crossbar shard planner: which groups
 replicate across every model shard (Eq.-1 hot sets) vs live sharded-once,
 over the fused multi-table tile space.
+
+``repro.dist.replan`` owns the incremental plan patcher for serve-time
+frequency drift: promote newly-hot groups into the replicated set,
+demote cooled ones, DMA only the moved tiles (DESIGN.md §6).
 """
 
 from repro.dist import sharding
 from repro.dist import pipeline_parallel
+from repro.dist.replan import (
+    PlanPatch,
+    apply_plan_patch,
+    compute_plan_patch,
+    rescale_load_to_plan,
+)
 from repro.dist.shard_plan import (
     ShardPlan,
     TableSegment,
@@ -25,4 +35,6 @@ from repro.dist.shard_plan import (
 __all__ = [
     "sharding", "pipeline_parallel",
     "ShardPlan", "TableSegment", "build_fused_image", "plan_shards",
+    "PlanPatch", "apply_plan_patch", "compute_plan_patch",
+    "rescale_load_to_plan",
 ]

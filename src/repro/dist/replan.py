@@ -1,0 +1,308 @@
+"""Incremental shard-plan patching for serve-time frequency drift.
+
+The plan-patch half of the online replanning datapath (DESIGN.md §6).
+:func:`repro.dist.shard_plan.plan_shards` places groups from
+training-time frequencies; at serve time the observed distribution
+drifts (:mod:`repro.serve.drift` tracks it), and the paper's Eq.-1 wins
+depend on the *currently hot* groups being the replicated ones.  Rather
+than rebuilding the plan and re-DMA-ing the whole stacked shard image,
+this module computes an **incremental patch** against the live plan:
+
+  * **promote** — groups whose Eq.-1 log-scaled copy count on the
+    drifted load now reaches the shard count move sharded-once →
+    replicated-everywhere.  The owner keeps its tiles; every other
+    shard receives a copy (``copies[g] × (S-1)`` tile DMAs).
+  * **demote** — replicated groups that cooled below the threshold move
+    to sharded-once on the shard that is least loaded under the drifted
+    frequencies (greedy, descending load — the same rule as the fresh
+    planner).  Every shard already holds the tiles, so demotion frees
+    ``S-1`` slots and DMAs **nothing**.
+  * everything else **stays put** (placement inertia): a sharded-once
+    group that remains sharded-once keeps its owner even if a fresh
+    greedy pass would have placed it elsewhere.  That is what bounds the
+    patch at the moved groups' tiles instead of the whole image.
+
+The patch edits only the plan's *placement* arrays (``replicated_group``
+/ ``shard_of_group`` / ``shard_of_tile`` / ``local_tile_of`` /
+``local_num_tiles`` / ``group_load``); the fused tile space, the table
+segments and the intra-shard replica structure (``group_copies``) are
+frozen.  Freed slots leave holes in a shard's local numbering — they are
+never addressed again until a later promotion reuses them, exactly like
+a retired ReRAM crossbar awaiting reprogramming — so
+``ShardPlan.max_local_tiles`` tracks the highest allocated slot, not the
+resident count.
+
+Image application is :func:`repro.kernels.sharded.patch_shard_images`:
+only the ``dma`` triples move tile data, never the full image.
+``tests/test_replan.py`` pins patched-plan serving bit-identical to a
+from-scratch ``plan_shards(..., eq1_batch=...)`` rebuild on the drifted
+frequencies.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core.replication import log_scaled_copies
+from repro.dist.shard_plan import ShardPlan
+
+
+@dataclasses.dataclass
+class PlanPatch:
+    """One drift event's incremental edit of a :class:`ShardPlan`.
+
+    Attributes:
+      promoted: fused group ids moving sharded-once → replicated.
+      demoted: ``(fused group id, new owner shard)`` pairs moving
+        replicated → sharded-once.
+      dma: ``(shard, local_slot, fused_tile)`` triples — the ONLY tile
+        data movement the patch requires (new holders of promoted
+        groups).  ``len(dma) == Σ_promoted copies[g] · (S-1)``.
+      freed: ``(shard, local_slot)`` slots released by demotions; no
+        data movement, the slot just stops being addressed.
+      new_capacity: per-shard image depth required after the patch
+        (>= the capacity the patch was computed against; grows only when
+        promotions exhaust the free slots + slack headroom).
+      drifted_load: the ``(G,)`` fused-group load snapshot the patch was
+        computed on; becomes the patched plan's ``group_load`` so the
+        drift statistic re-anchors to the new placement.
+    """
+
+    promoted: List[int]
+    demoted: List[Tuple[int, int]]
+    dma: List[Tuple[int, int, int]]
+    freed: List[Tuple[int, int]]
+    new_capacity: int
+    drifted_load: np.ndarray
+
+    @property
+    def num_moved_groups(self) -> int:
+        return len(self.promoted) + len(self.demoted)
+
+    @property
+    def num_moved_tiles(self) -> int:
+        """Tiles the patch DMAs — the acceptance metric vs a full rebuild."""
+        return len(self.dma)
+
+    def is_noop(self) -> bool:
+        """True when drift changed no replication class (rebase only)."""
+        return not (self.promoted or self.demoted)
+
+    def summary(self) -> dict:
+        return {
+            "promoted_groups": len(self.promoted),
+            "demoted_groups": len(self.demoted),
+            "moved_tiles": self.num_moved_tiles,
+            "freed_slots": len(self.freed),
+            "new_capacity": self.new_capacity,
+        }
+
+
+def rescale_load_to_plan(
+    load: np.ndarray, plan: ShardPlan, reference_totals
+) -> np.ndarray:
+    """Rescales each table segment of a load vector to a reference mass.
+
+    Eq. 1's copy count ``1 + floor(log f_g / log f_total · log B)`` is
+    **not scale-invariant**: shrinking every frequency by a common
+    factor lowers ``log f_g / log f_total`` for every group.  A decayed
+    serve-time estimate sits orders of magnitude below the training
+    totals the offline plan was computed from, so feeding it to Eq. 1
+    raw would systematically under-promote — hot-set rotations would
+    demote cooled groups but rarely replicate the newly-hot ones.
+    Rescaling each segment to its training-time total compares
+    *distributions* at the calibrated magnitude instead.
+
+    Args:
+      load: ``(G,)`` fused-group load (e.g. ``DriftTracker.load()``).
+      plan: the plan whose table segments define the scaling blocks.
+      reference_totals: per-table reference mass, in segment order
+        (the server captures ``Σ group_load`` per segment at build).
+
+    Returns:
+      A new ``(G,)`` float64 array; segments with zero observed or zero
+      reference mass are left unscaled.
+    """
+    out = np.asarray(load, dtype=np.float64).copy()
+    for seg, total in zip(plan.tables, reference_totals):
+        gs = slice(seg.group_offset, seg.group_offset + seg.num_groups)
+        mass = out[gs].sum()
+        if mass > 0.0 and total > 0.0:
+            out[gs] *= float(total) / mass
+    return out
+
+
+def _group_tile_base(plan: ShardPlan) -> np.ndarray:
+    if plan.group_copies is None:
+        raise ValueError(
+            "plan has no group_copies — replanning needs a plan built by "
+            "plan_shards (not a hand-constructed ShardPlan)"
+        )
+    base = np.zeros(plan.num_groups, dtype=np.int64)
+    np.cumsum(plan.group_copies[:-1], out=base[1:])
+    return base
+
+
+def compute_plan_patch(
+    plan: ShardPlan,
+    drifted_load: np.ndarray,
+    *,
+    eq1_batch: int,
+    capacity: int | None = None,
+) -> PlanPatch:
+    """Diffs the live plan against Eq. 1 evaluated on the drifted load.
+
+    Args:
+      plan: the currently-serving :class:`ShardPlan`.
+      drifted_load: ``(G,)`` fused-group access load (e.g. the decayed
+        estimate from :class:`repro.serve.drift.DriftTracker`).
+      eq1_batch: Eq. 1's ``batch`` for the replicate-vs-shard threshold
+        (the server passes its ``batch_size_for_eq1``).
+      capacity: current per-shard image depth (slots a promotion may
+        fill without growing the image); defaults to
+        ``plan.max_local_tiles``.
+
+    Returns:
+      A :class:`PlanPatch`.  Pure host-side computation — no device
+      arrays are touched, so it can run while a flush executes on
+      device (the double-buffered staging in
+      :class:`repro.serve.sharded.ShardedEmbeddingServer`).
+    """
+    load = np.asarray(drifted_load, dtype=np.float64)
+    if load.shape != (plan.num_groups,):
+        raise ValueError(
+            f"drifted load has shape {load.shape}, plan has "
+            f"{plan.num_groups} groups"
+        )
+    S = plan.num_shards
+    tile_base = _group_tile_base(plan)
+    copies = plan.group_copies
+    if capacity is None:
+        capacity = plan.max_local_tiles
+
+    # target replicated set: Eq. 1 on the drifted load, per table segment
+    # (Eq. 1 normalizes by the table's total frequency)
+    target = np.zeros(plan.num_groups, dtype=bool)
+    for seg in plan.tables:
+        gs = slice(seg.group_offset, seg.group_offset + seg.num_groups)
+        target[gs] = log_scaled_copies(load[gs], eq1_batch) >= max(S, 2)
+
+    promoted = np.nonzero(target & ~plan.replicated_group)[0]
+    demote_ids = np.nonzero(~target & plan.replicated_group)[0]
+
+    # drifted load of the placement that stays put; promoted groups leave
+    # their owner's tally (their work round-robins after the patch)
+    shard_load = np.zeros(S, dtype=np.float64)
+    stays = plan.shard_of_group >= 0
+    stays[promoted] = False
+    np.add.at(shard_load, plan.shard_of_group[stays], load[stays])
+
+    # demotions: greedy least-loaded owner, descending drifted load —
+    # the fresh planner's rule, restricted to the moved groups
+    demoted: List[Tuple[int, int]] = []
+    order = demote_ids[np.argsort(-load[demote_ids], kind="stable")]
+    for g in order.tolist():
+        s = int(min(range(S), key=lambda i: (shard_load[i], i)))
+        demoted.append((g, s))
+        shard_load[s] += load[g]
+
+    # slot bookkeeping: demotions free non-owner slots first, promotions
+    # then fill the lowest free slot per shard (deterministic), growing
+    # the capacity only when a shard has no free slot left
+    used = [
+        set(plan.local_tile_of[s][plan.local_tile_of[s] >= 0].tolist())
+        for s in range(S)
+    ]
+    freed: List[Tuple[int, int]] = []
+    for g, o in demoted:
+        for t in range(int(tile_base[g]), int(tile_base[g] + copies[g])):
+            for s in range(S):
+                if s == o:
+                    continue
+                slot = int(plan.local_tile_of[s, t])
+                if slot < 0:
+                    raise ValueError(
+                        f"replicated group {g}: shard {s} does not hold "
+                        f"tile {t}"
+                    )
+                used[s].discard(slot)
+                freed.append((s, slot))
+    free = [sorted(set(range(capacity)) - used[s]) for s in range(S)]
+    grow = [capacity] * S
+    dma: List[Tuple[int, int, int]] = []
+    for g in promoted.tolist():
+        owner = int(plan.shard_of_group[g])
+        for t in range(int(tile_base[g]), int(tile_base[g] + copies[g])):
+            for s in range(S):
+                if s == owner:
+                    continue
+                if free[s]:
+                    slot = free[s].pop(0)
+                else:
+                    slot = grow[s]
+                    grow[s] += 1
+                dma.append((s, slot, t))
+    return PlanPatch(
+        promoted=promoted.tolist(),
+        demoted=demoted,
+        dma=dma,
+        freed=freed,
+        new_capacity=max(grow),
+        drifted_load=load.copy(),
+    )
+
+
+def apply_plan_patch(plan: ShardPlan, patch: PlanPatch) -> ShardPlan:
+    """Applies a patch to the placement arrays; returns a new plan.
+
+    The input plan is not mutated (the server swaps plans atomically
+    between flushes).  Only placement arrays change: the fused tile
+    space, table segments and ``group_copies`` carry over by reference.
+    """
+    S = plan.num_shards
+    tile_base = _group_tile_base(plan)
+    copies = plan.group_copies
+    replicated = plan.replicated_group.copy()
+    shard_of_group = plan.shard_of_group.copy()
+    shard_of_tile = plan.shard_of_tile.copy()
+    local = plan.local_tile_of.copy()
+    nloc = plan.local_num_tiles.copy()
+
+    for g, o in patch.demoted:
+        if not replicated[g]:
+            raise ValueError(f"demoting group {g} which is not replicated")
+        replicated[g] = False
+        shard_of_group[g] = o
+        for t in range(int(tile_base[g]), int(tile_base[g] + copies[g])):
+            shard_of_tile[t] = o
+            for s in range(S):
+                if s != o and local[s, t] >= 0:
+                    local[s, t] = -1
+                    nloc[s] -= 1
+    for g in patch.promoted:
+        if replicated[g]:
+            raise ValueError(f"promoting group {g} which is already replicated")
+        replicated[g] = True
+        shard_of_group[g] = -1
+        ts = slice(int(tile_base[g]), int(tile_base[g] + copies[g]))
+        shard_of_tile[ts] = -1
+    for s, slot, t in patch.dma:
+        if local[s, t] >= 0:
+            raise ValueError(f"shard {s} already holds fused tile {t}")
+        local[s, t] = slot
+        nloc[s] += 1
+
+    return ShardPlan(
+        num_shards=S,
+        tables=plan.tables,
+        replicated_group=replicated,
+        shard_of_group=shard_of_group,
+        shard_of_tile=shard_of_tile,
+        local_tile_of=local,
+        local_num_tiles=nloc,
+        group_load=patch.drifted_load.copy(),
+        group_copies=copies,
+    )

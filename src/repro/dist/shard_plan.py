@@ -1,13 +1,15 @@
 """Shard planner: partition the crossbar image over the ``model`` axis.
 
-A single device cannot hold the replicated crossbar image for many DLRM
-tables at production scale, so the image must shard across the model
-mesh axis *without* giving back the per-shard DMA amortization of the
-query-blocked kernel.  The planner decides, per group (and per table —
-multiple tables fuse into one tile id space):
+This is the placement half of the sharded serving datapath documented in
+DESIGN.md §4.  A single device cannot hold the replicated crossbar image
+for many DLRM tables at production scale, so the image must shard across
+the model mesh axis *without* giving back the per-shard DMA amortization
+of the query-blocked kernel.  The planner decides, per group (and per
+table — multiple tables fuse into one tile id space):
 
-  * **replicated-everywhere** — hot groups whose Eq.-1 copy count
-    reaches the shard count (:func:`repro.core.replication.
+  * **replicated-everywhere** — hot groups whose Eq.-1 log-scaled copy
+    count ``floor(log(freq_g)/log(freq_total) · log(batch))`` reaches
+    the shard count (:func:`repro.core.replication.
     shard_replication_sets`) are stored on *every* shard.  Their
     activations never cross shards; ownership round-robins over blocks
     so the hottest work spreads across the mesh.
@@ -23,6 +25,11 @@ map, one stacked shard image, and one kernel invocation serve every
 table at once.  Consumed by
 :func:`repro.core.reduction.shard_block_queries` (per-shard block
 compiler) and :mod:`repro.kernels.sharded` (the shard_map reduction).
+
+Plans are not immutable at serve time: :mod:`repro.dist.replan` edits
+the placement arrays *incrementally* when serve-time access frequencies
+drift (DESIGN.md §6).  The fields a patch may touch and the fields that
+stay frozen are spelled out there.
 """
 
 from __future__ import annotations
@@ -33,7 +40,11 @@ from typing import List, Sequence
 import numpy as np
 
 from repro.core.mapping import CrossbarLayout
-from repro.core.replication import ReplicationPlan, shard_replication_sets
+from repro.core.replication import (
+    ReplicationPlan,
+    log_scaled_copies,
+    shard_replication_sets,
+)
 
 
 @dataclasses.dataclass
@@ -69,7 +80,15 @@ class ShardPlan:
         tile id on that shard, -1 where the shard does not hold the tile.
       local_num_tiles: ``(num_shards,)`` — tiles resident per shard
         (sharded-owned + replicated).
-      group_load: ``(G,)`` float64 — the load metric used for balancing.
+      group_load: ``(G,)`` float64 — the load metric the placement was
+        balanced for.  After an online replan this is the drifted
+        snapshot the patch was computed on.
+      group_copies: ``(G,)`` int64 — intra-shard replica tiles per fused
+        group (frozen: physical tiles never change at serve time).
+        Group ``g``'s fused tiles are the contiguous range starting at
+        ``cumsum(group_copies)[g-1]`` — the layout invariant
+        :func:`plan_shards` pins.  Consumed by
+        :func:`repro.dist.replan.compute_plan_patch`.
     """
 
     num_shards: int
@@ -80,6 +99,7 @@ class ShardPlan:
     local_tile_of: np.ndarray
     local_num_tiles: np.ndarray
     group_load: np.ndarray
+    group_copies: np.ndarray | None = None
 
     @property
     def num_groups(self) -> int:
@@ -91,8 +111,16 @@ class ShardPlan:
 
     @property
     def max_local_tiles(self) -> int:
-        """Stacked per-shard image depth (max resident tiles over shards)."""
-        return int(self.local_num_tiles.max()) if self.num_shards else 0
+        """Stacked per-shard image depth (highest local tile id + 1).
+
+        For a fresh plan local numbering is dense, so this equals
+        ``local_num_tiles.max()``; after incremental patches a shard's
+        numbering may contain holes (freed slots), so the depth is the
+        highest *allocated* slot, not the resident count.
+        """
+        if self.local_tile_of.size == 0:
+            return 0
+        return int(self.local_tile_of.max(initial=-1)) + 1
 
     @property
     def replicated_tiles(self) -> int:
@@ -113,9 +141,10 @@ class ShardPlan:
 
         Returns:
           ``(num_shards, max_local_tiles, tile_rows, dim)`` — shard s's
-          resident tiles at their local ids; trailing padding tiles are
-          zero, so a stray access contributes nothing to a sum (the same
-          contract as padding slots inside a tile).
+          resident tiles at their local ids; unallocated slots (trailing
+          padding, and holes left by replan demotions) are zero, so a
+          stray access contributes nothing to a sum (the same contract
+          as padding slots inside a tile).
         """
         if fused_image.shape[0] != self.num_tiles:
             raise ValueError(
@@ -129,7 +158,9 @@ class ShardPlan:
         )
         for s in range(self.num_shards):
             tiles = self.shard_tiles(s)
-            out[s, : tiles.size] = fused_image[tiles]
+            # scatter to the allocated slots, NOT 0..n-1: a patched
+            # plan's local numbering may contain holes
+            out[s, self.local_tile_of[s][tiles]] = fused_image[tiles]
         return out
 
     def memory_summary(self) -> dict:
@@ -175,17 +206,31 @@ def plan_shards(
     *,
     names: Sequence[str] | None = None,
     group_freqs: Sequence[np.ndarray] | None = None,
+    eq1_batch: int | None = None,
 ) -> ShardPlan:
     """Builds the shard placement for one or more tables.
 
     Args:
       layouts: per-table crossbar layouts (uniform ``tile_rows``).
-      plans: per-table Eq.-1 replication plans (same order).
-      num_shards: model-parallel degree (>= 1).
+      plans: per-table Eq.-1 replication plans (same order).  Besides the
+        replicated-everywhere decision (see ``eq1_batch``), only the
+        intra-shard replica *structure* (``copies`` per group) is read —
+        physical tiles are frozen once the layout is built.
       names: optional table names for reporting (default ``t0..tN``).
       group_freqs: optional per-table per-group access frequencies used
         as the balancing load; falls back to Eq.-1 copy counts (which are
         log-frequency, so still hotness-ordered).
+      eq1_batch: when set (requires ``group_freqs``), the
+        replicated-everywhere set is *re-evaluated* from ``group_freqs``
+        via Eq. 1's log-scaled copy count at this batch size instead of
+        being read off the offline ``plans``.  This is the from-scratch
+        reference for online replanning (DESIGN.md §6): passing the
+        drifted frequencies here must produce a plan whose served
+        outputs the incremental patch path reproduces bit-for-bit.  With
+        ``group_freqs`` equal to the training-time group frequencies and
+        ``eq1_batch`` equal to the plans' ``batch_size``, the replicated
+        set is identical to the default path (assuming the ``log``
+        scheme with no area budget).
 
     Returns:
       A :class:`ShardPlan` over the fused group/tile spaces.
@@ -194,6 +239,8 @@ def plan_shards(
         raise ValueError("num_shards must be >= 1")
     if len(layouts) != len(plans) or not layouts:
         raise ValueError("need one replication plan per layout (>= 1 table)")
+    if eq1_batch is not None and group_freqs is None:
+        raise ValueError("eq1_batch re-evaluates Eq. 1 and needs group_freqs")
     if names is None:
         names = [f"t{i}" for i in range(len(layouts))]
     segs = _fuse_segments(names, layouts)
@@ -205,8 +252,15 @@ def plan_shards(
     copies = np.zeros(G, dtype=np.int64)
     for i, (seg, layout, plan) in enumerate(zip(segs, layouts, plans)):
         gs = slice(seg.group_offset, seg.group_offset + seg.num_groups)
-        # Eq.-1 cross-shard rule: copy count >= shard count → replicate
-        replicated[gs] = shard_replication_sets(plan, num_shards)
+        # Eq.-1 cross-shard rule: copy count >= shard count → replicate;
+        # with eq1_batch the copy count is recomputed from the supplied
+        # (possibly drifted) frequencies instead of the offline plan
+        if eq1_batch is not None:
+            replicated[gs] = log_scaled_copies(
+                np.asarray(group_freqs[i], dtype=np.float64), eq1_batch
+            ) >= max(num_shards, 2)
+        else:
+            replicated[gs] = shard_replication_sets(plan, num_shards)
         copies[gs] = layout.copies
         # the fused tile space assumes each group's replica tiles are
         # contiguous in fused-group order (what build_layout emits and
@@ -270,13 +324,28 @@ def plan_shards(
         local_tile_of=local_tile_of,
         local_num_tiles=local_num_tiles,
         group_load=load,
+        group_copies=copies,
     )
 
 
 def build_fused_image(
     layouts: Sequence[CrossbarLayout], tables: Sequence[np.ndarray]
 ) -> np.ndarray:
-    """Concatenated ``(Σ num_tiles, tile_rows, dim)`` multi-table image."""
+    """Builds the concatenated multi-table device image.
+
+    Args:
+      layouts: per-table crossbar layouts, in the same order (and with
+        the same uniform ``dim``) as passed to :func:`plan_shards`.
+      tables: per-table logical ``(rows, dim)`` arrays.
+
+    Returns:
+      ``(Σ num_tiles, tile_rows, dim)`` — each table's permuted,
+      replicated image (:meth:`CrossbarLayout.build_image`) reshaped to
+      tile-major and concatenated on the tile axis, so fused tile id
+      ``tile_offset[t] + k`` indexes table ``t``'s physical tile ``k``.
+      This is also the host-resident master copy online replanning DMAs
+      moved tiles from (DESIGN.md §6).
+    """
     if len(layouts) != len(tables) or not layouts:
         raise ValueError("need one table per layout (>= 1 table)")
     dim = layouts[0].dim

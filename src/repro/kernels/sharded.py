@@ -31,6 +31,7 @@ sharded image goes through the single-shard ``crossbar_reduce`` entries).
 
 from __future__ import annotations
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 from jax import lax
@@ -186,6 +187,52 @@ def crossbar_reduce_tables(
         interpret=interpret,
     )
     return [out[start : start + batch] for start, batch in spans]
+
+
+def patch_shard_images(
+    images: jax.Array,     # (S, capacity, tile_rows, dim) stacked shard images
+    patch,                 # repro.dist.replan.PlanPatch (duck-typed)
+    fused_image: np.ndarray,  # (num_tiles, tile_rows, dim) host master copy
+) -> jax.Array:
+    """DMAs ONLY a plan patch's moved tiles into the stacked shard images.
+
+    The device-side half of online replanning (DESIGN.md §6): the host
+    master image is the DMA source, and the update is one batched
+    scatter of ``len(patch.dma)`` tiles — never a rebuild of the
+    ``(S, capacity, tile_rows, dim)`` stack.  Slots freed by demotions
+    keep their stale bytes; the plan stops addressing them, so they are
+    unreachable (the padding-tile contract only ever covered slots the
+    plan could address).
+
+    When promotions outgrow the current capacity the stack is padded
+    with zero tiles up to ``patch.new_capacity`` first — an allocation,
+    but still no table-sized data movement (the pad is zeros and only
+    the moved tiles are copied in).
+
+    Args:
+      images: the serving image stack (``ShardPlan.build_shard_images``
+        output, possibly already patched and/or slack-padded).
+      patch: the :class:`~repro.dist.replan.PlanPatch` being applied;
+        only ``dma`` and ``new_capacity`` are read.
+      fused_image: the fused multi-table host image the plan indexes
+        (``repro.dist.build_fused_image``).
+
+    Returns:
+      The patched image stack (a new array — jax functional update).
+    """
+    S, capacity = images.shape[0], images.shape[1]
+    if patch.new_capacity > capacity:
+        pad = jnp.zeros(
+            (S, patch.new_capacity - capacity) + images.shape[2:], images.dtype
+        )
+        images = jnp.concatenate([images, pad], axis=1)
+    if not patch.dma:
+        return images
+    shards = jnp.asarray([d[0] for d in patch.dma], dtype=jnp.int32)
+    slots = jnp.asarray([d[1] for d in patch.dma], dtype=jnp.int32)
+    tiles = np.asarray([d[2] for d in patch.dma], dtype=np.int64)
+    moved = jnp.asarray(np.asarray(fused_image)[tiles], dtype=images.dtype)
+    return images.at[shards, slots].set(moved)
 
 
 def combine_bytes_per_batch(

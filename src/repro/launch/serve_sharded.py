@@ -11,6 +11,15 @@ Usage::
 
     PYTHONPATH=src python -m repro.launch.serve_sharded --shards 4 --tables 2
     PYTHONPATH=src python -m repro.launch.serve_sharded --emulate   # no mesh
+    PYTHONPATH=src python -m repro.launch.serve_sharded --emulate --drift
+
+``--drift`` enables the drifting-workload replay (DESIGN.md §6): after
+``--drift-at`` of the request stream, row ids are remapped through a
+fixed permutation — the hot set rotates onto previously-cold rows — and
+the server's online replanner (enabled with the ``--replan-*`` knobs)
+incrementally promotes/demotes groups instead of rebuilding the plan.
+The report then includes the replan counters (patches applied, tiles
+DMA'd, residual drift).
 
 The module is import-safe: args are parsed and ``XLA_FLAGS`` is set only
 when run as ``__main__`` (the device-count flag must land before the
@@ -41,6 +50,17 @@ def parse_args(argv=None):
     ap.add_argument("--combine-chunks", type=int, default=2)
     ap.add_argument("--emulate", action="store_true",
                     help="single-device shard loop instead of shard_map")
+    ap.add_argument("--drift", action="store_true",
+                    help="drifting-workload replay: rotate the hot set "
+                         "mid-stream and replan online")
+    ap.add_argument("--drift-at", type=float, default=0.5,
+                    help="fraction of the stream after which rows remap")
+    ap.add_argument("--drift-seed", type=int, default=7)
+    ap.add_argument("--replan-threshold", type=float, default=0.2)
+    ap.add_argument("--replan-half-life", type=float, default=4.0)
+    ap.add_argument("--replan-min-queries", type=int, default=64)
+    ap.add_argument("--slack-tiles", type=int, default=8,
+                    help="per-shard zero-tile image headroom for promotions")
     return ap.parse_args(argv)
 
 
@@ -71,15 +91,35 @@ def main(args) -> None:
             )
         mesh = jax.make_mesh((1, args.shards), ("data", "model"))
 
+    replan_cfg = None
+    if args.drift:
+        from repro.serve.drift import ReplanConfig
+
+        replan_cfg = ReplanConfig(
+            threshold=args.replan_threshold,
+            half_life=args.replan_half_life,
+            min_queries=args.replan_min_queries,
+            slack_tiles=args.slack_tiles,
+        )
     server = ShardedEmbeddingServer(
         tables, histories,
         num_shards=args.shards, mesh=mesh,
         q_block=args.q_block, group_size=args.group_size,
         batch_size=args.batch_size,
         combine=args.combine, combine_chunks=args.combine_chunks,
+        replan=replan_cfg,
     )
 
     stream = zipf_queries(args.rows, args.requests, args.mean_bag, seed=1234)
+    if args.drift:
+        # hot-set rotation: remap every row id through a fixed permutation
+        # for the tail of the stream (serve-time drift the offline plan
+        # never saw; the replanner must chase it incrementally)
+        cut = int(len(stream) * args.drift_at)
+        perm = np.random.default_rng(args.drift_seed).permutation(args.rows)
+        stream = stream[:cut] + [
+            perm[np.asarray(q, dtype=np.int64)] for q in stream[cut:]
+        ]
     names = list(tables)
     flushed = 0
     for i, q in enumerate(stream):

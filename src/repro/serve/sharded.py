@@ -1,10 +1,11 @@
-"""Sharded multi-table embedding serving driver (DESIGN.md §4).
+"""Sharded multi-table embedding serving driver (DESIGN.md §4, §6).
 
 Glues the offline pipeline to the sharded online path for a *set* of
 DLRM embedding tables:
 
   per table: history → co-occurrence → grouping (Alg. 1) → Eq.-1
-  replication → layout, then one :class:`~repro.dist.shard_plan.
+  log-scaled replication (``num_copies(g) = floor(log f_g / log f_total
+  · log batch)``) → layout, then one :class:`~repro.dist.shard_plan.
   ShardPlan` over the fused tile space decides replicated-everywhere vs
   sharded-once tiles and one stacked shard image feeds the kernel.
 
@@ -16,13 +17,24 @@ replica choice), rebases into the fused tile space, block-compiles one
 ``shard_map`` when a mesh is installed.  Every flush records the
 observability contract of the sharded path: per-shard grid cells,
 per-shard union widths, and cross-shard combine bytes.
+
+**Online replanning** (opt-in via ``replan=``, DESIGN.md §6): each flush
+also feeds the compiled batch's per-group loads to a
+:class:`~repro.serve.drift.DriftTracker`.  When the decayed observation
+drifts past the configured total-variation threshold, the server stages
+an incremental :class:`~repro.dist.replan.PlanPatch` — computed on the
+host *while the flush's kernel executes on device* — and applies it at
+the start of the next flush: placement arrays swap, and only the moved
+tiles DMA into the image stack
+(:func:`repro.kernels.sharded.patch_shard_images`).  The full
+``plan_shards`` + ``build_fused_image`` rebuild never reruns.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 import jax
@@ -38,8 +50,20 @@ from repro.core import (
     plan_replication,
     shard_block_queries,
 )
+from repro.core.reduction import CompiledQueries, fused_group_loads
+from repro.dist.replan import (
+    PlanPatch,
+    apply_plan_patch,
+    compute_plan_patch,
+    rescale_load_to_plan,
+)
 from repro.dist.shard_plan import ShardPlan, build_fused_image, plan_shards
-from repro.kernels.sharded import combine_bytes_per_batch, crossbar_reduce_tables
+from repro.kernels.sharded import (
+    combine_bytes_per_batch,
+    crossbar_reduce_tables,
+    patch_shard_images,
+)
+from repro.serve.drift import DriftTracker, ReplanConfig
 
 
 @dataclasses.dataclass
@@ -56,6 +80,12 @@ class ShardedServeStats:
     max_shard_width: int = 0               # widest per-shard block union seen
     combine_bytes: int = 0
     wall_s: float = 0.0
+    # ---- online replanning (DESIGN.md §6) ----
+    replans: int = 0                       # patches applied (moves > 0)
+    rebases: int = 0                       # no-op patches (load reanchor only)
+    patched_tiles: int = 0                 # Σ tiles DMA'd by applied patches
+    promoted_groups: int = 0
+    demoted_groups: int = 0
 
     def record(self, sbq, dim: int, wall_s: float, queries: int) -> None:
         cells = sbq.grid_cells_per_shard()
@@ -72,6 +102,15 @@ class ShardedServeStats:
         )
         self.wall_s += wall_s
 
+    def record_patch(self, patch: PlanPatch) -> None:
+        if patch.is_noop():
+            self.rebases += 1
+            return
+        self.replans += 1
+        self.patched_tiles += patch.num_moved_tiles
+        self.promoted_groups += len(patch.promoted)
+        self.demoted_groups += len(patch.demoted)
+
     def summary(self) -> Dict[str, float]:
         return {
             "num_shards": self.num_shards,
@@ -84,6 +123,11 @@ class ShardedServeStats:
             "max_shard_width": self.max_shard_width,
             "combine_bytes": self.combine_bytes,
             "wall_s": self.wall_s,
+            "replans": self.replans,
+            "rebases": self.rebases,
+            "patched_tiles": self.patched_tiles,
+            "promoted_groups": self.promoted_groups,
+            "demoted_groups": self.demoted_groups,
         }
 
 
@@ -98,11 +142,20 @@ class ShardedEmbeddingServer:
       mesh: optional mesh whose ``axis_name`` axis has ``num_shards``
         devices → the flush runs under shard_map; ``None`` emulates the
         shard loop on the local device (identical numerics).
+      axis_name: mesh axis the image shards over (default ``"model"``).
       q_block: queries per kernel block (DMA amortization factor).
       group_size: crossbar height (tile rows).
       batch_size: auto-flush threshold for :meth:`submit`.
       batch_size_for_eq1: Eq. 1's ``batch`` (replication aggressiveness);
-        defaults to ``batch_size``.
+        defaults to ``batch_size``.  Online replanning re-evaluates
+        Eq. 1 at this batch size unless ``replan.eq1_batch`` overrides.
+      combine: cross-shard combine collective — ``"psum_scatter"``
+        (reduce-scatter over dim + all-gather) or ``"psum"``.
+      combine_chunks: block-axis chunks for combine/DMA overlap.
+      dynamic_switch: enable the paper's §III-D READ/MAC switch.
+      interpret: force Pallas interpret mode (``None`` = auto off-TPU).
+      replan: optional :class:`~repro.serve.drift.ReplanConfig` enabling
+        drift-triggered incremental replanning (DESIGN.md §6).
     """
 
     def __init__(
@@ -121,6 +174,7 @@ class ShardedEmbeddingServer:
         combine_chunks: int = 2,
         dynamic_switch: bool = True,
         interpret: bool | None = None,
+        replan: ReplanConfig | None = None,
     ):
         if set(tables) != set(histories):
             raise ValueError("tables and histories must cover the same names")
@@ -158,10 +212,51 @@ class ShardedEmbeddingServer:
             self.layouts, plans, num_shards,
             names=self.names, group_freqs=gfreqs,
         )
-        fused = build_fused_image(
+        # host-resident master image: the serve-time DMA source for
+        # incremental plan patches (kept even without replan so a later
+        # enable_replan-style extension stays cheap; it is the same bytes
+        # a parameter server would hold anyway)
+        self._fused = build_fused_image(
             self.layouts, [np.asarray(tables[n]) for n in self.names]
         )
-        self.shard_images = jnp.asarray(self.plan.build_shard_images(fused))
+        images = self.plan.build_shard_images(self._fused)
+        self.replan_cfg = replan
+        self._eq1_batch = (
+            replan.eq1_batch if replan and replan.eq1_batch else eq1_batch
+        )
+        if replan is not None and replan.slack_tiles > 0:
+            # zero-tile headroom so early promotions fill slack instead
+            # of growing (reallocating) the device image stack
+            pad = np.zeros(
+                (num_shards, replan.slack_tiles) + images.shape[2:],
+                dtype=images.dtype,
+            )
+            images = np.concatenate([images, pad], axis=1)
+        self.shard_images = jnp.asarray(images)
+        self._tile_group = np.repeat(
+            np.arange(self.plan.num_groups, dtype=np.int64),
+            self.plan.group_copies,
+        )
+        # per-table training-time load mass: Eq. 1 is evaluated at this
+        # magnitude at replan time (see rescale_load_to_plan) — constant
+        # across rebases, since rescaled snapshots carry the same totals
+        self._segments = [
+            (s.group_offset, s.group_offset + s.num_groups)
+            for s in self.plan.tables
+        ]
+        self._seg_load_totals = [
+            float(self.plan.group_load[a:b].sum()) for a, b in self._segments
+        ]
+        self.tracker: Optional[DriftTracker] = (
+            DriftTracker(
+                self.plan.group_load,
+                half_life=replan.half_life,
+                min_queries=replan.min_queries,
+            )
+            if replan is not None
+            else None
+        )
+        self._staged: Optional[PlanPatch] = None
         self.stats = ShardedServeStats(num_shards=num_shards, q_block=q_block)
         self._buffer: Dict[str, List[Sequence[int]]] = {n: [] for n in self.names}
         self._buffered = 0
@@ -171,15 +266,36 @@ class ShardedEmbeddingServer:
     def serve(
         self, queries_by_table: Dict[str, Sequence[Sequence[int]]]
     ) -> Dict[str, jax.Array]:
-        """One synchronous batch: compile, reduce, combine, account."""
+        """Serves one synchronous multi-table batch.
+
+        Pipeline per call: apply any staged plan patch (see
+        :meth:`_apply_staged_patch` — this is flush *n+1* of the
+        double-buffered ordering), compile each table's ragged queries
+        (block-granular replica choice), rebase into the fused tile
+        space, block-compile per shard, dispatch the sharded kernel,
+        then — while the device executes — observe drift and stage the
+        next patch, and finally block on the outputs and record stats.
+
+        Args:
+          queries_by_table: ``{table name: ragged row-id queries}``;
+            tables absent or mapped to an empty list are skipped.
+
+        Returns:
+          ``{table name: (batch, dim) reduction}`` for every table that
+          had at least one query (padding rows already sliced off).
+
+        Raises:
+          KeyError: a key names an unknown table.
+        """
         t0 = time.perf_counter()
         unknown = set(queries_by_table) - set(self.names)
         if unknown:
             raise KeyError(f"unknown tables {sorted(unknown)!r}")
-        cqs = []
         served = [n for n in self.names if queries_by_table.get(n)]
         if not served:
             return {}
+        self._apply_staged_patch()
+        cqs = []
         for name in served:
             i = self.names.index(name)
             seg = self.plan.tables[i]
@@ -189,24 +305,104 @@ class ShardedEmbeddingServer:
             )
             cqs.append(offset_compiled_queries(cq, seg.tile_offset))
         fused_cq, spans = concat_compiled_queries(cqs, self.q_block)
-        sbq = shard_block_queries(fused_cq, self.plan, self.q_block)
+        # one host materialization serves both the per-shard block
+        # compiler and the drift observation — without it, each would
+        # pull the batch back from the device separately
+        host_cq = CompiledQueries(
+            tile_ids=np.asarray(fused_cq.tile_ids),
+            bitmaps=np.asarray(fused_cq.bitmaps),
+            max_tiles=fused_cq.max_tiles,
+        )
+        sbq = shard_block_queries(host_cq, self.plan, self.q_block)
         outs = crossbar_reduce_tables(
             self.shard_images, sbq, spans,
             mesh=self.mesh, axis_name=self.axis_name,
             combine=self.combine, combine_chunks=self.combine_chunks,
             dynamic_switch=self.dynamic_switch, interpret=self.interpret,
         )
-        outs = [jax.block_until_ready(o) for o in outs]
         n_queries = sum(len(queries_by_table[n]) for n in served)
+        # double buffering: the kernel above is dispatched but NOT yet
+        # blocked on — drift bookkeeping and patch computation are pure
+        # host work and overlap the device execution of this flush
+        self._observe_and_stage(host_cq, n_queries)
+        outs = [jax.block_until_ready(o) for o in outs]
         self.stats.record(sbq, self.dim, time.perf_counter() - t0, n_queries)
         return dict(zip(served, outs))
+
+    # --------------------------------------------------------- replanning --
+
+    def _apply_staged_patch(self) -> None:
+        """Swaps in the patch staged during the previous flush.
+
+        Runs at the top of :meth:`serve`, before anything is compiled
+        against the plan — flush *n*'s outputs were produced entirely
+        under the old plan, flush *n+1* runs entirely under the new one
+        (no torn state).  Image update DMAs only the moved tiles.
+        """
+        if self._staged is None:
+            return
+        patch, self._staged = self._staged, None
+        self.shard_images = patch_shard_images(
+            self.shard_images, patch, self._fused
+        )
+        self.plan = apply_plan_patch(self.plan, patch)
+        self.stats.record_patch(patch)
+
+    def _observe_and_stage(self, fused_cq, n_queries: int) -> None:
+        """Feeds the tracker and stages a patch when drift crosses.
+
+        Host-only work scheduled between kernel dispatch and
+        ``block_until_ready``.  A no-op (class-unchanged) patch is
+        applied immediately as a load rebase — it touches no device
+        state, so there is nothing to double-buffer.
+        """
+        if self.tracker is None:
+            return
+        loads = fused_group_loads(
+            fused_cq, self._tile_group, self.plan.num_groups
+        )
+        self.tracker.observe(loads, n_queries)
+        if self._staged is not None or not self.tracker.ready:
+            return
+        drift = self.tracker.drift_from(
+            self.plan.group_load, segments=self._segments
+        )
+        if drift < self.replan_cfg.threshold:
+            return
+        # Eq. 1 is magnitude-sensitive: evaluate the observed
+        # distribution at the training-time mass, not the tracker's
+        drifted = rescale_load_to_plan(
+            self.tracker.load(), self.plan, self._seg_load_totals
+        )
+        patch = compute_plan_patch(
+            self.plan, drifted,
+            eq1_batch=self._eq1_batch,
+            capacity=int(self.shard_images.shape[1]),
+        )
+        if patch.is_noop():
+            # drift without a class change: reanchor group_load so the
+            # greedy demotion targets and the drift statistic both track
+            # the observed distribution
+            self.plan = apply_plan_patch(self.plan, patch)
+            self.stats.record_patch(patch)
+            return
+        self._staged = patch
 
     # ----------------------------------------------------------- batching --
 
     def submit(self, table: str, query: Sequence[int]) -> Dict[str, jax.Array]:
         """Buffers one query; auto-flushes at ``batch_size`` buffered.
 
-        Returns the flush result when a flush fired, else ``{}``.
+        Args:
+          table: table name the query reduces over.
+          query: ragged row ids (an embedding-bag lookup).
+
+        Returns:
+          The flush result (see :meth:`flush`) when this submission
+          tripped the ``batch_size`` threshold, else ``{}``.
+
+        Raises:
+          KeyError: ``table`` is not a served table.
         """
         if table not in self._buffer:
             raise KeyError(f"unknown table {table!r}")
@@ -222,6 +418,11 @@ class ShardedEmbeddingServer:
         The buffer is cleared only after a successful serve, so a failed
         flush (e.g. one malformed query) leaves every buffered request
         intact for retry after the offender is removed.
+
+        Returns:
+          ``{table name: (buffered batch, dim) reduction}`` for every
+          table with buffered queries; ``{}`` when nothing is buffered.
+          Row order within a table is submission order.
         """
         if self._buffered == 0:
             return {}
@@ -234,10 +435,39 @@ class ShardedEmbeddingServer:
     # ------------------------------------------------------------- report --
 
     def report(self) -> Dict[str, object]:
-        """Serving + placement accounting for dashboards and benches."""
-        return {
+        """Serving + placement accounting for dashboards and benches.
+
+        Returns a dict with:
+          * ``tables`` — served table names (sorted).
+          * ``plan`` — tile residency / replication overhead of the
+            *current* (possibly patched) plan
+            (:meth:`ShardPlan.memory_summary`).
+          * ``serve`` — cumulative flush stats
+            (:meth:`ShardedServeStats.summary`), including the replan
+            counters.
+          * ``mode`` — ``"shard_map"`` or ``"emulated"``.
+          * ``replan`` — drift/replanning state (only when enabled):
+            current drift vs the live plan, tracker readiness, staged
+            patch summary if one is waiting for the next flush.
+        """
+        rep: Dict[str, object] = {
             "tables": self.names,
             "plan": self.plan.memory_summary(),
             "serve": self.stats.summary(),
             "mode": "shard_map" if self.mesh is not None else "emulated",
         }
+        if self.tracker is not None:
+            rep["replan"] = {
+                "threshold": self.replan_cfg.threshold,
+                "half_life": self.replan_cfg.half_life,
+                "drift": self.tracker.drift_from(
+                    self.plan.group_load, segments=self._segments
+                ),
+                "observed_queries": self.tracker.observed_queries,
+                "ready": self.tracker.ready,
+                "staged": (
+                    self._staged.summary() if self._staged is not None else None
+                ),
+                "image_capacity": int(self.shard_images.shape[1]),
+            }
+        return rep
