@@ -4,6 +4,8 @@ from __future__ import annotations
 
 import json
 import os
+import sys
+import tempfile
 import time
 from typing import Callable, Dict, List
 
@@ -46,6 +48,53 @@ def emit(rows: List[Dict]) -> None:
     """Prints ``name,us_per_call,derived`` CSV rows (benchmark contract)."""
     for r in rows:
         print(f"{r['name']},{r.get('us_per_call', '')},{r.get('derived', '')}")
+
+
+#: RECROSS_* env vars that do NOT change the measured workload
+_NON_WORKLOAD_KNOBS = {"RECROSS_SMOKE_BENCH_DIR"}
+
+
+def bench_is_full_scale() -> bool:
+    """Whether this run measures the committed-record configuration.
+
+    The committed ``BENCH_*.json`` are full-DEFAULT-config records, so
+    ANY workload-shaping ``RECROSS_*`` override (sizes, batch, shard
+    counts, skew, mean bag, …) makes the run non-canonical — not just
+    the row/history counts.  Only knobs that don't change the workload
+    (the smoke output dir itself) are exempt.
+    """
+    return not any(
+        k.startswith("RECROSS_") and k not in _NON_WORKLOAD_KNOBS
+        for k in os.environ
+    )
+
+
+def bench_json_path(path: str, *, full_scale: bool) -> str:
+    """Routes smoke-size runs away from the committed bench records.
+
+    Committed ``BENCH_*.json`` files are FULL-SCALE measurements — the
+    perf trajectory future PRs are held against.  CI (and local smoke
+    runs) shrink the workload via the ``RECROSS_*`` env knobs; letting
+    those runs write the committed path would silently replace real
+    records with toy numbers.  Non-full-scale runs therefore write to
+    ``RECROSS_SMOKE_BENCH_DIR`` (default: a ``recross-bench-smoke``
+    directory under the system temp dir), which CI uploads as its own
+    artifact; a CI diff-guard additionally fails the build if any
+    committed ``BENCH_*.json`` changed during the smoke runs.
+    """
+    if full_scale:
+        return path
+    out_dir = os.environ.get("RECROSS_SMOKE_BENCH_DIR") or os.path.join(
+        tempfile.gettempdir(), "recross-bench-smoke"
+    )
+    os.makedirs(out_dir, exist_ok=True)
+    out = os.path.join(out_dir, os.path.basename(path))
+    print(
+        f"# smoke-size bench: writing {os.path.basename(path)} to {out} "
+        "(committed record untouched)",
+        file=sys.stderr,
+    )
+    return out
 
 
 def update_bench_json(

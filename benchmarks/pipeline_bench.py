@@ -31,7 +31,7 @@ import time
 import numpy as np
 import jax.numpy as jnp
 
-from benchmarks.common import emit
+from benchmarks.common import bench_is_full_scale, bench_json_path, emit
 from repro.core import (
     baselines,
     build_cooccurrence,
@@ -202,7 +202,8 @@ def run() -> list:
         kern[f"blocked_q{qb}_grid_cells"] = int(bq.num_blocks * bq.max_tiles)
     record["kernel_interpret"] = kern
 
-    with open(JSON_PATH, "w") as f:
+    # CI smoke configs write to a temp path — never the committed record
+    with open(bench_json_path(JSON_PATH, full_scale=bench_is_full_scale()), "w") as f:
         json.dump(record, f, indent=1)
 
     rows_out.append({

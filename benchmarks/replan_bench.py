@@ -33,7 +33,13 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, mesh_for, update_bench_json
+from benchmarks.common import (
+    bench_is_full_scale,
+    bench_json_path,
+    emit,
+    mesh_for,
+    update_bench_json,
+)
 from repro.core import (
     build_cooccurrence,
     build_layout,
@@ -60,6 +66,8 @@ SHARD_COUNTS = tuple(
     int(s) for s in os.environ.get("RECROSS_REPLAN_SHARDS", "2,4").split(",")
 )
 MEAN_BAG = float(os.environ.get("RECROSS_PIPELINE_MEAN_BAG", 41.32))
+#: committed BENCH_serving.json only updates at the full DEFAULT config
+FULL_SCALE = bench_is_full_scale()
 GROUP_SIZE = 64
 Q_BLOCK = 8
 DIM = 128
@@ -235,8 +243,11 @@ def run() -> list:
         ),
     })
 
-    # merge into BENCH_serving.json (the serving bench owns the rest)
-    update_bench_json(JSON_PATH, {"replan": record})
+    # merge into BENCH_serving.json (the serving bench owns the rest);
+    # CI smoke sizes write to a temp path — never the committed record
+    update_bench_json(
+        bench_json_path(JSON_PATH, full_scale=FULL_SCALE), {"replan": record}
+    )
 
     return rows_out
 

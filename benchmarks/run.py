@@ -21,6 +21,7 @@ from benchmarks import (
     kernel_bench,
     pipeline_bench,
     replan_bench,
+    scheduler_bench,
     serving_bench,
 )
 from benchmarks.common import emit
@@ -35,9 +36,10 @@ MODULES = {
     "multiread": beyond_multiread,
     "pipeline": pipeline_bench,
     "serving": serving_bench,
-    # after serving: both write BENCH_serving.json (each preserves the
-    # other's sections, but keep the full-run order deterministic)
+    # after serving: all three write BENCH_serving.json (each preserves
+    # the others' sections, but keep the full-run order deterministic)
     "replan": replan_bench,
+    "scheduler": scheduler_bench,
 }
 
 

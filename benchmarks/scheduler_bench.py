@@ -1,0 +1,217 @@
+"""Shard-aware async-serving benchmark → the ``scheduler`` section of
+BENCH_serving.json.
+
+Measures the acceptance contract of the asynchronous flush engine
+(DESIGN.md §7) on a **skewed per-table arrival replay**: table ``t0``
+arrives ``SKEW``× as often as ``t1``, so the global policy's fused flush
+waits on the slow table's block union while the fast table's home shards
+sit idle.  The same replay runs through both policies on one server
+configuration:
+
+  * **global** — the synchronous PR-2 path: one fused compile + blocking
+    dispatch per ``batch_size`` buffered queries;
+  * **per-shard** — the scheduler: homes flush independently as they
+    fill, host compile of flush *n+1* overlaps device execution of
+    flush *n* (bounded in-flight queue, ``block_until_ready`` only at
+    hand-off).
+
+Recorded per execution mode: wall-clock of each replay and the
+speedup, the host-compile time hidden behind device execution
+(``overlap_fraction``, sampled conservatively at compile end via
+``Array.is_ready``), per-home flush counts, and per-flush grid cells
+for both policies (the async per-flush grid must never exceed the
+synchronous fused flush's).  Both policies are WARMED before timing —
+the kernel dispatch is jit-cached per shape, so a cold-vs-warm pairing
+would credit whichever policy runs second.  Integer tables make every
+partial sum exact in f32, so all replays (across policies AND modes)
+are asserted BIT-identical — a mismatch fails the bench.
+
+Two modes when the host presents enough devices (CI forces 4):
+**emulated** (single device) is the headline overlap demonstration —
+device execution dominates, as on real hardware, and the async engine
+hides the host compile behind it; **shard_map** on forced HOST devices
+splits one CPU N ways, shrinking execution below the pipeline's fill
+time, so the overlap there is a harness artifact to be measured on
+real hardware (ROADMAP's TPU item) — it is recorded for the
+bit-identity + combine accounting contract, not for speedup.
+
+Env knobs: ``RECROSS_SCHED_ROWS`` / ``RECROSS_SCHED_HISTORY`` (defaults
+12_500, an eighth of the serving bench's tables), ``RECROSS_SCHED_BATCH``
+(32), ``RECROSS_SCHED_SHARDS`` (4), ``RECROSS_SCHED_SKEW`` (3).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+import jax
+
+from benchmarks.common import (
+    bench_is_full_scale,
+    bench_json_path,
+    emit,
+    mesh_for,
+    update_bench_json,
+)
+from repro.data import zipf_queries
+from repro.serve import ShardedEmbeddingServer
+
+JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serving.json")
+
+NUM_ROWS = int(os.environ.get("RECROSS_SCHED_ROWS", 12_500))
+NUM_HISTORY = int(os.environ.get("RECROSS_SCHED_HISTORY", 12_500))
+SERVE_BATCH = int(os.environ.get("RECROSS_SCHED_BATCH", 32))
+NUM_SHARDS = int(os.environ.get("RECROSS_SCHED_SHARDS", 4))
+SKEW = int(os.environ.get("RECROSS_SCHED_SKEW", 3))
+MEAN_BAG = float(os.environ.get("RECROSS_PIPELINE_MEAN_BAG", 41.32))
+GROUP_SIZE = 64
+Q_BLOCK = 8
+DIM = 128
+#: committed BENCH_serving.json only updates at the full DEFAULT config
+FULL_SCALE = bench_is_full_scale()
+
+
+def run() -> list:
+    rows_out = []
+    irng = np.random.default_rng(7)
+    itables = {
+        "t0": irng.integers(-8, 9, size=(NUM_ROWS, DIM)).astype(np.float32),
+        "t1": irng.integers(-8, 9, size=(NUM_ROWS, DIM)).astype(np.float32),
+    }
+    ihistories = {
+        name: zipf_queries(NUM_ROWS, NUM_HISTORY, MEAN_BAG, seed=20 + i,
+                           num_baskets=max(256, NUM_HISTORY // 32))
+        for i, name in enumerate(itables)
+    }
+    n_req = SERVE_BATCH * 8
+    replay_qs = zipf_queries(NUM_ROWS, n_req, MEAN_BAG, seed=29,
+                             num_baskets=max(256, NUM_HISTORY // 32))
+    # deterministic skewed interleave: SKEW t0 arrivals per t1 arrival
+    replay = [("t0" if i % (SKEW + 1) < SKEW else "t1", q)
+              for i, q in enumerate(replay_qs)]
+    S = NUM_SHARDS
+
+    def run_policy(policy, mesh, **kw):
+        server = ShardedEmbeddingServer(
+            itables, ihistories, num_shards=S, mesh=mesh,
+            q_block=Q_BLOCK, group_size=GROUP_SIZE, batch_size=SERVE_BATCH,
+            flush_policy=policy, **kw,
+        )
+        outs = {n: [] for n in itables}
+        t0 = time.perf_counter()
+        for name, q in replay:
+            out = server.submit(name, q)
+            for n, o in out.items():
+                outs[n].append(np.asarray(o))
+        for n, o in server.flush().items():
+            outs[n].append(np.asarray(o))
+        wall = time.perf_counter() - t0
+        merged = {n: np.concatenate(o) for n, o in outs.items() if o}
+        return server, wall, merged
+
+    modes = {"emulated": None}
+    if mesh_for(S) is not None:
+        modes["shard_map"] = mesh_for(S)
+    mode_rec = {}
+    ref_outs = None
+    for label, mesh in modes.items():
+        # WARM both policies before timing: the kernel dispatch is
+        # jit-cached per shape, and the first replay pays every trace +
+        # XLA compile — timing cold-vs-warm would credit whichever
+        # policy runs second with the other's cache
+        run_policy("global", mesh)
+        run_policy("per-shard", mesh, max_in_flight=2)
+        srv_g, wall_g, outs_g = run_policy("global", mesh)
+        srv_a, wall_a, outs_a = run_policy("per-shard", mesh, max_in_flight=2)
+        # bit-identity across policies AND modes (integer tables)
+        for n in itables:
+            np.testing.assert_array_equal(outs_a[n], outs_g[n])
+            if ref_outs is not None:
+                np.testing.assert_array_equal(outs_a[n], ref_outs[n])
+        ref_outs = outs_g
+        sum_g, sum_a = srv_g.stats.summary(), srv_a.stats.summary()
+        mode_rec[label] = {
+            "global": {
+                "wall_s": wall_g,
+                "batches": sum_g["batches"],
+                "host_compile_s": sum_g["host_compile_s"],
+                "max_grid_cells_per_flush": sum_g["max_grid_cells_per_flush"],
+                "combine_bytes": sum_g["combine_bytes"],
+            },
+            "scheduler": {
+                "wall_s": wall_a,
+                "batches": sum_a["batches"],
+                "shard_flushes": sum_a["shard_flushes"],
+                "deadline_flushes": sum_a["deadline_flushes"],
+                "barrier_flushes": sum_a["barrier_flushes"],
+                "host_compile_s": sum_a["host_compile_s"],
+                "hidden_compile_s": sum_a["hidden_compile_s"],
+                "overlap_fraction": sum_a["overlap_fraction"],
+                "in_flight_peak": sum_a["in_flight_peak"],
+                "max_grid_cells_per_flush": sum_a["max_grid_cells_per_flush"],
+                "combine_bytes": sum_a["combine_bytes"],
+            },
+            "speedup_vs_global": wall_g / wall_a if wall_a > 0 else None,
+            "meets_grid_target": bool(
+                sum_a["max_grid_cells_per_flush"]
+                <= sum_g["max_grid_cells_per_flush"]
+            ),
+        }
+        rows_out.append({
+            "name": f"serving_scheduler_{label}",
+            "us_per_call": f"{wall_a * 1e6:.0f}",
+            "derived": (
+                f"speedup_vs_global="
+                f"{mode_rec[label]['speedup_vs_global']:.2f}x;"
+                f"overlap={sum_a['overlap_fraction']:.2f};"
+                f"cells/flush={sum_a['max_grid_cells_per_flush']}"
+                f"<=global={sum_g['max_grid_cells_per_flush']}:"
+                f"{mode_rec[label]['meets_grid_target']}"
+            ),
+        })
+
+    # headline = the emulated comparison: execution dominates there (as
+    # on real hardware), so it is the honest overlap demonstration; the
+    # forced-host shard_map numbers are recorded for the contract, not
+    # for speedup (see module docstring)
+    head = mode_rec["emulated"]
+    record = {
+        "config": {
+            "num_rows": NUM_ROWS, "requests": n_req, "skew": SKEW,
+            "shards": S, "batch_size": SERVE_BATCH,
+            "policy": "per-shard", "max_in_flight": 2,
+            "devices": len(jax.devices()),
+        },
+        "modes": mode_rec,
+        "global": head["global"],
+        "scheduler": head["scheduler"],
+        "speedup_vs_global": head["speedup_vs_global"],
+        "host_compile_hidden_fraction":
+            head["scheduler"]["overlap_fraction"],
+        "bit_identical_to_sync": True,          # asserted above
+        # per-shard per-flush grids must never exceed what the
+        # synchronous fused flush would have run
+        "meets_grid_target": all(
+            m["meets_grid_target"] for m in mode_rec.values()
+        ),
+        "mode": "emulated+shard_map" if "shard_map" in mode_rec
+                else "emulated",
+    }
+
+    # merge into BENCH_serving.json (the serving bench owns the rest);
+    # CI smoke sizes write to a temp path — never the committed record
+    update_bench_json(
+        bench_json_path(JSON_PATH, full_scale=FULL_SCALE),
+        {"scheduler": record},
+    )
+    return rows_out
+
+
+def main():
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

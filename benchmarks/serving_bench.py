@@ -34,7 +34,13 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, mesh_for, update_bench_json
+from benchmarks.common import (
+    bench_is_full_scale,
+    bench_json_path,
+    emit,
+    mesh_for,
+    update_bench_json,
+)
 from repro.core import (
     block_compiled_queries,
     build_cooccurrence,
@@ -65,6 +71,8 @@ GROUP_SIZE = 64
 Q_BLOCK = 8
 DIM = 128
 BATCH_SIZE = 256
+#: committed BENCH_serving.json only updates at the full DEFAULT config
+FULL_SCALE = bench_is_full_scale()
 
 
 def run() -> list:
@@ -203,9 +211,14 @@ def run() -> list:
         ),
     })
 
-    # whole-record writer: keep only the replan bench's foreign section,
-    # so serving keys this version stopped emitting don't linger
-    update_bench_json(JSON_PATH, record, preserve=["replan"])
+    # whole-record writer: keep only the replan/scheduler benches'
+    # foreign sections, so serving keys this version stopped emitting
+    # don't linger.  CI smoke sizes write to a temp path — never the
+    # committed record.
+    update_bench_json(
+        bench_json_path(JSON_PATH, full_scale=FULL_SCALE),
+        record, preserve=["replan", "scheduler"],
+    )
 
     rows_out.append({
         "name": "serving_grid_target",

@@ -44,6 +44,7 @@ from repro.core.simulator import (
 )
 from repro.core.reduction import (
     BlockedQueries,
+    BlockUnionTracker,
     CompiledQueries,
     ShardedBlockedQueries,
     block_compiled_queries,
@@ -70,7 +71,8 @@ __all__ = [
     "ReRAMCostModel", "TPUCostModel", "DEFAULT_RERAM", "DEFAULT_TPU",
     "SimReport", "simulate_batch", "simulate_cpu_baseline",
     "simulate_nmars_baseline",
-    "BlockedQueries", "CompiledQueries", "ShardedBlockedQueries",
+    "BlockedQueries", "BlockUnionTracker", "CompiledQueries",
+    "ShardedBlockedQueries",
     "block_compiled_queries", "compile_queries", "concat_compiled_queries",
     "fused_group_loads",
     "offset_compiled_queries", "reduce_dense_oracle", "reduce_via_layout",

@@ -90,22 +90,28 @@ def correlation_aware_grouping(
 
     order = graph.nodes_by_frequency()  # sorted(embeddingList)
 
-    # Accumulated co-occurrence into the *current group*, mirroring
-    # ComputeWeight(embedding, currentEmbedding) over the merged list —
-    # array-backed so each pick is one bulk scatter-add, reset between
-    # seeds by zeroing only the touched ids.
-    weight_into = np.zeros(n, dtype=np.int64)
-    # candidate priorities pack into ONE int64: key = id - weight * SCALE.
+    # Candidate priorities pack into ONE int64 PER ROW ID:
+    # packed[j] = j - weight_into[j] * SCALE (weight 0 → packed[j] = j).
     # Ascending key order is (weight descending, id ascending) — exactly
     # the (-weight, id) pop order of the per-edge heap — so a batch is a
-    # single np.sort and heap comparisons touch plain ints, no tuples.
-    SCALE = 1 << max(n.bit_length(), 1)
+    # single sort, heap comparisons touch plain ints, and a candidate's
+    # currency check is ONE int compare (packed[j] == key) instead of a
+    # weight decode.  The accumulate "ComputeWeight(embedding,
+    # currentEmbedding) over the merged list" is a single fused
+    # gather-subtract per pick: packed[nbr] -= weight*SCALE; reset
+    # between seeds by restoring only the touched ids to their identity.
+    SHIFT = max(n.bit_length(), 1)
+    SCALE = 1 << SHIFT
+    MASK = SCALE - 1
+    packed = np.arange(n, dtype=np.int64)
+    # weights pre-scaled once so the push path skips the per-pick mul
+    wscale = graph.weights.astype(np.int64) * SCALE
     # bytearray mirror of `grouped` for O(50ns) scalar reads in the pop
     # loop (numpy bool scalars cost ~3x more); the numpy array serves the
-    # vectorized live-neighbor filter.
+    # vectorized bulk staleness check.
     grouped_b = bytearray(n)
     indptr = graph.indptr.tolist()
-    indices, weights = graph.indices, graph.weights
+    indices = graph.indices
     heappush, heappop, heapreplace = (
         heapq.heappush, heapq.heappop, heapq.heapreplace
     )
@@ -141,31 +147,88 @@ def correlation_aware_grouping(
                 live = ~grouped[nbr_ids]
                 ids = nbr_ids[live]
                 if ids.size:
-                    np.add.at(weight_into, ids, weights[lo:hi][live])
+                    # CSR neighbor ids are unique within a row, so the
+                    # fused gather-subtract is exact; pre-scaled weights
+                    # and the packed accumulator make the re-push ONE
+                    # arithmetic op on top of the liveness mask
+                    pk = packed[ids] - wscale[lo:hi][live]
+                    packed[ids] = pk
                     touched.append(ids)
-                    keys = np.sort(ids - weight_into[ids] * SCALE)
-                    heappush(heap, (int(keys[0]), seq, 0, keys))
+                    if pk.size > 1:
+                        pk.sort()          # fresh array → sort in place
+                    heappush(heap, (int(pk[0]), seq, 0, pk))
                     seq += 1
 
             # ---- pop the max-weight candidate (lazy deletion of stale
             # entries): the heap head is the globally best *pushed*
             # (weight, id); skip it unless it still matches the
-            # candidate's current weight ----
+            # candidate's current weight.  The whole prefix of the top
+            # batch that outranks the second-best head can be validated
+            # in BULK: weights only grow and grouped only flips on
+            # within a seed, so a stale entry is stale forever — skipped
+            # entries never need revisiting, and equal keys across
+            # batches are the same (weight, id), so consuming ties out
+            # of the head first cannot change the pick sequence. ----
             best = None
+            stale_s, stale_run = -1, 0
             while heap:
                 key, s, k, keys = heap[0]
+                # decode key = j - w*SCALE: SCALE is a power of two, so
+                # j = key mod SCALE falls out of a mask; currency is one
+                # int compare against the packed accumulator
+                j = key & MASK
+                if not grouped_b[j] and packed[j] == key:
+                    # valid head: the common case stays a scalar pop
+                    k += 1
+                    if k < keys.size:
+                        heapreplace(heap, (int(keys[k]), s, k, keys))
+                    else:
+                        heappop(heap)
+                    best = j
+                    break
+                # stale head.  Staleness is permanent within a seed
+                # (weights only grow, grouped only flips on), so a long
+                # stale RUN inside one batch can be skipped in bulk:
+                # after 8 consecutive stale pops of the same batch,
+                # validate vectorized the whole prefix that outranks
+                # the true second-best head (the smaller of the root's
+                # children).  Equal keys across batches are the same
+                # (weight, id), so consuming ties out of the head first
+                # cannot change the pick sequence; the streak gate
+                # keeps the scalar pop the only cost everywhere else.
+                stale_run = stale_run + 1 if s == stale_s else 1
+                stale_s = s
                 k += 1
-                if k < keys.size:
-                    heapreplace(heap, (int(keys[k]), s, k, keys))
+                nk = k
+                if stale_run >= 8 and keys.size - k > 16:
+                    if len(heap) > 2:
+                        limit = (heap[1][0] if heap[1][0] < heap[2][0]
+                                 else heap[2][0])
+                    elif len(heap) > 1:
+                        limit = heap[1][0]
+                    else:
+                        limit = None
+                    hi_k = (
+                        int(np.searchsorted(keys, limit, side="right"))
+                        if limit is not None else keys.size
+                    )
+                    if hi_k > k:
+                        seg = keys[k:hi_k]
+                        j_arr = seg & MASK
+                        ok = np.nonzero(
+                            ~grouped[j_arr] & (packed[j_arr] == seg)
+                        )[0]
+                        if ok.size:
+                            d = int(ok[0])
+                            best = int(j_arr[d])
+                            nk = k + d + 1
+                        else:
+                            nk = hi_k
+                if nk < keys.size:
+                    heapreplace(heap, (int(keys[nk]), s, nk, keys))
                 else:
                     heappop(heap)
-                # decode key = j - w*SCALE (j in [0, SCALE))
-                w, j = divmod(-key, SCALE)
-                if j:
-                    w += 1
-                    j = SCALE - j
-                if not grouped_b[j] and weight_into[j] == w:
-                    best = j
+                if best is not None:
                     break
             if best is None:
                 break  # no correlated candidates left: group stays short
@@ -176,7 +239,9 @@ def correlation_aware_grouping(
 
         groups.append(current)
         if touched:
-            weight_into[np.concatenate(touched)] = 0
+            # weights are per-seed scoped: restore identity packing
+            cat = np.concatenate(touched)
+            packed[cat] = cat
 
     # Compact short groups: Algorithm 1 leaves the trailing group short;
     # greedy filling can also produce mid-stream short groups when a

@@ -226,15 +226,30 @@ class ShardedBlockedQueries:
     single-device blocked reduction exactly once per activation.
     """
 
-    tile_ids: jax.Array   # (S, nb, max_tiles) int32 shard-LOCAL ids, -1 pad
-    bitmaps: jax.Array    # (S, nb, max_tiles, q_block, tile_rows)
+    tile_ids: jax.Array   # (P, nb, max_tiles) int32 shard-LOCAL ids, -1 pad
+    bitmaps: jax.Array    # (P, nb, max_tiles, q_block, tile_rows)
     q_block: int
     batch: int            # original (unpadded) query count
-    shard_widths: np.ndarray  # (S,) widest per-shard block union, pre-pad
+    shard_widths: np.ndarray  # (P,) widest per-shard block union, pre-pad
+    shards: np.ndarray | None = None  # (P,) global shard ids of the stack
+    # (None = all shards in order, the full-flush compile)
 
     @property
     def num_shards(self) -> int:
         return self.tile_ids.shape[0]
+
+    @property
+    def shard_ids(self) -> np.ndarray:
+        """Global shard id of each stacked schedule (DESIGN.md §7).
+
+        A full-flush compile stacks every shard in order; a subset flush
+        (``participants=`` to :func:`shard_block_queries`) stacks only
+        the participating shards, and the kernel dispatch needs to know
+        which image slices they index.
+        """
+        if self.shards is not None:
+            return self.shards
+        return np.arange(self.num_shards, dtype=np.int64)
 
     @property
     def num_blocks(self) -> int:
@@ -255,6 +270,7 @@ def shard_block_queries(
     q_block: int,
     *,
     max_tiles: int | None = None,
+    participants: Sequence[int] | None = None,
 ) -> ShardedBlockedQueries:
     """Flat compiled batch → per-shard blocked layout for ``plan``.
 
@@ -268,10 +284,30 @@ def shard_block_queries(
     Compile ``cq`` with ``replica_block=q_block``, exactly as for
     :func:`block_compiled_queries`; replicas of a sharded group live on
     the same shard, so block-granular replica choice stays shard-local.
+
+    ``participants`` restricts the compile to a shard subset (DESIGN.md
+    §7): the stacked schedules cover only those shards (in the given
+    order — :attr:`ShardedBlockedQueries.shards` records the mapping),
+    and replicated-everywhere tiles round-robin over the *participants*
+    instead of all shards, so a single shard's batch compiles without
+    recompiling — or waiting for — the fused global batch.  Every
+    sharded-once tile the batch activates must be owned by a
+    participant; a query routed to the wrong subset raises.
     """
     if q_block < 1:
         raise ValueError("q_block must be >= 1")
     S = int(plan.num_shards)
+    if participants is None:
+        parts = np.arange(S, dtype=np.int64)
+        shards_field = None
+    else:
+        parts = np.asarray(list(participants), dtype=np.int64)
+        if parts.size == 0 or parts.size != np.unique(parts).size:
+            raise ValueError(f"participants must be non-empty unique ids, got {parts}")
+        if parts.min() < 0 or parts.max() >= S:
+            raise ValueError(f"participants {parts} out of range for {S} shards")
+        shards_field = parts
+    P = int(parts.size)
     ids, bms, nb = _pad_to_blocks(
         np.asarray(cq.tile_ids), np.asarray(cq.bitmaps), q_block
     )
@@ -284,41 +320,114 @@ def shard_block_queries(
     vblk = vq // q_block
     shard_of_tile = np.asarray(plan.shard_of_tile)
     own = shard_of_tile[vt].astype(np.int64)
-    # replicated-everywhere tiles: block-level round robin over shards
-    own = np.where(own < 0, vblk % S, own)
+    # replicated-everywhere tiles: block-level round robin over the
+    # participating shards (degrades to "the one flushing shard owns
+    # everything" for a single-shard flush)
+    own = np.where(own < 0, parts[vblk % P], own)
+    # global shard id → stack position
+    part_pos = np.full(S, -1, dtype=np.int64)
+    part_pos[parts] = np.arange(P, dtype=np.int64)
+    pos_own = part_pos[own]
+    if pos_own.size and pos_own.min() < 0:
+        missing = np.unique(own[pos_own < 0]).tolist()
+        raise ValueError(
+            f"batch activates tiles owned by non-participating shards "
+            f"{missing}; participants={parts.tolist()}"
+        )
     lt = np.asarray(plan.local_tile_of)[own, vt].astype(np.int64)
     if lt.size and lt.min() < 0:
         raise ValueError("plan does not hold an activated tile on its owner")
 
     Lmax = max(int(plan.max_local_tiles), 1)
-    key = (own * nb_safe + vblk) * Lmax + lt
+    key = (pos_own * nb_safe + vblk) * Lmax + lt
     uniq = np.unique(key)
     usb = uniq // Lmax
     ult = (uniq % Lmax).astype(np.int64)
     us = (usb // nb_safe).astype(np.int64)
     ub = (usb % nb_safe).astype(np.int64)
-    per_sb = np.bincount(usb, minlength=S * nb_safe)
+    per_sb = np.bincount(usb, minlength=P * nb_safe)
     width = int(per_sb.max()) if uniq.size else 0
     max_tiles = _padded_width(width, max_tiles, "shard block")
 
     from repro.core.cooccurrence import segment_ranks
 
-    blocked_ids = np.full((S, nb_safe, max_tiles), -1, dtype=np.int32)
+    blocked_ids = np.full((P, nb_safe, max_tiles), -1, dtype=np.int32)
     pos_u = segment_ranks(per_sb)
     blocked_ids[us, ub, pos_u] = ult
     blocked_bms = np.zeros(
-        (S, nb_safe, max_tiles, q_block, tile_rows), dtype=bms.dtype
+        (P, nb_safe, max_tiles, q_block, tile_rows), dtype=bms.dtype
     )
     pos_entry = pos_u[np.searchsorted(uniq, key)]
-    blocked_bms[own, vblk, pos_entry, vq % q_block] = bms[vq, vs]
-    widths = per_sb.reshape(S, nb_safe).max(axis=1) if uniq.size else np.zeros(S, np.int64)
+    blocked_bms[pos_own, vblk, pos_entry, vq % q_block] = bms[vq, vs]
+    widths = per_sb.reshape(P, nb_safe).max(axis=1) if uniq.size else np.zeros(P, np.int64)
     return ShardedBlockedQueries(
         tile_ids=jnp.asarray(blocked_ids),
         bitmaps=jnp.asarray(blocked_bms),
         q_block=q_block,
         batch=batch,
         shard_widths=widths.astype(np.int64),
+        shards=shards_field,
     )
+
+
+class BlockUnionTracker:
+    """Incremental block-union fill accounting for one pending stream.
+
+    The flush scheduler (DESIGN.md §7) needs to know, as queries
+    accumulate on a shard, how large that shard's kernel grid would be
+    if it flushed *now* — without compiling anything.  With
+    ``replica_block=q_block`` every block resolves each activated group
+    to exactly one replica tile, so a block's union width equals the
+    number of distinct groups its members touch; this tracker maintains
+    exactly that, one ``set`` union per in-progress block:
+
+      * :attr:`fill` — Σ union widths over all pending blocks (the raw
+        tile-DMA count of a flush-now);
+      * :meth:`grid_cells` — ``nb × padded max width``, the same
+        sublane-padded accounting as :func:`shard_block_queries`.
+
+    ``add`` takes the query's distinct activated *group* ids (host-side
+    routing already computes them); O(groups-per-query) per call.
+    """
+
+    def __init__(self, q_block: int):
+        if q_block < 1:
+            raise ValueError("q_block must be >= 1")
+        self.q_block = q_block
+        self.reset()
+
+    def reset(self) -> None:
+        self._n = 0
+        self._filled = 0          # Σ union widths of completed blocks
+        self._max_width = 0
+        self._block: set = set()  # current partial block's union
+
+    def add(self, groups) -> None:
+        """Appends one query (its distinct activated group ids)."""
+        if self._n and self._n % self.q_block == 0:
+            self._filled += len(self._block)
+            self._max_width = max(self._max_width, len(self._block))
+            self._block = set()
+        self._block.update(int(g) for g in groups)
+        self._n += 1
+
+    @property
+    def pending(self) -> int:
+        """Queries added since the last reset."""
+        return self._n
+
+    @property
+    def fill(self) -> int:
+        """Σ block-union widths of the pending stream (tile DMA count)."""
+        return self._filled + len(self._block)
+
+    def grid_cells(self) -> int:
+        """Kernel grid cells of a flush-now (nb × sublane-padded width)."""
+        if self._n == 0:
+            return 0
+        nb = -(-self._n // self.q_block)
+        width = max(self._max_width, len(self._block))
+        return nb * _padded_width(width, None, "pending block")
 
 
 def fused_group_loads(

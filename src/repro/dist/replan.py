@@ -63,9 +63,17 @@ class PlanPatch:
         groups).  ``len(dma) == Σ_promoted copies[g] · (S-1)``.
       freed: ``(shard, local_slot)`` slots released by demotions; no
         data movement, the slot just stops being addressed.
-      new_capacity: per-shard image depth required after the patch
-        (>= the capacity the patch was computed against; grows only when
-        promotions exhaust the free slots + slack headroom).
+      new_capacity: per-shard image depth required after the patch.
+        Grows only when promotions exhaust the free slots + slack
+        headroom; SHRINKS below the computed-against capacity only when
+        slack age-out was requested (``shrink_slack=`` — long demotion
+        streaks leave a free-slot tail that would otherwise persist at
+        its high-water mark forever).
+      moved: ``(shard, fused_tile, old_slot, new_slot)`` resident-tile
+        relocations performed by slack age-out: tiles living above the
+        shrunk depth compact down into freed holes so the slice loses
+        only unaddressed slots.  Each relocation is one tile DMA from
+        the host master image; empty unless ``shrink_slack`` was set.
       drifted_load: the ``(G,)`` fused-group load snapshot the patch was
         computed on; becomes the patched plan's ``group_load`` so the
         drift statistic re-anchors to the new placement.
@@ -77,6 +85,9 @@ class PlanPatch:
     freed: List[Tuple[int, int]]
     new_capacity: int
     drifted_load: np.ndarray
+    moved: List[Tuple[int, int, int, int]] = dataclasses.field(
+        default_factory=list
+    )
 
     @property
     def num_moved_groups(self) -> int:
@@ -84,18 +95,27 @@ class PlanPatch:
 
     @property
     def num_moved_tiles(self) -> int:
-        """Tiles the patch DMAs — the acceptance metric vs a full rebuild."""
+        """Tiles the patch DMAs for promotions — the acceptance metric
+        vs a full rebuild (compaction DMAs are :attr:`num_relocated_tiles`)."""
         return len(self.dma)
 
+    @property
+    def num_relocated_tiles(self) -> int:
+        """Tiles slack age-out compacts into lower slots (also DMAs)."""
+        return len(self.moved)
+
     def is_noop(self) -> bool:
-        """True when drift changed no replication class (rebase only)."""
-        return not (self.promoted or self.demoted)
+        """True when drift changed no replication class AND no tile
+        relocated (rebase only) — the only patches safe to apply
+        without the image update, since they touch no device state."""
+        return not (self.promoted or self.demoted or self.moved)
 
     def summary(self) -> dict:
         return {
             "promoted_groups": len(self.promoted),
             "demoted_groups": len(self.demoted),
             "moved_tiles": self.num_moved_tiles,
+            "relocated_tiles": self.num_relocated_tiles,
             "freed_slots": len(self.freed),
             "new_capacity": self.new_capacity,
         }
@@ -152,6 +172,7 @@ def compute_plan_patch(
     *,
     eq1_batch: int,
     capacity: int | None = None,
+    shrink_slack: int | None = None,
 ) -> PlanPatch:
     """Diffs the live plan against Eq. 1 evaluated on the drifted load.
 
@@ -164,6 +185,13 @@ def compute_plan_patch(
       capacity: current per-shard image depth (slots a promotion may
         fill without growing the image); defaults to
         ``plan.max_local_tiles``.
+      shrink_slack: when set, age out slack capacity — the patch's
+        ``new_capacity`` drops to the highest slot any shard still
+        allocates (post-patch) plus this many headroom slots, instead
+        of staying at the high-water mark.  The server requests this
+        after long demotion streaks so the slot free-list shrinks back
+        instead of growing monotonically; never raises capacity above
+        what the patch itself requires.
 
     Returns:
       A :class:`PlanPatch`.  Pure host-side computation — no device
@@ -193,29 +221,44 @@ def compute_plan_patch(
     promoted = np.nonzero(target & ~plan.replicated_group)[0]
     demote_ids = np.nonzero(~target & plan.replicated_group)[0]
 
-    # drifted load of the placement that stays put; promoted groups leave
-    # their owner's tally (their work round-robins after the patch)
+    # drifted load + resident-tile pressure of the placement that stays
+    # put; promoted groups leave their owner's tally (their work
+    # round-robins after the patch)
     shard_load = np.zeros(S, dtype=np.float64)
+    shard_tiles = np.zeros(S, dtype=np.int64)
     stays = plan.shard_of_group >= 0
     stays[promoted] = False
     np.add.at(shard_load, plan.shard_of_group[stays], load[stays])
+    np.add.at(shard_tiles, plan.shard_of_group[stays], copies[stays])
 
-    # demotions: greedy least-loaded owner, descending drifted load —
-    # the fresh planner's rule, restricted to the moved groups
+    # demotions: the fresh planner's rule restricted to the moved
+    # groups — greedy descending drifted load; loaded groups to the
+    # least-loaded shard (tile pressure breaks ties), but the typical
+    # demoted group has COOLED to ~zero load, where frequency balance
+    # says nothing: those place on the least-TILE-loaded shard, the
+    # cold-tail memory balance that is half the point of sharding.
     demoted: List[Tuple[int, int]] = []
+    shard_ids = range(S)
     order = demote_ids[np.argsort(-load[demote_ids], kind="stable")]
     for g in order.tolist():
-        s = int(min(range(S), key=lambda i: (shard_load[i], i)))
+        if load[g] > 0:
+            s = int(min(shard_ids,
+                        key=lambda i: (shard_load[i], shard_tiles[i], i)))
+        else:
+            s = int(min(shard_ids, key=lambda i: (shard_tiles[i], i)))
         demoted.append((g, s))
         shard_load[s] += load[g]
+        shard_tiles[s] += int(copies[g])
 
     # slot bookkeeping: demotions free non-owner slots first, promotions
     # then fill the lowest free slot per shard (deterministic), growing
     # the capacity only when a shard has no free slot left
-    used = [
-        set(plan.local_tile_of[s][plan.local_tile_of[s] >= 0].tolist())
-        for s in range(S)
-    ]
+    slot_tile: List[dict] = []
+    for s in range(S):
+        resident = np.nonzero(plan.local_tile_of[s] >= 0)[0]
+        slot_tile.append({
+            int(plan.local_tile_of[s, t]): int(t) for t in resident
+        })
     freed: List[Tuple[int, int]] = []
     for g, o in demoted:
         for t in range(int(tile_base[g]), int(tile_base[g] + copies[g])):
@@ -228,11 +271,12 @@ def compute_plan_patch(
                         f"replicated group {g}: shard {s} does not hold "
                         f"tile {t}"
                     )
-                used[s].discard(slot)
+                del slot_tile[s][slot]
                 freed.append((s, slot))
-    free = [sorted(set(range(capacity)) - used[s]) for s in range(S)]
+    free = [sorted(set(range(capacity)) - slot_tile[s].keys()) for s in range(S)]
     grow = [capacity] * S
     dma: List[Tuple[int, int, int]] = []
+    dma_index: dict = {}                   # (shard, slot) → index into dma
     for g in promoted.tolist():
         owner = int(plan.shard_of_group[g])
         for t in range(int(tile_base[g]), int(tile_base[g] + copies[g])):
@@ -244,14 +288,44 @@ def compute_plan_patch(
                 else:
                     slot = grow[s]
                     grow[s] += 1
+                slot_tile[s][slot] = t
+                dma_index[(s, slot)] = len(dma)
                 dma.append((s, slot, t))
+    new_capacity = max(grow)
+    moved: List[Tuple[int, int, int, int]] = []
+    if shrink_slack is not None and new_capacity <= capacity:
+        # slack age-out: compact the stack down to the busiest shard's
+        # resident count + requested headroom.  Tiles above the new
+        # depth relocate into free holes below it (one master-image DMA
+        # each); a promotion landing above it just retargets its DMA.
+        # Only legal when nothing grew this patch.
+        target = min(
+            capacity, max(len(st) for st in slot_tile) + int(shrink_slack)
+        )
+        for s in range(S):
+            over = sorted(slot for slot in slot_tile[s] if slot >= target)
+            free_low = sorted(
+                set(range(target)) - set(slot_tile[s])
+            )
+            for old in over:
+                new = free_low.pop(0)
+                t = slot_tile[s].pop(old)
+                slot_tile[s][new] = t
+                idx = dma_index.pop((s, old), None)
+                if idx is not None:
+                    dma[idx] = (s, new, t)   # incoming tile, not resident
+                    dma_index[(s, new)] = idx
+                else:
+                    moved.append((s, t, old, new))
+        new_capacity = target
     return PlanPatch(
         promoted=promoted.tolist(),
         demoted=demoted,
         dma=dma,
         freed=freed,
-        new_capacity=max(grow),
+        new_capacity=new_capacity,
         drifted_load=load.copy(),
+        moved=moved,
     )
 
 
@@ -294,6 +368,13 @@ def apply_plan_patch(plan: ShardPlan, patch: PlanPatch) -> ShardPlan:
             raise ValueError(f"shard {s} already holds fused tile {t}")
         local[s, t] = slot
         nloc[s] += 1
+    for s, t, old, new in patch.moved:
+        if local[s, t] != old:
+            raise ValueError(
+                f"relocation of fused tile {t} on shard {s}: expected "
+                f"slot {old}, plan has {local[s, t]}"
+            )
+        local[s, t] = new
 
     return ShardPlan(
         num_shards=S,

@@ -25,11 +25,20 @@ Two execution paths, numerically identical:
     OUTPUT-sized, never table-sized) + ``all_gather``, or plain
     ``lax.psum`` when the dim does not divide.
 
+Both paths dispatch through ``functools.lru_cache``-keyed ``jax.jit``
+wrappers (DESIGN.md §7.2): the serving loop re-invokes one flush shape
+over and over, so repeat flushes skip retracing and — crucially for the
+async engine — a dispatch returns immediately with the computation
+executing asynchronously, which is what the double-buffered
+host-compile / device-execute overlap overlaps with.
+
 This is inference-path machinery: no custom VJP (training through the
 sharded image goes through the single-shard ``crossbar_reduce`` entries).
 """
 
 from __future__ import annotations
+
+import functools
 
 import numpy as np
 import jax
@@ -49,6 +58,102 @@ def _shard_map():
         return shard_map
 
 
+@functools.lru_cache(maxsize=None)
+def _emulated_fn(shards, chunks, dynamic_switch, interpret):
+    """jit-cached single-device emulation of the sharded reduction.
+
+    Keyed by the participating shard ids + static knobs; jax.jit's own
+    cache handles shapes.  Caching matters twice: repeat flushes of one
+    shape skip retracing (the serving loop's per-flush host cost), and
+    a jitted dispatch returns immediately with the computation running
+    ASYNCHRONOUSLY — without it the §7 engine's host-compile /
+    device-execute overlap would have nothing to overlap with off-TPU.
+    """
+
+    def fn(images, tile_ids, bitmaps):
+        nb, q_block = bitmaps.shape[1], bitmaps.shape[3]
+        dim = images.shape[-1]
+        bounds = _chunk_bounds(nb, chunks)
+        out = jnp.zeros((nb * q_block, dim), jnp.float32)
+        for p, s in enumerate(shards):
+            parts = [
+                crossbar_reduce_pallas(
+                    images[s], tile_ids[p][c0:c1], bitmaps[p][c0:c1],
+                    dynamic_switch=dynamic_switch, interpret=interpret,
+                ).astype(jnp.float32)
+                for c0, c1 in bounds
+            ]
+            out = out + jnp.concatenate(parts, axis=0)
+        return out.astype(images.dtype)
+
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _mesh_fn(mesh, axis_name, chunks, dynamic_switch, interpret, scatter):
+    """jit-cached shard_map reduction (full-axis combine)."""
+
+    def local(img, ids, bms):
+        img, ids, bms = img[0], ids[0], bms[0]
+        bounds = _chunk_bounds(ids.shape[0], chunks)
+        outs = []
+        for c0, c1 in bounds:
+            part = crossbar_reduce_pallas(
+                img, ids[c0:c1], bms[c0:c1],
+                dynamic_switch=dynamic_switch, interpret=interpret,
+            ).astype(jnp.float32)
+            # chunk c's combine is independent of chunk c+1's kernel →
+            # XLA overlaps this collective with the next chunk's DMAs
+            if scatter:
+                part = lax.psum_scatter(
+                    part, axis_name, scatter_dimension=1, tiled=True
+                )
+            else:
+                part = lax.psum(part, axis_name)
+            outs.append(part)
+        out = jnp.concatenate(outs, axis=0)
+        if scatter:
+            out = lax.all_gather(out, axis_name, axis=1, tiled=True)
+        return out[None]
+
+    return jax.jit(_shard_map()(
+        local,
+        mesh=mesh,
+        in_specs=(P(axis_name), P(axis_name), P(axis_name)),
+        out_specs=P(axis_name),
+        # pallas_call has no replication rule; replication is
+        # re-established explicitly by the psum/all_gather combine
+        check_rep=False,
+    ))
+
+
+@functools.lru_cache(maxsize=None)
+def _mesh_single_fn(mesh, axis_name, chunks, dynamic_switch, interpret):
+    """jit-cached shard_map reduction with NO combine — the
+    single-participant flush path (the participant's stacked output is
+    the result; non-participants run empty masked grids)."""
+
+    def local(img, ids, bms):
+        img, ids, bms = img[0], ids[0], bms[0]
+        bounds = _chunk_bounds(ids.shape[0], chunks)
+        parts = [
+            crossbar_reduce_pallas(
+                img, ids[c0:c1], bms[c0:c1],
+                dynamic_switch=dynamic_switch, interpret=interpret,
+            ).astype(jnp.float32)
+            for c0, c1 in bounds
+        ]
+        return jnp.concatenate(parts, axis=0)[None]
+
+    return jax.jit(_shard_map()(
+        local,
+        mesh=mesh,
+        in_specs=(P(axis_name), P(axis_name), P(axis_name)),
+        out_specs=P(axis_name),
+        check_rep=False,
+    ))
+
+
 def _chunk_bounds(nb: int, combine_chunks: int) -> list[tuple[int, int]]:
     """Contiguous, roughly equal block-axis chunks (static)."""
     chunks = max(1, min(combine_chunks, nb)) if nb else 1
@@ -65,8 +170,8 @@ def _chunk_bounds(nb: int, combine_chunks: int) -> list[tuple[int, int]]:
 
 def crossbar_reduce_sharded(
     images: jax.Array,    # (S, local_tiles, tile_rows, dim) stacked shard images
-    tile_ids: jax.Array,  # (S, nb, max_tiles) int32 shard-local ids, -1 pad
-    bitmaps: jax.Array,   # (S, nb, max_tiles, q_block, tile_rows)
+    tile_ids: jax.Array,  # (P, nb, max_tiles) int32 shard-local ids, -1 pad
+    bitmaps: jax.Array,   # (P, nb, max_tiles, q_block, tile_rows)
     *,
     mesh=None,
     axis_name: str = "model",
@@ -74,12 +179,14 @@ def crossbar_reduce_sharded(
     combine_chunks: int = 1,
     dynamic_switch: bool = True,
     interpret: bool | None = None,
+    shard_ids=None,       # (P,) global shard ids of the stacked schedules
 ) -> jax.Array:
     """Shard-local query-blocked reduction + cross-shard combine.
 
     Args:
       images: per-shard local images from ``ShardPlan.build_shard_images``
-        (trailing padding tiles zero).
+        (trailing padding tiles zero).  Always the full ``S``-deep stack,
+        even for a subset dispatch.
       tile_ids / bitmaps: stacked shard-local blocked batch from
         ``shard_block_queries`` (every shard shares the block axis).
       mesh: run under shard_map on this mesh's ``axis_name`` axis (size
@@ -87,74 +194,83 @@ def crossbar_reduce_sharded(
       combine: "psum_scatter" (reduce-scatter over the embedding dim +
         all-gather; falls back to psum when dim % shards != 0) or "psum".
       combine_chunks: block-axis chunks for combine/DMA overlap.
+      shard_ids: when the batch was compiled for a shard *subset*
+        (``participants=`` — the scheduler's independent per-shard
+        flushes, DESIGN.md §7), the global shard id of each stacked
+        schedule.  Emulation runs only the participating shards'
+        kernels; under shard_map the subset schedules scatter into a
+        full-``S`` stack of empty (all ``-1``) schedules, so
+        non-participants contribute exact-zero partials and the chunked
+        psum_scatter combine is unchanged.  ``None`` = all shards.
 
     Returns:
       ``(nb * q_block, dim)`` summed reduction in block-major query
       order — the same contract as ``crossbar_reduce_blocked``.
     """
     S, _, _, dim = images.shape
-    if tile_ids.shape[0] != S or bitmaps.shape[0] != S:
-        raise ValueError(
-            f"shard axes disagree: images {images.shape[0]}, "
-            f"tile_ids {tile_ids.shape[0]}, bitmaps {bitmaps.shape[0]}"
-        )
-    nb, q_block = bitmaps.shape[1], bitmaps.shape[3]
+    if shard_ids is None:
+        if tile_ids.shape[0] != S or bitmaps.shape[0] != S:
+            raise ValueError(
+                f"shard axes disagree: images {images.shape[0]}, "
+                f"tile_ids {tile_ids.shape[0]}, bitmaps {bitmaps.shape[0]}"
+            )
+        part = np.arange(S, dtype=np.int64)
+    else:
+        part = np.asarray(shard_ids, dtype=np.int64)
+        if tile_ids.shape[0] != part.size or bitmaps.shape[0] != part.size:
+            raise ValueError(
+                f"shard_ids has {part.size} entries, schedules have "
+                f"{tile_ids.shape[0]}/{bitmaps.shape[0]}"
+            )
+        if part.size and (part.min() < 0 or part.max() >= S):
+            raise ValueError(f"shard_ids {part} out of range for {S} shards")
     if combine not in ("psum_scatter", "psum"):
         raise ValueError(f"unknown combine {combine!r}")
-    bounds = _chunk_bounds(nb, combine_chunks)
-
-    def shard_partial(img, ids, bms, c0, c1):
-        return crossbar_reduce_pallas(
-            img, ids[c0:c1], bms[c0:c1],
-            dynamic_switch=dynamic_switch, interpret=interpret,
-        ).astype(jnp.float32)                      # (cnb * q_block, dim)
 
     if mesh is None:
-        # single-device emulation: shard loop in-program, f32 accumulate
-        out = jnp.zeros((nb * q_block, dim), jnp.float32)
-        for s in range(S):
-            parts = [
-                shard_partial(images[s], tile_ids[s], bitmaps[s], c0, c1)
-                for c0, c1 in bounds
-            ]
-            out = out + jnp.concatenate(parts, axis=0)
-        return out.astype(images.dtype)
+        # single-device emulation: shard loop in-program, f32 accumulate.
+        # A subset flush runs ONLY the participants' kernels — that is
+        # the per-shard scheduler's compute saving on the emulation path.
+        fn = _emulated_fn(
+            tuple(part.tolist()), combine_chunks, dynamic_switch, interpret
+        )
+        return fn(images, tile_ids, bitmaps)
 
     mesh_axis = dict(zip(mesh.axis_names, mesh.devices.shape)).get(axis_name)
     if mesh_axis != S:
         raise ValueError(
             f"mesh axis {axis_name!r} has size {mesh_axis}, need {S} shards"
         )
+    if part.size != S or not np.array_equal(part, np.arange(S)):
+        # shard_map needs one schedule per device: scatter the subset
+        # into empty (-1 / zero) schedules — empty grids are masked
+        # in-kernel, so non-participants produce exact-zero partials.
+        # Device-side functional scatter: no host round-trip of the
+        # just-built schedules on the per-shard flush hot path.
+        idx = jnp.asarray(part, dtype=jnp.int32)
+        tile_ids = jnp.full(
+            (S,) + tuple(tile_ids.shape[1:]), -1, dtype=jnp.int32
+        ).at[idx].set(tile_ids)
+        bitmaps = jnp.zeros(
+            (S,) + tuple(bitmaps.shape[1:]), dtype=bitmaps.dtype
+        ).at[idx].set(bitmaps)
+
+    if part.size == 1:
+        # single-participant flush: the participant's partial IS the
+        # result, so no collective runs at all — a per-shard flush
+        # crosses zero interconnect on the mesh path too.  (Multi-shard
+        # subsets still ring the full axis, zeros from non-participants.)
+        fn = _mesh_single_fn(
+            mesh, axis_name, combine_chunks, dynamic_switch, interpret
+        )
+        out = fn(images, tile_ids, bitmaps)
+        return out[int(part[0])].astype(images.dtype)
+
     scatter = combine == "psum_scatter" and dim % S == 0
-
-    def local(img, ids, bms):
-        img, ids, bms = img[0], ids[0], bms[0]
-        outs = []
-        for c0, c1 in bounds:
-            part = shard_partial(img, ids, bms, c0, c1)
-            # chunk c's combine is independent of chunk c+1's kernel →
-            # XLA overlaps this collective with the next chunk's DMAs
-            if scatter:
-                part = lax.psum_scatter(
-                    part, axis_name, scatter_dimension=1, tiled=True
-                )
-            else:
-                part = lax.psum(part, axis_name)
-            outs.append(part)
-        out = jnp.concatenate(outs, axis=0)
-        if scatter:
-            out = lax.all_gather(out, axis_name, axis=1, tiled=True)
-        return out[None]
-
-    out = _shard_map()(
-        local,
-        mesh=mesh,
-        in_specs=(P(axis_name), P(axis_name), P(axis_name)),
-        out_specs=P(axis_name),
-        # pallas_call has no replication rule; replication is re-established
-        # explicitly by the psum/all_gather combine above
-        check_rep=False,
-    )(images, tile_ids, bitmaps)
+    fn = _mesh_fn(
+        mesh, axis_name, combine_chunks, dynamic_switch, interpret, scatter
+    )
+    out = fn(images, tile_ids, bitmaps)
     # every shard returns the full combined batch; take shard 0's copy
     return out[0].astype(images.dtype)
 
@@ -176,7 +292,9 @@ def crossbar_reduce_tables(
     ``sbq`` is the fused :class:`~repro.core.reduction.
     ShardedBlockedQueries` (per-table compiles offset into the fused tile
     space, concatenated with ``concat_compiled_queries``), ``spans`` the
-    per-table ``(row_start, batch)`` list that call returned.
+    per-table ``(row_start, batch)`` list that call returned.  A subset
+    compile (``sbq.shards`` set) dispatches only the participating
+    shards' kernels — the scheduler's independent per-shard flush path.
 
     Returns one ``(batch_t, dim)`` array per table, padding rows sliced.
     """
@@ -184,7 +302,7 @@ def crossbar_reduce_tables(
         images, sbq.tile_ids, sbq.bitmaps,
         mesh=mesh, axis_name=axis_name, combine=combine,
         combine_chunks=combine_chunks, dynamic_switch=dynamic_switch,
-        interpret=interpret,
+        interpret=interpret, shard_ids=sbq.shards,
     )
     return [out[start : start + batch] for start, batch in spans]
 
@@ -207,7 +325,12 @@ def patch_shard_images(
     When promotions outgrow the current capacity the stack is padded
     with zero tiles up to ``patch.new_capacity`` first — an allocation,
     but still no table-sized data movement (the pad is zeros and only
-    the moved tiles are copied in).
+    the moved tiles are copied in).  A patch computed with slack
+    age-out (``compute_plan_patch(..., shrink_slack=)``) may instead
+    carry ``new_capacity`` *below* the current depth: the stack is
+    sliced down, releasing the free tail long demotion streaks left
+    behind — every slot the patched plan addresses stays below the new
+    depth by construction.
 
     Args:
       images: the serving image stack (``ShardPlan.build_shard_images``
@@ -226,11 +349,20 @@ def patch_shard_images(
             (S, patch.new_capacity - capacity) + images.shape[2:], images.dtype
         )
         images = jnp.concatenate([images, pad], axis=1)
-    if not patch.dma:
+    elif patch.new_capacity < capacity:
+        # slack age-out (DESIGN.md §6.2): every slot the patched plan
+        # addresses is below the new depth (compaction relocated the
+        # rest), so the slice drops only unaddressable bytes
+        images = images[:, : patch.new_capacity]
+    # promotions' new holders + compaction relocations, one batched
+    # scatter from the host master image
+    writes = list(patch.dma)
+    writes += [(s, new, t) for s, t, _old, new in patch.moved]
+    if not writes:
         return images
-    shards = jnp.asarray([d[0] for d in patch.dma], dtype=jnp.int32)
-    slots = jnp.asarray([d[1] for d in patch.dma], dtype=jnp.int32)
-    tiles = np.asarray([d[2] for d in patch.dma], dtype=np.int64)
+    shards = jnp.asarray([w[0] for w in writes], dtype=jnp.int32)
+    slots = jnp.asarray([w[1] for w in writes], dtype=jnp.int32)
+    tiles = np.asarray([w[2] for w in writes], dtype=np.int64)
     moved = jnp.asarray(np.asarray(fused_image)[tiles], dtype=images.dtype)
     return images.at[shards, slots].set(moved)
 

@@ -12,6 +12,8 @@ Usage::
     PYTHONPATH=src python -m repro.launch.serve_sharded --shards 4 --tables 2
     PYTHONPATH=src python -m repro.launch.serve_sharded --emulate   # no mesh
     PYTHONPATH=src python -m repro.launch.serve_sharded --emulate --drift
+    PYTHONPATH=src python -m repro.launch.serve_sharded --emulate \
+        --flush-policy deadline --skew 3   # async per-shard pipelining
 
 ``--drift`` enables the drifting-workload replay (DESIGN.md §6): after
 ``--drift-at`` of the request stream, row ids are remapped through a
@@ -48,6 +50,29 @@ def parse_args(argv=None):
     ap.add_argument("--combine", choices=["psum_scatter", "psum"],
                     default="psum_scatter")
     ap.add_argument("--combine-chunks", type=int, default=2)
+    ap.add_argument("--flush-policy",
+                    choices=["global", "per-shard", "deadline"],
+                    default="global",
+                    help="global: synchronous fused flushes (PR-2 path); "
+                         "per-shard/deadline: shards flush independently "
+                         "as their block unions fill, host compile "
+                         "pipelined against device execution "
+                         "(DESIGN.md §7)")
+    ap.add_argument("--union-budget", type=int, default=None,
+                    help="per-shard block-union fill that triggers an "
+                         "independent flush (None: batch-size/deadline "
+                         "triggers only)")
+    ap.add_argument("--flush-deadline", type=int, default=None,
+                    help="max submissions a pending query waits before a "
+                         "forced flush (deadline policy; default 4x "
+                         "batch-size)")
+    ap.add_argument("--max-in-flight", type=int, default=2,
+                    help="bound on dispatched-but-unretired async flushes")
+    ap.add_argument("--skew", type=float, default=1.0,
+                    help="per-table arrival skew: table i receives "
+                         "weight skew^-i of the request stream (1.0 = "
+                         "uniform); skewed arrivals are where per-shard "
+                         "flushing beats the global policy")
     ap.add_argument("--emulate", action="store_true",
                     help="single-device shard loop instead of shard_map")
     ap.add_argument("--drift", action="store_true",
@@ -108,6 +133,10 @@ def main(args) -> None:
         batch_size=args.batch_size,
         combine=args.combine, combine_chunks=args.combine_chunks,
         replan=replan_cfg,
+        flush_policy=args.flush_policy,
+        union_budget=args.union_budget,
+        flush_deadline=args.flush_deadline,
+        max_in_flight=args.max_in_flight,
     )
 
     stream = zipf_queries(args.rows, args.requests, args.mean_bag, seed=1234)
@@ -121,16 +150,30 @@ def main(args) -> None:
             perm[np.asarray(q, dtype=np.int64)] for q in stream[cut:]
         ]
     names = list(tables)
+    # per-table arrival replay: uniform round robin at skew 1, weighted
+    # choice otherwise (table i's arrival rate ∝ skew^-i) — tables fill
+    # at different rates, so per-shard unions fill at different rates
+    if args.skew != 1.0:
+        w = np.power(float(args.skew), -np.arange(len(names)))
+        pick = np.random.default_rng(5).choice(
+            len(names), size=len(stream), p=w / w.sum()
+        )
+    else:
+        pick = np.arange(len(stream)) % len(names)
     flushed = 0
+    import time
+    t0 = time.perf_counter()
     for i, q in enumerate(stream):
-        out = server.submit(names[i % len(names)], q)
+        out = server.submit(names[int(pick[i])], q)
         if out:
             flushed += 1
     if server.flush():
         flushed += 1
+    wall = time.perf_counter() - t0
 
     report = server.report()
     report["flushes"] = flushed
+    report["replay_wall_s"] = wall
     print(json.dumps(report, indent=1, default=str))
 
 

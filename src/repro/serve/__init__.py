@@ -2,10 +2,12 @@ from repro.serve.decode import decode_step
 from repro.serve.kvcache import cache_bytes, init_cache
 from repro.serve.batching import RequestBatcher, ServeMetrics
 from repro.serve.drift import DriftTracker, ReplanConfig
+from repro.serve.scheduler import POOL, FlushPolicy, FlushScheduler
 from repro.serve.sharded import ShardedEmbeddingServer, ShardedServeStats
 
 __all__ = [
     "decode_step", "init_cache", "cache_bytes", "RequestBatcher",
     "ServeMetrics", "ShardedEmbeddingServer", "ShardedServeStats",
     "DriftTracker", "ReplanConfig",
+    "FlushPolicy", "FlushScheduler", "POOL",
 ]

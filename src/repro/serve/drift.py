@@ -51,6 +51,12 @@ class ReplanConfig:
       slack_tiles: extra zero tiles of per-shard image headroom
         allocated at build, so early promotions reuse slack instead of
         growing (reallocating) the device image stack.
+      shrink_streak: consecutive demotion-only patches after which
+        slack capacity ages out — the next patch also shrinks the image
+        stack back to the highest allocated slot + ``slack_tiles``
+        headroom, so the slot free-list stops growing monotonically
+        under a cooling workload.  0 disables age-out (capacity stays
+        at its high-water mark forever).
     """
 
     threshold: float = 0.25
@@ -58,6 +64,7 @@ class ReplanConfig:
     min_queries: int = 64
     eq1_batch: int | None = None
     slack_tiles: int = 0
+    shrink_streak: int = 0
 
 
 class DriftTracker:

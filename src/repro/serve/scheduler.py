@@ -1,0 +1,324 @@
+"""Shard-aware flush scheduling for the sharded embedding server.
+
+The policy half of the asynchronous serving engine (DESIGN.md §7).  The
+global flush path (PR 2/3) batches every table into one fused compile:
+every shard waits for the slowest table's block union to fill, and the
+host compiles flush *n+1* only after flush *n* returns.  This module
+decides *which queries can flush together early*:
+
+  * **routing** — a query's sharded-once groups pin it to their owner
+    shards.  A query whose owners collapse to one shard (or whose groups
+    are all replicated-everywhere) is servable by a *single* shard: that
+    shard holds every tile the query activates, so its reduction
+    completes with no cross-shard combine at all.  Multi-owner queries
+    pool up for a fused flush over exactly their owner union.
+  * **union-fill accounting** — one
+    :class:`~repro.core.reduction.BlockUnionTracker` per (home, table)
+    maintains the grid a flush-now would run, without compiling
+    anything (per table because the fused compile's blocks never span
+    tables; a home's fill is the sum over its tables).  A shard flushes
+    independently when its union fill crosses ``union_budget``, when its
+    pending count reaches ``batch_size``, or (``deadline`` policy) when
+    its oldest query has waited ``deadline`` submissions.
+
+The scheduler is pure host bookkeeping — it never touches device state.
+Dispatch, the bounded in-flight queue and the double-buffered
+host-compile / device-execute pipelining live in
+:class:`repro.serve.sharded.ShardedEmbeddingServer`; the patch-barrier
+rule for online replanning (a staged :class:`~repro.dist.replan.
+PlanPatch` applies only when the pipeline is drained) is specified in
+DESIGN.md §7.3.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.reduction import BlockUnionTracker
+
+#: pseudo-home for multi-owner queries (flushed over their owner union)
+POOL = -1
+
+_KINDS = ("global", "per-shard", "deadline")
+
+
+@dataclasses.dataclass
+class FlushPolicy:
+    """When does a pending query batch flush, and how deep may the
+    dispatch pipeline run (DESIGN.md §7.1).
+
+    Attributes:
+      kind: ``"global"`` — the PR-2 synchronous path (one fused flush at
+        ``batch_size`` buffered, blocking serve); ``"per-shard"`` —
+        shards flush independently on their own union-fill /
+        batch-size triggers; ``"deadline"`` — per-shard plus an age
+        bound so a query on a cold shard can never wait unboundedly.
+      batch_size: per-home pending-query trigger (defaults to the
+        server's ``batch_size``).
+      union_budget: per-home block-union fill trigger (Σ union widths
+        the pending stream would DMA); ``None`` disables the fill
+        trigger and leaves batch-size/deadline only.
+      deadline: max submissions (global ticks) the oldest pending query
+        of a home may wait before a forced flush; only consulted by the
+        ``deadline`` kind (default ``4 × batch_size``).
+      max_in_flight: bound on dispatched-but-unretired flushes; the
+        oldest blocks (``block_until_ready``) when the bound is hit —
+        result hand-off is the ONLY blocking point of the async engine.
+    """
+
+    kind: str = "global"
+    batch_size: int | None = None
+    union_budget: int | None = None
+    deadline: int | None = None
+    max_in_flight: int = 2
+
+    def __post_init__(self):
+        if self.kind not in _KINDS:
+            raise ValueError(f"unknown flush policy {self.kind!r}; use {_KINDS}")
+        if self.max_in_flight < 1:
+            raise ValueError("max_in_flight must be >= 1")
+
+    @classmethod
+    def parse(cls, policy, *, batch_size: int) -> "FlushPolicy":
+        """Normalizes a kind string (or a ready policy) against server
+        defaults: ``batch_size`` falls back to the server's, ``deadline``
+        to ``4 × batch_size``."""
+        if isinstance(policy, str):
+            policy = cls(kind=policy)
+        p = dataclasses.replace(policy)
+        if p.batch_size is None:
+            p.batch_size = batch_size
+        if p.kind == "deadline" and p.deadline is None:
+            p.deadline = 4 * batch_size
+        return p
+
+    @property
+    def is_async(self) -> bool:
+        return self.kind != "global"
+
+
+class FlushScheduler:
+    """Routes queries to flush homes and tracks per-home fill state.
+
+    One *home* per shard (single-owner and replicated-only queries) plus
+    the :data:`POOL` home for multi-owner queries.  All state is host
+    NumPy/sets; ``route``/``push`` are O(rows in the query).
+
+    Args:
+      plan: the live :class:`~repro.dist.shard_plan.ShardPlan` (only
+        ``num_shards`` / ``shard_of_group`` / ``tables`` are read).
+      layouts: per-table :class:`~repro.core.mapping.CrossbarLayout` in
+        the same (sorted-name) order as ``plan.tables``.
+      names: table names in that order.
+      q_block: the server's query block size (union accounting unit).
+      policy: a normalized :class:`FlushPolicy`.
+    """
+
+    def __init__(self, plan, layouts, names: Sequence[str], q_block: int,
+                 policy: FlushPolicy):
+        self.q_block = q_block
+        self.policy = policy
+        self.names = list(names)
+        self._group_of = {
+            name: np.asarray(layout.group_of, dtype=np.int64)
+            for name, layout in zip(self.names, layouts)
+        }
+        self.rebuild(plan)
+        homes = list(range(self.num_shards)) + [POOL]
+        self._pending: Dict[int, List[Tuple[str, int, list]]] = {
+            h: [] for h in homes
+        }
+        # one tracker per (home, table): the fused compile never lets a
+        # block span tables, so per-table block accounting is what the
+        # flush would actually run; a home's fill sums over its tables
+        self._trackers: Dict[int, Dict[str, BlockUnionTracker]] = {
+            h: {} for h in homes
+        }
+        self._first_tick: Dict[int, int] = {}
+        self._tick = 0
+        self._rr = 0
+        self._pool_owners: set = set()
+
+    # ------------------------------------------------------------ routing --
+
+    def rebuild(self, plan) -> None:
+        """Re-derives the routing tables from a (possibly patched) plan.
+
+        Called at build and after every applied plan patch — promotion /
+        demotion changes group ownership, so row→home routing must
+        follow.  Only legal when nothing is pending (the patch-barrier
+        rule guarantees it: pending work flushed under the old plan
+        before the patch applies).
+        """
+        self.num_shards = int(plan.num_shards)
+        shard_of_group = np.asarray(plan.shard_of_group, dtype=np.int64)
+        self._owner_of_row = {}
+        self._fused_group_of_row = {}
+        for seg in plan.tables:
+            gof = self._group_of[seg.name] + seg.group_offset
+            self._fused_group_of_row[seg.name] = gof
+            self._owner_of_row[seg.name] = shard_of_group[gof]
+
+    def route(self, table: str, query: Sequence[int]) -> Tuple[int, np.ndarray]:
+        """Home of one query + its distinct fused group ids (a PEEK —
+        does not advance the replicated-work round robin; only
+        :meth:`push` consumes a round-robin slot).
+
+        Owners = owning shards of the query's sharded-once groups:
+        none → any shard serves it (round-robin keeps replicated work
+        spread, the degenerate form of the block-level round robin);
+        one → that shard; several → the cross-shard :data:`POOL`.
+        """
+        home, groups, _ = self._route(table, query, advance=False)
+        return home, groups
+
+    def _route(
+        self, table: str, query, *, advance: bool
+    ) -> Tuple[int, np.ndarray, np.ndarray]:
+        rows = np.unique(np.asarray(query, dtype=np.int64))
+        groups = np.unique(self._fused_group_of_row[table][rows])
+        owners = np.unique(self._owner_of_row[table][rows])
+        owners = owners[owners >= 0]
+        if owners.size == 0:
+            home = self._rr
+            if advance:
+                self._rr = (self._rr + 1) % self.num_shards
+        elif owners.size == 1:
+            home = int(owners[0])
+        else:
+            home = POOL
+        return home, groups, owners
+
+    def push(self, table: str, seq: int, query: Sequence[int]) -> int:
+        """Routes and enqueues one query; returns its home."""
+        home, groups, owners = self._route(table, query, advance=True)
+        if home == POOL:
+            self._pool_owners.update(int(o) for o in owners)
+        self._pending[home].append((table, seq, list(query)))
+        self._trackers[home].setdefault(
+            table, BlockUnionTracker(self.q_block)
+        ).add(groups)
+        self._first_tick.setdefault(home, self._tick)
+        self._tick += 1
+        return home
+
+    def first_tick(self, home: int):
+        """Submission tick of the home's oldest pending query (None if
+        empty) — captured by the server before a flush so a failed
+        dispatch can requeue without resetting the deadline clock."""
+        return self._first_tick.get(home)
+
+    def requeue(
+        self,
+        home: int,
+        entries: List[Tuple[str, int, list]],
+        first_tick: int | None = None,
+    ) -> None:
+        """Puts a taken batch back at the FRONT of its home's queue.
+
+        The failed-dispatch retry path: a compile error (e.g. one
+        malformed query) must not drop the batch — the async analogue
+        of the sync flush's leave-buffered-on-failure contract.  The
+        fill trackers and (for the pool) the owner union rebuild from
+        the merged queue so a later flush compiles correctly, and
+        ``first_tick`` (captured before the take) restores the deadline
+        clock so surviving queries never wait past the policy bound.
+        """
+        if not entries:
+            return
+        self._pending[home] = list(entries) + self._pending[home]
+        self._trackers[home] = {}
+        for table, _seq, query in self._pending[home]:
+            rows = np.unique(np.asarray(query, dtype=np.int64))
+            self._trackers[home].setdefault(
+                table, BlockUnionTracker(self.q_block)
+            ).add(np.unique(self._fused_group_of_row[table][rows]))
+            if home == POOL:
+                owners = np.unique(self._owner_of_row[table][rows])
+                self._pool_owners.update(
+                    int(o) for o in owners if o >= 0
+                )
+        if first_tick is not None:
+            self._first_tick[home] = min(
+                first_tick, self._first_tick.get(home, first_tick)
+            )
+        else:
+            self._first_tick.setdefault(home, self._tick)
+
+    # ----------------------------------------------------------- triggers --
+
+    def due_reason(self, home: int) -> str | None:
+        """Why ``home`` should flush now (``None`` = not due).
+
+        Returns ``"batch"`` (pending count), ``"union"`` (block-union
+        fill crossed the budget) or ``"deadline"`` (oldest pending query
+        aged out), checked in that order.
+        """
+        n = len(self._pending[home])
+        if n == 0:
+            return None
+        if n >= self.policy.batch_size:
+            return "batch"
+        if (self.policy.union_budget is not None
+                and self.fill(home) >= self.policy.union_budget):
+            return "union"
+        if (self.policy.kind == "deadline"
+                and self._tick - self._first_tick[home] >= self.policy.deadline):
+            return "deadline"
+        return None
+
+    def due(self, home: int) -> bool:
+        """Whether ``home`` should flush now under the policy."""
+        return self.due_reason(home) is not None
+
+    def due_homes(self) -> List[int]:
+        return [h for h in self._pending if self.due(h)]
+
+    def fill(self, home: int) -> int:
+        """Σ block-union widths over the home's pending per-table
+        streams — the tile-DMA count a flush-now would run."""
+        return sum(tr.fill for tr in self._trackers[home].values())
+
+    def homes_with_pending(self) -> List[int]:
+        return [h for h, q in self._pending.items() if q]
+
+    def pending_total(self) -> int:
+        return sum(len(q) for q in self._pending.values())
+
+    # --------------------------------------------------------------- take --
+
+    def take(self, home: int) -> Tuple[List[Tuple[str, int, list]], List[int] | None]:
+        """Pops a home's pending batch and its flush participants.
+
+        Returns ``(entries, participants)``: per-shard homes flush with
+        ``participants=[home]`` (no cross-shard combine); the pool
+        flushes over the union of its queries' owner shards —
+        ``None`` (all shards) only when that union covers the mesh.
+        """
+        entries = self._pending[home]
+        self._pending[home] = []
+        self._trackers[home] = {}
+        self._first_tick.pop(home, None)
+        if home == POOL:
+            owners = sorted(self._pool_owners)
+            self._pool_owners = set()
+            if not owners or len(owners) == self.num_shards:
+                return entries, None
+            return entries, owners
+        return entries, [home]
+
+    def state(self) -> Dict[str, object]:
+        """Pending/fill snapshot for :meth:`ShardedEmbeddingServer.report`."""
+        return {
+            "pending": {
+                str(h): len(q) for h, q in self._pending.items() if q
+            },
+            "union_fill": {
+                str(h): self.fill(h)
+                for h in self._pending if len(self._pending[h])
+            },
+            "tick": self._tick,
+        }

@@ -28,13 +28,26 @@ the start of the next flush: placement arrays swap, and only the moved
 tiles DMA into the image stack
 (:func:`repro.kernels.sharded.patch_shard_images`).  The full
 ``plan_shards`` + ``build_fused_image`` rebuild never reruns.
+
+**Async flush scheduling** (opt-in via ``flush_policy=``, DESIGN.md §7):
+under ``"per-shard"`` / ``"deadline"`` the synchronous loop above
+becomes a pipelined engine.  Queries route to home shards
+(:class:`~repro.serve.scheduler.FlushScheduler`), homes flush
+independently as their block unions fill, single-shard flushes compile
+with ``participants=[s]`` (no cross-shard combine at all), and each
+dispatch is non-blocking: the host compiles flush *n+1* while flush *n*
+executes on device, ``block_until_ready`` runs only at result hand-off
+(bounded in-flight queue / :meth:`ShardedEmbeddingServer.drain`).  A
+staged plan patch then applies only at a pipeline **barrier** — never
+between in-flight flushes.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 import jax
@@ -64,14 +77,36 @@ from repro.kernels.sharded import (
     patch_shard_images,
 )
 from repro.serve.drift import DriftTracker, ReplanConfig
+from repro.serve.scheduler import POOL, FlushPolicy, FlushScheduler
+
+
+@dataclasses.dataclass
+class _InFlight:
+    """One dispatched-but-unretired flush (DESIGN.md §7.2)."""
+
+    outs: List[jax.Array]                  # lazy per-table kernel outputs
+    sbq: object                            # the flush's ShardedBlockedQueries
+    served: List[str]                      # table names, outs order
+    seqs: Dict[str, np.ndarray]            # per-table submission sequence ids
+    t0: float                              # host compile start (perf_counter)
+    n_queries: int
+    host_cq: object = None                 # host-materialized fused batch
 
 
 @dataclasses.dataclass
 class ShardedServeStats:
-    """Accumulated per-flush accounting of the sharded datapath."""
+    """Accumulated per-flush accounting of the sharded datapath.
+
+    Under an async flush policy (DESIGN.md §7) ``wall_s`` is the sum of
+    per-flush dispatch→retire latencies, which OVERLAP — end-to-end wall
+    clock is what the scheduler bench measures; the pipelining gain
+    shows up here as ``hidden_compile_s`` (host compile time that ran
+    while a previous flush executed on device) over ``host_compile_s``.
+    """
 
     num_shards: int
     q_block: int
+    policy: str = "global"
     batches: int = 0
     queries: int = 0
     blocks: int = 0
@@ -80,6 +115,13 @@ class ShardedServeStats:
     max_shard_width: int = 0               # widest per-shard block union seen
     combine_bytes: int = 0
     wall_s: float = 0.0
+    # ---- async flush scheduling (DESIGN.md §7) ----
+    shard_flushes: Dict[int, int] = dataclasses.field(default_factory=dict)
+    barrier_flushes: int = 0               # pipeline drains (patch/explicit)
+    deadline_flushes: int = 0              # flushes forced by query age
+    host_compile_s: float = 0.0            # Σ per-flush host compile time
+    hidden_compile_s: float = 0.0          # … of which overlapped device exec
+    in_flight_peak: int = 0                # deepest dispatch queue seen
     # ---- online replanning (DESIGN.md §6) ----
     replans: int = 0                       # patches applied (moves > 0)
     rebases: int = 0                       # no-op patches (load reanchor only)
@@ -97,17 +139,40 @@ class ShardedServeStats:
         self.max_shard_width = max(
             self.max_shard_width, int(np.max(sbq.shard_widths, initial=0))
         )
+        # combine traffic: a single-participant flush skips the
+        # collective entirely (kernels.sharded takes the participant's
+        # stacked output directly) — zero interconnect; any wider flush
+        # rings the FULL mesh axis (non-participants contribute zero
+        # payloads, but the ring still moves output-sized buffers)
+        ring = 0 if sbq.num_shards == 1 else self.num_shards
         self.combine_bytes += combine_bytes_per_batch(
-            sbq.num_blocks * sbq.q_block, dim, self.num_shards
+            sbq.num_blocks * sbq.q_block, dim, ring
         )
         self.wall_s += wall_s
+
+    def record_flush_home(self, home: int) -> None:
+        """Counts one dispatched flush against its home (POOL = -1)."""
+        self.shard_flushes[home] = self.shard_flushes.get(home, 0) + 1
+
+    def record_compile(self, seconds: float, *, hidden: bool) -> None:
+        """Accounts one flush's host compile; ``hidden`` when at least
+        one earlier flush was still executing on device while it ran."""
+        self.host_compile_s += seconds
+        if hidden:
+            self.hidden_compile_s += seconds
+
+    @property
+    def overlap_fraction(self) -> float:
+        """Fraction of host compile time hidden behind device execution."""
+        return (self.hidden_compile_s / self.host_compile_s
+                if self.host_compile_s > 0 else 0.0)
 
     def record_patch(self, patch: PlanPatch) -> None:
         if patch.is_noop():
             self.rebases += 1
             return
         self.replans += 1
-        self.patched_tiles += patch.num_moved_tiles
+        self.patched_tiles += patch.num_moved_tiles + patch.num_relocated_tiles
         self.promoted_groups += len(patch.promoted)
         self.demoted_groups += len(patch.demoted)
 
@@ -115,6 +180,7 @@ class ShardedServeStats:
         return {
             "num_shards": self.num_shards,
             "q_block": self.q_block,
+            "flush_policy": self.policy,
             "batches": self.batches,
             "queries": self.queries,
             "blocks": self.blocks,
@@ -123,6 +189,13 @@ class ShardedServeStats:
             "max_shard_width": self.max_shard_width,
             "combine_bytes": self.combine_bytes,
             "wall_s": self.wall_s,
+            "shard_flushes": {str(k): v for k, v in sorted(self.shard_flushes.items())},
+            "barrier_flushes": self.barrier_flushes,
+            "deadline_flushes": self.deadline_flushes,
+            "host_compile_s": self.host_compile_s,
+            "hidden_compile_s": self.hidden_compile_s,
+            "overlap_fraction": self.overlap_fraction,
+            "in_flight_peak": self.in_flight_peak,
             "replans": self.replans,
             "rebases": self.rebases,
             "patched_tiles": self.patched_tiles,
@@ -156,6 +229,16 @@ class ShardedEmbeddingServer:
       interpret: force Pallas interpret mode (``None`` = auto off-TPU).
       replan: optional :class:`~repro.serve.drift.ReplanConfig` enabling
         drift-triggered incremental replanning (DESIGN.md §6).
+      flush_policy: ``"global"`` (the synchronous PR-2 path, default) or
+        an async policy — ``"per-shard"`` / ``"deadline"`` kind strings
+        or a full :class:`~repro.serve.scheduler.FlushPolicy`.  Async
+        policies flush shards independently as their block unions fill
+        and pipeline host compile against device execution; results are
+        collected with :meth:`drain` (or :meth:`flush`, which is a
+        barrier in async mode).  DESIGN.md §7.
+      union_budget / flush_deadline / max_in_flight: async policy knobs
+        (see :class:`~repro.serve.scheduler.FlushPolicy`); ignored under
+        ``"global"``.
     """
 
     def __init__(
@@ -175,6 +258,10 @@ class ShardedEmbeddingServer:
         dynamic_switch: bool = True,
         interpret: bool | None = None,
         replan: ReplanConfig | None = None,
+        flush_policy: str | FlushPolicy = "global",
+        union_budget: int | None = None,
+        flush_deadline: int | None = None,
+        max_in_flight: int = 2,
     ):
         if set(tables) != set(histories):
             raise ValueError("tables and histories must cover the same names")
@@ -257,9 +344,38 @@ class ShardedEmbeddingServer:
             else None
         )
         self._staged: Optional[PlanPatch] = None
-        self.stats = ShardedServeStats(num_shards=num_shards, q_block=q_block)
+        self._demote_streak = 0
+        knobs_set = (union_budget is not None or flush_deadline is not None
+                     or max_in_flight != 2)
+        if isinstance(flush_policy, str):
+            if knobs_set:
+                flush_policy = FlushPolicy(
+                    kind=flush_policy, union_budget=union_budget,
+                    deadline=flush_deadline, max_in_flight=max_in_flight,
+                )
+        elif knobs_set:
+            raise ValueError(
+                "pass the flush knobs inside the FlushPolicy instance OR "
+                "as keyword args with a policy-kind string, not both"
+            )
+        self.policy = FlushPolicy.parse(flush_policy, batch_size=batch_size)
+        self.stats = ShardedServeStats(
+            num_shards=num_shards, q_block=q_block, policy=self.policy.kind
+        )
         self._buffer: Dict[str, List[Sequence[int]]] = {n: [] for n in self.names}
         self._buffered = 0
+        # ---- async flush engine state (DESIGN.md §7); inert under
+        # the synchronous "global" policy ----
+        self.scheduler: Optional[FlushScheduler] = (
+            FlushScheduler(self.plan, self.layouts, self.names,
+                           q_block, self.policy)
+            if self.policy.is_async else None
+        )
+        self._in_flight: collections.deque = collections.deque()
+        self._completed: Dict[str, List[Tuple[np.ndarray, np.ndarray]]] = {
+            n: [] for n in self.names
+        }
+        self._seq: Dict[str, int] = {n: 0 for n in self.names}
 
     # ------------------------------------------------------------ serving --
 
@@ -294,26 +410,23 @@ class ShardedEmbeddingServer:
         served = [n for n in self.names if queries_by_table.get(n)]
         if not served:
             return {}
-        self._apply_staged_patch()
-        cqs = []
-        for name in served:
-            i = self.names.index(name)
-            seg = self.plan.tables[i]
-            cq = compile_queries(
-                self.layouts[i], queries_by_table[name],
-                replica_block=self.q_block,
-            )
-            cqs.append(offset_compiled_queries(cq, seg.tile_offset))
-        fused_cq, spans = concat_compiled_queries(cqs, self.q_block)
-        # one host materialization serves both the per-shard block
-        # compiler and the drift observation — without it, each would
-        # pull the batch back from the device separately
-        host_cq = CompiledQueries(
-            tile_ids=np.asarray(fused_cq.tile_ids),
-            bitmaps=np.asarray(fused_cq.bitmaps),
-            max_tiles=fused_cq.max_tiles,
+        # a synchronous serve is a barrier: async-pending queries flush
+        # under the plan they were routed against and the pipeline
+        # drains (the barrier applies any staged patch), so a patch can
+        # never land mid-pipeline or orphan stale routing (DESIGN.md
+        # §7.3).  In global mode nothing is ever in flight and the
+        # staged patch applies here.
+        if self.scheduler is not None:
+            self._barrier()
+        else:
+            self._apply_staged_patch()
+        tc = time.perf_counter()
+        host_cq, sbq, spans = self._compile_batch(
+            served, {n: queries_by_table[n] for n in served}
         )
-        sbq = shard_block_queries(host_cq, self.plan, self.q_block)
+        # synchronous compile sits squarely on the serving critical
+        # path — never hidden (the §7 engine's motivating cost)
+        self.stats.record_compile(time.perf_counter() - tc, hidden=False)
         outs = crossbar_reduce_tables(
             self.shard_images, sbq, spans,
             mesh=self.mesh, axis_name=self.axis_name,
@@ -329,6 +442,37 @@ class ShardedEmbeddingServer:
         self.stats.record(sbq, self.dim, time.perf_counter() - t0, n_queries)
         return dict(zip(served, outs))
 
+    def _compile_batch(self, served, queries_of, participants=None):
+        """Fused host compile shared by the sync and async paths.
+
+        Per-table compile (block-granular replica choice) → rebase into
+        the fused tile space → concat (blocks never span tables) → one
+        host materialization serving both the per-shard block compiler
+        and the drift observation (without it, each would pull the
+        batch back from the device separately).
+
+        Returns ``(host_cq, sbq, spans)``.
+        """
+        cqs = []
+        for name in served:
+            i = self.names.index(name)
+            seg = self.plan.tables[i]
+            cq = compile_queries(
+                self.layouts[i], queries_of[name],
+                replica_block=self.q_block,
+            )
+            cqs.append(offset_compiled_queries(cq, seg.tile_offset))
+        fused_cq, spans = concat_compiled_queries(cqs, self.q_block)
+        host_cq = CompiledQueries(
+            tile_ids=np.asarray(fused_cq.tile_ids),
+            bitmaps=np.asarray(fused_cq.bitmaps),
+            max_tiles=fused_cq.max_tiles,
+        )
+        sbq = shard_block_queries(
+            host_cq, self.plan, self.q_block, participants=participants
+        )
+        return host_cq, sbq, spans
+
     # --------------------------------------------------------- replanning --
 
     def _apply_staged_patch(self) -> None:
@@ -341,12 +485,25 @@ class ShardedEmbeddingServer:
         """
         if self._staged is None:
             return
+        assert not self._in_flight, (
+            "plan patch applied mid-pipeline — barrier rule violated"
+        )
         patch, self._staged = self._staged, None
         self.shard_images = patch_shard_images(
             self.shard_images, patch, self._fused
         )
         self.plan = apply_plan_patch(self.plan, patch)
         self.stats.record_patch(patch)
+        # slack age-out bookkeeping (DESIGN.md §6.2): demotion-only
+        # patches extend the streak, any promotion resets it
+        if patch.promoted:
+            self._demote_streak = 0
+        elif patch.demoted:
+            self._demote_streak += 1
+        if self.scheduler is not None:
+            # ownership moved: re-derive row→home routing (pending work
+            # was flushed under the old plan before we got here)
+            self.scheduler.rebuild(self.plan)
 
     def _observe_and_stage(self, fused_cq, n_queries: int) -> None:
         """Feeds the tracker and stages a patch when drift crosses.
@@ -374,10 +531,19 @@ class ShardedEmbeddingServer:
         drifted = rescale_load_to_plan(
             self.tracker.load(), self.plan, self._seg_load_totals
         )
+        # long demotion streaks: age the accumulated slack back out so
+        # the image stack shrinks to the live working set + headroom
+        shrink = (
+            self.replan_cfg.slack_tiles
+            if self.replan_cfg.shrink_streak
+            and self._demote_streak >= self.replan_cfg.shrink_streak
+            else None
+        )
         patch = compute_plan_patch(
             self.plan, drifted,
             eq1_batch=self._eq1_batch,
             capacity=int(self.shard_images.shape[1]),
+            shrink_slack=shrink,
         )
         if patch.is_noop():
             # drift without a class change: reanchor group_load so the
@@ -391,21 +557,34 @@ class ShardedEmbeddingServer:
     # ----------------------------------------------------------- batching --
 
     def submit(self, table: str, query: Sequence[int]) -> Dict[str, jax.Array]:
-        """Buffers one query; auto-flushes at ``batch_size`` buffered.
+        """Buffers one query; flush behavior depends on the policy.
+
+        Under ``"global"``: auto-flushes (synchronously) at
+        ``batch_size`` buffered and returns that flush's results.
+        Under an async policy: the query routes to its home shard, any
+        due homes flush *asynchronously* (dispatch only — no blocking),
+        and the return value is always ``{}``; collect results with
+        :meth:`drain` / :meth:`flush`.
 
         Args:
           table: table name the query reduces over.
           query: ragged row ids (an embedding-bag lookup).
 
         Returns:
-          The flush result (see :meth:`flush`) when this submission
-          tripped the ``batch_size`` threshold, else ``{}``.
+          The flush result (see :meth:`flush`) when a synchronous flush
+          tripped, else ``{}``.
 
         Raises:
           KeyError: ``table`` is not a served table.
         """
         if table not in self._buffer:
             raise KeyError(f"unknown table {table!r}")
+        if self.scheduler is not None:
+            seq = self._seq[table]
+            self._seq[table] = seq + 1
+            self.scheduler.push(table, seq, query)
+            self._maybe_flush()
+            return {}
         self._buffer[table].append(list(query))
         self._buffered += 1
         if self._buffered >= self.batch_size:
@@ -413,23 +592,190 @@ class ShardedEmbeddingServer:
         return {}
 
     def flush(self) -> Dict[str, jax.Array]:
-        """Serves and clears the buffered per-table batches.
+        """Serves and clears all buffered work.
 
-        The buffer is cleared only after a successful serve, so a failed
-        flush (e.g. one malformed query) leaves every buffered request
-        intact for retry after the offender is removed.
+        Under ``"global"`` this serves the buffered per-table batches
+        synchronously; the buffer is cleared only after a successful
+        serve, so a failed flush (e.g. one malformed query) leaves every
+        buffered request intact for retry after the offender is removed.
+        Under an async policy this is a **barrier**: every pending home
+        flushes, the in-flight pipeline drains, a staged plan patch
+        applies, and all results accumulated since the last hand-off are
+        returned (see :meth:`drain`).
 
         Returns:
-          ``{table name: (buffered batch, dim) reduction}`` for every
-          table with buffered queries; ``{}`` when nothing is buffered.
-          Row order within a table is submission order.
+          ``{table name: (batch, dim) reduction}`` per table with
+          results; ``{}`` when nothing is buffered or in flight.  Row
+          order within a table is submission order.
         """
+        if self.scheduler is not None:
+            return self.drain()
         if self._buffered == 0:
             return {}
         batch = {n: q for n, q in self._buffer.items() if q}
         out = self.serve(batch)
         self._buffer = {n: [] for n in self.names}
         self._buffered = 0
+        return out
+
+    # ------------------------------------------------- async flush engine --
+
+    def _maybe_flush(self) -> None:
+        """Dispatches every home the policy says is due.
+
+        If a plan patch is staged, the next trigger forces a **barrier**
+        instead (DESIGN.md §7.3): the pipeline drains under the old
+        plan, the patch applies atomically, and traffic resumes under
+        the new one — a patch never lands between in-flight flushes.
+        """
+        due = self.scheduler.due_homes()
+        if not due:
+            return
+        if self._staged is not None:
+            self._barrier()
+            return
+        for home in due:
+            self._flush_home(home)
+
+    def _flush_home(self, home: int, *, forced: bool = False) -> None:
+        """Compiles and dispatches one home's pending batch (no block).
+
+        A failed compile/dispatch (e.g. one malformed query) requeues
+        the whole batch in submission order — with its deadline clock
+        intact — before re-raising: the async analogue of the sync
+        path's flush-retry contract.  ``forced`` marks barrier flushes,
+        which are not policy-triggered and must not count as deadline
+        firings.
+        """
+        if not forced and self.scheduler.due_reason(home) == "deadline":
+            self.stats.deadline_flushes += 1
+        first_tick = self.scheduler.first_tick(home)
+        entries, participants = self.scheduler.take(home)
+        if not entries:
+            return
+        try:
+            entry = self._compile_and_dispatch(entries, participants)
+        except Exception:
+            self.scheduler.requeue(home, entries, first_tick=first_tick)
+            raise
+        self._in_flight.append(entry)
+        self.stats.record_flush_home(home)
+        # drift bookkeeping is pure host work: it overlaps this flush's
+        # device execution exactly like the next flush's compile does
+        self._observe_and_stage(entry.host_cq, entry.n_queries)
+        while len(self._in_flight) > self.policy.max_in_flight:
+            self._retire_oldest()
+        self.stats.in_flight_peak = max(
+            self.stats.in_flight_peak, len(self._in_flight)
+        )
+
+    def _device_busy(self) -> bool:
+        """Whether any in-flight flush is still executing on device."""
+        for e in self._in_flight:
+            for o in e.outs:
+                try:
+                    if not o.is_ready():
+                        return True
+                except AttributeError:  # array type without is_ready
+                    return True
+        return False
+
+    def _compile_and_dispatch(
+        self,
+        entries: List[tuple],
+        participants: List[int] | None,
+    ) -> _InFlight:
+        """Host-compiles a batch and dispatches its kernel, non-blocking.
+
+        The double-buffered ordering (DESIGN.md §7.2): this host compile
+        runs while any earlier flush still executes on device — the
+        ``record_compile(hidden=...)`` accounting below is exactly that
+        overlap, sampled at compile END so a compile only counts as
+        hidden if device work was genuinely still running when it
+        finished (a conservative lower bound).  ``block_until_ready``
+        happens only at result hand-off (:meth:`_retire_oldest`).
+
+        Mutates no engine state besides stats — a raise anywhere leaves
+        the pipeline exactly as it was (the caller requeues).
+        """
+        t0 = time.perf_counter()
+        by_table: Dict[str, Tuple[List[int], List[list]]] = {}
+        for table, seq, query in entries:
+            seqs, qs = by_table.setdefault(table, ([], []))
+            seqs.append(seq)
+            qs.append(query)
+        served = [n for n in self.names if n in by_table]
+        host_cq, sbq, spans = self._compile_batch(
+            served, {n: by_table[n][1] for n in served},
+            participants=participants,
+        )
+        self.stats.record_compile(
+            time.perf_counter() - t0, hidden=self._device_busy()
+        )
+        outs = crossbar_reduce_tables(
+            self.shard_images, sbq, spans,
+            mesh=self.mesh, axis_name=self.axis_name,
+            combine=self.combine, combine_chunks=self.combine_chunks,
+            dynamic_switch=self.dynamic_switch, interpret=self.interpret,
+        )
+        return _InFlight(
+            outs=outs, sbq=sbq, served=served,
+            seqs={n: np.asarray(by_table[n][0], dtype=np.int64)
+                  for n in served},
+            t0=t0, n_queries=sum(len(by_table[n][1]) for n in served),
+            host_cq=host_cq,
+        )
+
+    def _retire_oldest(self) -> None:
+        """Blocks on the oldest in-flight flush and stashes its rows."""
+        e = self._in_flight.popleft()
+        outs = [jax.block_until_ready(o) for o in e.outs]
+        self.stats.record(
+            e.sbq, self.dim, time.perf_counter() - e.t0, e.n_queries
+        )
+        for name, out in zip(e.served, outs):
+            self._completed[name].append((e.seqs[name], np.asarray(out)))
+
+    def _barrier(self) -> None:
+        """Flush-everything + drain + apply any staged patch atomically.
+
+        Pending queries were routed (and are compiled here) under the
+        plan they were submitted against; only after every dispatched
+        flush retires does the staged patch swap placement arrays and
+        the scheduler re-derive its routing.
+        """
+        for home in self.scheduler.homes_with_pending():
+            self._flush_home(home, forced=True)
+        while self._in_flight:
+            self._retire_oldest()
+        self._apply_staged_patch()
+        self.stats.barrier_flushes += 1
+
+    def drain(self) -> Dict[str, jax.Array]:
+        """Barrier + result hand-off for async policies.
+
+        Flushes every pending home, retires the whole in-flight queue,
+        applies a staged plan patch (the only legal application point
+        besides a triggered barrier), and returns everything served
+        since the previous hand-off, per table in submission order.
+
+        Returns:
+          ``{table: (n_queries_since_last_drain, dim)}`` arrays; ``{}``
+          for tables with no completed work.
+        """
+        if self.scheduler is None:
+            return self.flush()
+        self._barrier()
+        out: Dict[str, jax.Array] = {}
+        for name in self.names:
+            chunks = self._completed[name]
+            if not chunks:
+                continue
+            seqs = np.concatenate([c[0] for c in chunks])
+            rows = np.concatenate([c[1] for c in chunks])
+            out[name] = jnp.asarray(rows[np.argsort(seqs)])
+        self._completed = {n: [] for n in self.names}
+        self._seq = {n: 0 for n in self.names}
         return out
 
     # ------------------------------------------------------------- report --
@@ -456,6 +802,16 @@ class ShardedEmbeddingServer:
             "serve": self.stats.summary(),
             "mode": "shard_map" if self.mesh is not None else "emulated",
         }
+        if self.scheduler is not None:
+            rep["scheduler"] = {
+                "policy": self.policy.kind,
+                "batch_size": self.policy.batch_size,
+                "union_budget": self.policy.union_budget,
+                "deadline": self.policy.deadline,
+                "max_in_flight": self.policy.max_in_flight,
+                "in_flight": len(self._in_flight),
+                **self.scheduler.state(),
+            }
         if self.tracker is not None:
             rep["replan"] = {
                 "threshold": self.replan_cfg.threshold,
@@ -469,5 +825,11 @@ class ShardedEmbeddingServer:
                     self._staged.summary() if self._staged is not None else None
                 ),
                 "image_capacity": int(self.shard_images.shape[1]),
+                # free headroom above the highest allocated slot — what
+                # slack age-out (shrink_streak) reclaims
+                "slack_slots": int(
+                    self.shard_images.shape[1] - self.plan.max_local_tiles
+                ),
+                "demote_streak": self._demote_streak,
             }
         return rep

@@ -249,6 +249,207 @@ def test_noop_patch_rebases_load_only():
     np.testing.assert_array_equal(sp2.group_load, wobble)
 
 
+# --------------------------------------- demotion target: tile pressure --
+
+
+def test_cold_demotion_lands_on_least_tile_loaded_shard():
+    """A demoted group has usually COOLED to ~zero load, where frequency
+    balance says nothing — the owner choice must fall back to per-shard
+    tile pressure (cold-tail memory balance), the fresh planner's rule.
+    Scenario: shard 0 has few hot tiles but high load, shard 1 one hot
+    tile with all the load; the frequency-only rule would dump the cold
+    group on the least-loaded shard regardless of its tile count."""
+    from repro.dist.shard_plan import ShardPlan, TableSegment
+
+    # g0 replicated (1 tile), g1 (2 tiles, load 1)→s0, g2 (1 tile,
+    # load 1)→s0, g3 (1 tile, load 20)→s1: s0 = 3 tiles / load 2,
+    # s1 = 1 tile / load 20.
+    copies = np.array([1, 2, 1, 1], dtype=np.int64)
+    local = np.array([
+        [0, 1, 2, 3, -1],
+        [0, -1, -1, -1, 1],
+    ], dtype=np.int32)
+    sp = ShardPlan(
+        num_shards=2,
+        tables=[TableSegment("t0", 0, 0, 4, 5, 16)],
+        replicated_group=np.array([True, False, False, False]),
+        shard_of_group=np.array([-1, 0, 0, 1], dtype=np.int32),
+        shard_of_tile=np.array([-1, 0, 0, 0, 1], dtype=np.int32),
+        local_tile_of=local,
+        local_num_tiles=np.array([4, 2], dtype=np.int64),
+        group_load=np.array([30.0, 1.0, 1.0, 20.0]),
+        group_copies=copies,
+    )
+    # g0 cools to zero; eq1_batch=2 keeps every other class unchanged
+    dload = np.array([0.0, 1.0, 1.0, 20.0])
+    patch = compute_plan_patch(sp, dload, eq1_batch=2)
+    assert patch.promoted == []
+    # least-load would be shard 0 (2 < 20); least-tile is shard 1 (1 < 3)
+    assert patch.demoted == [(0, 1)], patch.demoted
+    _assert_valid_partition(apply_plan_patch(sp, patch))
+
+
+def test_loaded_demotion_still_balances_by_frequency():
+    """A demoted group that kept real load places on the least-LOADED
+    shard (tile pressure only breaks ties) — same rule as plan_shards."""
+    from repro.dist.shard_plan import ShardPlan, TableSegment
+
+    copies = np.array([1, 2, 1, 1], dtype=np.int64)
+    local = np.array([
+        [0, 1, 2, 3, -1],
+        [0, -1, -1, -1, 1],
+    ], dtype=np.int32)
+    sp = ShardPlan(
+        num_shards=2,
+        tables=[TableSegment("t0", 0, 0, 4, 5, 16)],
+        replicated_group=np.array([True, False, False, False]),
+        shard_of_group=np.array([-1, 0, 0, 1], dtype=np.int32),
+        shard_of_tile=np.array([-1, 0, 0, 0, 1], dtype=np.int32),
+        local_tile_of=local,
+        local_num_tiles=np.array([4, 2], dtype=np.int64),
+        group_load=np.array([30.0, 1.0, 1.0, 20.0]),
+        group_copies=copies,
+    )
+    # g0 keeps real load (5.0) but drops out of the Eq.-1 replicated
+    # set: owner = least-loaded shard 0 (load 2 < 20), tiles be damned
+    dload = np.array([5.0, 1.0, 1.0, 20.0])
+    patch = compute_plan_patch(sp, dload, eq1_batch=2)
+    assert patch.demoted == [(0, 0)], patch.demoted
+
+
+# ----------------------------------------------- slack capacity age-out --
+
+
+def test_shrink_slack_ages_out_free_capacity():
+    """After demotions, shrink_slack compacts the stack down to the
+    busiest shard's resident count + headroom: tiles above the new
+    depth relocate into freed holes, patch_shard_images slices, and
+    serving stays exact through the shrunk stack."""
+    rows, dim, S = 192, 128, 2
+    hist = zipf_queries(rows, 48, 6.0, seed=3)
+    layout, plan, gfreq = _pipeline(rows, hist, dim=dim)
+    table = _int_table(rows, dim, 3)
+    fused = build_fused_image([layout], [table])
+    sp = plan_shards([layout], [plan], S, group_freqs=[gfreq])
+    if not sp.replicated_group.any():
+        return  # vacuous at this seed
+    slack = 8
+    images = jnp.asarray(sp.build_shard_images(fused))
+    pad = jnp.zeros((S, slack) + images.shape[2:], images.dtype)
+    images = jnp.concatenate([images, pad], axis=1)
+    capacity = int(images.shape[1])
+
+    flat = np.full(sp.num_groups, 1.0)  # demotes everything replicated
+    # without shrink: capacity sticks at the high-water mark
+    keep = compute_plan_patch(sp, flat, eq1_batch=EQ1_BATCH, capacity=capacity)
+    assert keep.new_capacity == capacity
+    assert keep.num_relocated_tiles == 0
+    # with shrink: the stack compacts to working set + headroom
+    patch = compute_plan_patch(
+        sp, flat, eq1_batch=EQ1_BATCH, capacity=capacity, shrink_slack=2
+    )
+    sp2 = apply_plan_patch(sp, patch)
+    assert patch.new_capacity < capacity
+    assert patch.new_capacity == int(sp2.local_num_tiles.max()) + 2
+    assert sp2.max_local_tiles <= patch.new_capacity
+    images2 = patch_shard_images(images, patch, fused)
+    assert images2.shape[1] == patch.new_capacity
+    _assert_valid_partition(sp2)
+
+    ev = zipf_queries(rows, 9, 6.0, seed=4)
+    cq = compile_queries(layout, ev, replica_block=4)
+    sbq = shard_block_queries(cq, sp2, 4)
+    out = np.asarray(crossbar_reduce_sharded(
+        images2, sbq.tile_ids, sbq.bitmaps
+    ))[: sbq.batch]
+    oracle = np.asarray(reduce_dense_oracle(jnp.asarray(table), ev))
+    np.testing.assert_array_equal(out, oracle)
+
+
+def test_rebase_with_relocations_is_not_noop():
+    """A class-unchanged drift computed WITH shrink_slack may still
+    relocate resident tiles (compaction).  Such a patch must NOT be
+    treated as a load rebase — applying the plan without the image
+    update would read zeros from the tiles' new slots."""
+    rows, dim, S = 192, 128, 2
+    hist = zipf_queries(rows, 48, 6.0, seed=3)
+    layout, plan, gfreq = _pipeline(rows, hist, dim=dim)
+    table = _int_table(rows, dim, 3)
+    fused = build_fused_image([layout], [table])
+    sp = plan_shards([layout], [plan], S, group_freqs=[gfreq])
+    if not sp.replicated_group.any():
+        return  # vacuous at this seed
+    images = jnp.asarray(sp.build_shard_images(fused))
+    # demote-all first: leaves holes below top-slot residents
+    flat = np.full(sp.num_groups, 1.0)
+    p1 = compute_plan_patch(sp, flat, eq1_batch=EQ1_BATCH,
+                            capacity=int(images.shape[1]))
+    sp = apply_plan_patch(sp, p1)
+    images = patch_shard_images(images, p1, fused)
+    # class-unchanged wobble + shrink: compaction relocates tiles
+    p2 = compute_plan_patch(
+        sp, flat * 1.5, eq1_batch=EQ1_BATCH,
+        capacity=int(images.shape[1]), shrink_slack=0,
+    )
+    assert not p2.promoted and not p2.demoted
+    if not p2.moved:
+        return  # nothing above the compaction target; vacuous
+    assert not p2.is_noop(), "relocation-carrying patch treated as rebase"
+    sp2 = apply_plan_patch(sp, p2)
+    images2 = patch_shard_images(images, p2, fused)
+    _assert_valid_partition(sp2)
+    ev = zipf_queries(rows, 9, 6.0, seed=4)
+    cq = compile_queries(layout, ev, replica_block=4)
+    sbq = shard_block_queries(cq, sp2, 4)
+    out = np.asarray(crossbar_reduce_sharded(
+        images2, sbq.tile_ids, sbq.bitmaps
+    ))[: sbq.batch]
+    oracle = np.asarray(reduce_dense_oracle(jnp.asarray(table), ev))
+    np.testing.assert_array_equal(out, oracle)
+
+
+def test_server_shrink_streak_reclaims_image_capacity():
+    """The serving driver's demotion-streak trigger: once the streak
+    reaches shrink_streak, the next demotion-only patch also compacts
+    the image stack back to working set + slack, and slack_slots
+    reports the residual headroom."""
+    from repro.serve import ShardedEmbeddingServer
+
+    # 320 rows / 20 groups: uniform traffic gives every group too small
+    # a share for Eq. 1 to promote (log f/log f_total · log B < 1), so
+    # the drift patch is demotion-only and the streak machinery engages
+    rows, dim = 320, 128
+    tables = {"a": _int_table(rows, dim, 21)}
+    histories = {"a": zipf_queries(rows, 64, 5.0, seed=22)}
+    server = ShardedEmbeddingServer(
+        tables, histories, num_shards=2, q_block=4, group_size=16,
+        batch_size=8,
+        replan=ReplanConfig(threshold=0.2, half_life=2.0, min_queries=8,
+                            slack_tiles=4, shrink_streak=1),
+    )
+    if not server.plan.replicated_group.any():
+        return  # nothing to demote; vacuous
+    cap_before = int(server.shard_images.shape[1])
+    server._demote_streak = 1  # as if a demotion-only patch already landed
+    rng = np.random.default_rng(99)
+    stream = [rng.choice(rows, size=24, replace=False).tolist()
+              for _ in range(48)]
+    results = []
+    for chunk in range(0, len(stream), 8):
+        out = server.serve({"a": stream[chunk : chunk + 8]})
+        results.append(np.asarray(out["a"]))
+    assert server.stats.replans >= 1, server.stats
+    assert server.stats.promoted_groups == 0, server.stats
+    cap_after = int(server.shard_images.shape[1])
+    assert cap_after < cap_before, (cap_before, cap_after)
+    rep = server.report()
+    assert rep["replan"]["slack_slots"] <= server.replan_cfg.slack_tiles
+    # serving through the shrunk stack stays exact
+    got = np.concatenate(results)
+    want = np.asarray(reduce_dense_oracle(jnp.asarray(tables["a"]), stream))
+    np.testing.assert_array_equal(got, want)
+
+
 # ------------------------------------------------------ drift tracker --
 
 

@@ -1,0 +1,531 @@
+"""Shard-aware async serving (DESIGN.md §7): independent per-shard
+flushes with double-buffered host-compile / device-execute pipelining
+must serve BIT-IDENTICAL outputs to the synchronous global path (and the
+dense oracle), and a PlanPatch staged during in-flight flushes must
+apply atomically at the next barrier — never mid-pipeline.
+
+Bit-identity is pinned on integer-valued float tables (every partial sum
+exact in f32), so what the tests reject is a dropped, duplicated or
+mis-routed query after the engine reorders flushes — the failure modes
+of broken routing/ownership.  The patch-barrier invariants come from
+DESIGN.md §7.3: pending work flushes under the plan it was submitted
+against, the pipeline drains, and only then do placement arrays swap.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    BlockUnionTracker,
+    build_cooccurrence,
+    build_layout,
+    compile_queries,
+    correlation_aware_grouping,
+    plan_replication,
+    shard_block_queries,
+)
+from repro.core.reduction import reduce_dense_oracle
+from repro.data import zipf_queries
+from repro.dist import build_fused_image, plan_shards
+from repro.kernels import crossbar_reduce_sharded
+from repro.serve import FlushPolicy, ShardedEmbeddingServer
+from repro.serve.drift import ReplanConfig
+
+EQ1_BATCH = 64
+
+
+def _int_table(rows, dim, seed):
+    """Integer-valued f32 table: partial sums are exact in float32."""
+    return np.random.default_rng(seed).integers(
+        -8, 9, size=(rows, dim)
+    ).astype(np.float32)
+
+
+def _pipeline(rows, hist, *, group_size=16, dim=128):
+    g = build_cooccurrence(hist, rows)
+    grouping = correlation_aware_grouping(g, group_size)
+    plan = plan_replication(grouping, g.freq, EQ1_BATCH)
+    layout = build_layout(grouping, plan, dim)
+    return layout, plan, grouping.group_freq(g.freq)
+
+
+# ------------------------------------------------ subset block compile --
+
+
+def test_subset_compile_owns_each_activation_once():
+    """participants= restricts the stack to the subset; every activation
+    lands on exactly one participating shard, replicated-tile ownership
+    round-robins over the participants, and summing the subset kernels
+    over a partition of the batch reproduces the oracle exactly."""
+    rows, dim, S = 192, 128, 2
+    hist = zipf_queries(rows, 48, 6.0, seed=0)
+    layout, plan, gfreq = _pipeline(rows, hist, dim=dim)
+    table = _int_table(rows, dim, 0)
+    fused = build_fused_image([layout], [table])
+    sp = plan_shards([layout], [plan], S, group_freqs=[gfreq])
+    images = jnp.asarray(sp.build_shard_images(fused))
+    ev = zipf_queries(rows, 12, 6.0, seed=1)
+
+    # route queries by owner set (the scheduler's rule)
+    owner_of_row = sp.shard_of_group[layout.group_of]
+    by_home = {0: [], 1: [], None: []}
+    for q in ev:
+        owners = {int(o) for o in
+                  np.unique(owner_of_row[np.unique(np.asarray(q, np.int64))])
+                  if o >= 0}
+        if len(owners) <= 1:
+            by_home[owners.pop() if owners else 0].append(q)
+        else:
+            by_home[None].append(q)
+
+    outs, queries = [], []
+    for home in (0, 1):
+        if not by_home[home]:
+            continue
+        cq = compile_queries(layout, by_home[home], replica_block=4)
+        sbq = shard_block_queries(cq, sp, 4, participants=[home])
+        assert sbq.tile_ids.shape[0] == 1
+        assert sbq.shard_ids.tolist() == [home]
+        # every bitmap row lives in the single participant's stack slot
+        out = np.asarray(crossbar_reduce_sharded(
+            images, sbq.tile_ids, sbq.bitmaps, shard_ids=sbq.shards
+        ))[: sbq.batch]
+        outs.append(out)
+        queries.extend(by_home[home])
+    if by_home[None]:
+        cq = compile_queries(layout, by_home[None], replica_block=4)
+        sbq = shard_block_queries(cq, sp, 4)
+        outs.append(np.asarray(crossbar_reduce_sharded(
+            images, sbq.tile_ids, sbq.bitmaps
+        ))[: sbq.batch])
+        queries.extend(by_home[None])
+    got = np.concatenate(outs)
+    want = np.asarray(reduce_dense_oracle(jnp.asarray(table), queries))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_subset_compile_rejects_foreign_owners():
+    """A query whose sharded-once groups live outside the participants
+    must fail the compile loudly, not silently drop activations."""
+    rows = 192
+    hist = zipf_queries(rows, 48, 6.0, seed=2)
+    layout, plan, gfreq = _pipeline(rows, hist)
+    sp = plan_shards([layout], [plan], 2, group_freqs=[gfreq])
+    owner_of_row = sp.shard_of_group[layout.group_of]
+    ev = zipf_queries(rows, 24, 6.0, seed=3)
+    multi = [q for q in ev if len({
+        int(o) for o in np.unique(owner_of_row[np.unique(np.asarray(q, np.int64))])
+        if o >= 0
+    }) > 1]
+    if not multi:
+        return  # vacuous at this seed
+    cq = compile_queries(layout, multi[:1], replica_block=4)
+    with pytest.raises(ValueError, match="non-participating"):
+        shard_block_queries(cq, sp, 4, participants=[0])
+
+
+def test_subset_dispatch_matches_full_under_shard_ids():
+    """crossbar_reduce_sharded with shard_ids= must equal the same
+    batch compiled/dispatched through the full-stack path."""
+    rows, dim, S = 192, 128, 4
+    hist = zipf_queries(rows, 48, 6.0, seed=4)
+    layout, plan, gfreq = _pipeline(rows, hist, dim=dim)
+    table = _int_table(rows, dim, 4)
+    fused = build_fused_image([layout], [table])
+    sp = plan_shards([layout], [plan], S, group_freqs=[gfreq])
+    images = jnp.asarray(sp.build_shard_images(fused))
+    ev = zipf_queries(rows, 9, 6.0, seed=5)
+    cq = compile_queries(layout, ev, replica_block=4)
+    full = np.asarray(crossbar_reduce_sharded(
+        images, *(lambda s: (s.tile_ids, s.bitmaps))(
+            shard_block_queries(cq, sp, 4))
+    ))[: len(ev)]
+    sub = shard_block_queries(cq, sp, 4, participants=list(range(S)))
+    got = np.asarray(crossbar_reduce_sharded(
+        images, sub.tile_ids, sub.bitmaps, shard_ids=sub.shards
+    ))[: len(ev)]
+    np.testing.assert_array_equal(got, full)
+
+
+# -------------------------------------------------- union-fill tracker --
+
+
+def test_union_tracker_matches_compiled_grid():
+    """The incremental fill accounting must agree with what
+    shard_block_queries actually compiles for a single-shard stream."""
+    rows = 192
+    hist = zipf_queries(rows, 48, 6.0, seed=6)
+    layout, plan, gfreq = _pipeline(rows, hist)
+    sp = plan_shards([layout], [plan], 1, group_freqs=[gfreq])
+    ev = zipf_queries(rows, 13, 6.0, seed=7)
+    tr = BlockUnionTracker(4)
+    for q in ev:
+        rows_u = np.unique(np.asarray(q, np.int64))
+        tr.add(np.unique(layout.group_of[rows_u]).tolist())
+    cq = compile_queries(layout, ev, replica_block=4)
+    sbq = shard_block_queries(cq, sp, 4, participants=[0])
+    assert tr.pending == len(ev)
+    assert tr.grid_cells() == sbq.grid_cells_per_shard()
+    tr.reset()
+    assert tr.fill == 0 and tr.grid_cells() == 0
+
+
+def test_flush_policy_validation():
+    with pytest.raises(ValueError, match="unknown flush policy"):
+        FlushPolicy(kind="sometimes")
+    with pytest.raises(ValueError, match="max_in_flight"):
+        FlushPolicy(kind="per-shard", max_in_flight=0)
+    p = FlushPolicy.parse("deadline", batch_size=32)
+    assert p.batch_size == 32 and p.deadline == 128 and p.is_async
+    assert not FlushPolicy.parse("global", batch_size=8).is_async
+
+
+# -------------------------------------------- async ≡ sync bit-identity --
+
+
+@pytest.mark.parametrize("num_shards", [1, 2, 4])
+@pytest.mark.parametrize("policy", ["per-shard", "deadline"])
+def test_async_serving_bit_identical_to_sync(num_shards, policy):
+    rows, dim = 160, 128
+    rng = np.random.default_rng(10)
+    tables = {"a": _int_table(rows, dim, 11), "b": _int_table(rows, dim, 12)}
+    histories = {"a": zipf_queries(rows, 48, 5.0, seed=13),
+                 "b": zipf_queries(rows, 48, 5.0, seed=14)}
+    streams = {"a": zipf_queries(rows, 30, 5.0, seed=15),
+               "b": zipf_queries(rows, 17, 5.0, seed=16)}
+    # skewed interleave: a arrives ~2x as often as b
+    replay, ia, ib = [], 0, 0
+    for i in range(len(streams["a"]) + len(streams["b"])):
+        if (i % 3 < 2 and ia < len(streams["a"])) or ib >= len(streams["b"]):
+            replay.append(("a", streams["a"][ia])); ia += 1
+        else:
+            replay.append(("b", streams["b"][ib])); ib += 1
+
+    def run(policy, **kw):
+        srv = ShardedEmbeddingServer(
+            tables, histories, num_shards=num_shards, q_block=4,
+            group_size=16, batch_size=8, flush_policy=policy, **kw,
+        )
+        outs = {n: [] for n in tables}
+        for name, q in replay:
+            for n, o in srv.submit(name, q).items():
+                outs[n].append(np.asarray(o))
+        for n, o in srv.flush().items():
+            outs[n].append(np.asarray(o))
+        return srv, {n: np.concatenate(v) for n, v in outs.items() if v}
+
+    srv_g, outs_g = run("global")
+    srv_a, outs_a = run(policy, max_in_flight=2, flush_deadline=20)
+    for n in tables:
+        np.testing.assert_array_equal(outs_a[n], outs_g[n])
+        want = np.asarray(reduce_dense_oracle(
+            jnp.asarray(tables[n]), streams[n]))
+        np.testing.assert_array_equal(outs_a[n], want)
+    st = srv_a.stats.summary()
+    assert st["flush_policy"] == policy
+    assert st["batches"] >= 1
+    assert st["in_flight_peak"] >= 1
+    if policy == "deadline" and num_shards > 1:
+        # the skewed slow table must never wait unboundedly
+        assert st["batches"] >= srv_g.stats.summary()["batches"]
+
+
+def test_async_drain_orders_rows_by_submission():
+    """drain() must return rows in per-table submission order even when
+    homes flush out of order."""
+    rows, dim = 160, 128
+    tables = {"a": _int_table(rows, dim, 20)}
+    histories = {"a": zipf_queries(rows, 48, 5.0, seed=21)}
+    srv = ShardedEmbeddingServer(
+        tables, histories, num_shards=2, q_block=4, group_size=16,
+        batch_size=4, flush_policy="per-shard",
+    )
+    stream = zipf_queries(rows, 23, 5.0, seed=22)
+    for q in stream:
+        srv.submit("a", q)
+    out = srv.drain()
+    want = np.asarray(reduce_dense_oracle(jnp.asarray(tables["a"]), stream))
+    np.testing.assert_array_equal(np.asarray(out["a"]), want)
+    # second drain with no traffic returns nothing
+    assert srv.drain() == {}
+
+
+def test_failed_async_flush_requeues_batch():
+    """A failed flush must not drop its batch: a malformed query is
+    rejected at routing time (nothing enqueued), and a dispatch-time
+    failure requeues the whole batch for retry — the async analogue of
+    the sync flush's leave-buffered-on-failure contract."""
+    rows, dim = 160, 128
+    tables = {"a": _int_table(rows, dim, 40)}
+    histories = {"a": zipf_queries(rows, 48, 5.0, seed=41)}
+    srv = ShardedEmbeddingServer(
+        tables, histories, num_shards=1, q_block=4, group_size=16,
+        batch_size=8, flush_policy="per-shard",
+    )
+    good = zipf_queries(rows, 7, 5.0, seed=42)
+    for q in good:
+        srv.submit("a", q)
+    # malformed query: rejected at the door, buffered work untouched
+    with pytest.raises(IndexError):
+        srv.submit("a", [rows + 5])
+    assert srv.scheduler.pending_total() == 7
+    # transient dispatch failure at the flush trigger: batch requeues
+    calls = {"n": 0}
+    orig = srv._compile_and_dispatch
+
+    def flaky(entries, participants):
+        if calls["n"] == 0:
+            calls["n"] += 1
+            raise RuntimeError("transient device error")
+        return orig(entries, participants)
+
+    srv._compile_and_dispatch = flaky
+    last = zipf_queries(rows, 1, 5.0, seed=43)[0]
+    with pytest.raises(RuntimeError):
+        srv.submit("a", last)  # trips batch_size → flush → fails
+    assert srv.scheduler.pending_total() == 8, "failed flush dropped queries"
+    # retry (drain) succeeds and rows stay in submission order
+    out = srv.drain()
+    stream = list(good) + [last]
+    want = np.asarray(reduce_dense_oracle(jnp.asarray(tables["a"]), stream))
+    np.testing.assert_array_equal(np.asarray(out["a"]), want)
+
+
+def test_route_is_a_peek():
+    """route() must not consume round-robin state: inspecting a query's
+    home twice returns the same answer, and only push() advances."""
+    rows, dim = 160, 128
+    tables = {"a": _int_table(rows, dim, 45)}
+    histories = {"a": zipf_queries(rows, 48, 5.0, seed=46)}
+    srv = ShardedEmbeddingServer(
+        tables, histories, num_shards=2, q_block=4, group_size=16,
+        batch_size=64, batch_size_for_eq1=512, flush_policy="per-shard",
+    )
+    sched = srv.scheduler
+    owner = sched._owner_of_row["a"]
+    repl_rows = np.nonzero(owner < 0)[0]
+    if repl_rows.size == 0:
+        return  # no replicated groups at this seed; vacuous
+    q = [int(repl_rows[0])]
+    h1, _ = sched.route("a", q)
+    h2, _ = sched.route("a", q)
+    assert h1 == h2, "route() consumed round-robin state"
+    assert sched.push("a", 0, q) == h1
+    # after the push the round robin advanced: next replicated-only
+    # query routes to the other shard
+    h3, _ = sched.route("a", q)
+    assert h3 == (h1 + 1) % 2
+
+
+# ------------------------------------- PlanPatch × async-flush barrier --
+
+
+def _drifting_async_server(rows=128, dim=128, **kw):
+    tables = {"a": _int_table(rows, dim, 31)}
+    histories = {"a": zipf_queries(rows, 48, 5.0, seed=32)}
+    srv = ShardedEmbeddingServer(
+        tables, histories, num_shards=2, q_block=4, group_size=16,
+        batch_size=8, flush_policy="per-shard",
+        replan=ReplanConfig(threshold=0.2, half_life=1.0, min_queries=8,
+                            slack_tiles=4),
+        **kw,
+    )
+    return srv, tables
+
+
+@pytest.mark.parametrize("num_shards", [1, 2, 4])
+def test_patch_staged_mid_pipeline_applies_at_barrier_only(num_shards):
+    """A patch staged while flushes are in flight must wait for the
+    barrier: placement arrays never swap with work in the pipeline, and
+    the drained outputs stay exact across the plan transition."""
+    rows, dim = 128, 128
+    tables = {"a": _int_table(rows, dim, 31)}
+    histories = {"a": zipf_queries(rows, 48, 5.0, seed=32)}
+    srv = ShardedEmbeddingServer(
+        tables, histories, num_shards=num_shards, q_block=4, group_size=16,
+        # eq1_batch large enough that Eq. 1 replicates groups even at 4
+        # shards — otherwise every drift event is a rebase and nothing
+        # ever stages
+        batch_size=8, batch_size_for_eq1=512,
+        flush_policy="per-shard", max_in_flight=4,
+        replan=ReplanConfig(threshold=0.15, half_life=1.0, min_queries=8,
+                            slack_tiles=8),
+    )
+    applied_with_in_flight = []
+    orig_apply = srv._apply_staged_patch
+
+    def spy_apply():
+        if srv._staged is not None:
+            applied_with_in_flight.append(len(srv._in_flight))
+        orig_apply()
+
+    srv._apply_staged_patch = spy_apply
+
+    stream = zipf_queries(rows, 48, 5.0, seed=33)
+    perm = np.random.default_rng(34).permutation(rows)
+    stream = stream[:16] + [perm[np.asarray(q, np.int64)] for q in stream[16:]]
+    saw_staged_mid_pipeline = False
+    for q in stream:
+        srv.submit("a", q)
+        if srv._staged is not None and srv._in_flight:
+            saw_staged_mid_pipeline = True
+    out = srv.drain()
+    assert saw_staged_mid_pipeline, "drift never staged while in flight"
+    assert applied_with_in_flight, "no patch was ever applied"
+    assert all(n == 0 for n in applied_with_in_flight), (
+        "patch applied with flushes in flight"
+    )
+    assert srv.stats.replans + srv.stats.rebases >= 1
+    assert srv.stats.barrier_flushes >= 1
+    want = np.asarray(reduce_dense_oracle(jnp.asarray(tables["a"]), stream))
+    np.testing.assert_array_equal(np.asarray(out["a"]), want)
+
+
+def test_sync_serve_barriers_pending_async_queries():
+    """A synchronous serve() call on an async server is a barrier: the
+    pending (not yet flushed) queries must flush under the plan they
+    were routed against BEFORE a staged patch applies — stale routing
+    would compile them onto shards that no longer own their groups."""
+    rows, dim = 128, 128
+    tables = {"a": _int_table(rows, dim, 31)}
+    histories = {"a": zipf_queries(rows, 48, 5.0, seed=32)}
+    srv = ShardedEmbeddingServer(
+        tables, histories, num_shards=2, q_block=4, group_size=16,
+        batch_size=8, batch_size_for_eq1=512,
+        flush_policy="per-shard", max_in_flight=4,
+        replan=ReplanConfig(threshold=0.15, half_life=1.0, min_queries=8,
+                            slack_tiles=8),
+    )
+    stream = zipf_queries(rows, 44, 5.0, seed=33)
+    perm = np.random.default_rng(34).permutation(rows)
+    stream = stream[:16] + [perm[np.asarray(q, np.int64)] for q in stream[16:]]
+    probe = zipf_queries(rows, 5, 5.0, seed=36)
+    served = []
+    for i, q in enumerate(stream):
+        srv.submit("a", q)
+        if i == len(stream) - 3:
+            # mid-replay sync serve: pending queries + (likely) a
+            # staged patch are both outstanding right now
+            served.append(("probe", np.asarray(srv.serve({"a": probe})["a"])))
+    out = srv.drain()
+    np.testing.assert_array_equal(
+        served[0][1],
+        np.asarray(reduce_dense_oracle(jnp.asarray(tables["a"]), probe)),
+    )
+    want = np.asarray(reduce_dense_oracle(jnp.asarray(tables["a"]), stream))
+    np.testing.assert_array_equal(np.asarray(out["a"]), want)
+    assert srv.stats.replans >= 1  # the patch really applied en route
+
+
+def test_patched_async_server_matches_fresh_rebuild():
+    """After the async replay's patches, the live plan must serve a
+    probe bit-identically to a from-scratch plan_shards rebuild on the
+    plan's (drifted) load snapshot — the §6 invariant holding through
+    the §7 engine."""
+    rows, dim, S = 128, 128, 2
+    hist = zipf_queries(rows, 48, 5.0, seed=32)
+    layout, plan, gfreq = _pipeline(rows, hist, dim=dim)
+    tables = {"a": _int_table(rows, dim, 31)}
+    srv = ShardedEmbeddingServer(
+        tables, {"a": hist}, num_shards=S, q_block=4, group_size=16,
+        batch_size=8, flush_policy="per-shard",
+        replan=ReplanConfig(threshold=0.2, half_life=1.0, min_queries=8,
+                            slack_tiles=4),
+    )
+    stream = zipf_queries(rows, 48, 5.0, seed=33)
+    perm = np.random.default_rng(34).permutation(rows)
+    stream = stream[:16] + [perm[np.asarray(q, np.int64)] for q in stream[16:]]
+    for q in stream:
+        srv.submit("a", q)
+    srv.drain()
+    if srv.stats.replans == 0:
+        return  # no class change at this seed; vacuous
+    # the patched plan's group_load IS the drifted snapshot Eq. 1 saw
+    fresh = plan_shards(
+        [layout], [plan], S,
+        group_freqs=[srv.plan.group_load], eq1_batch=srv._eq1_batch,
+    )
+    np.testing.assert_array_equal(
+        srv.plan.replicated_group, fresh.replicated_group
+    )
+    probe = zipf_queries(rows, 11, 5.0, seed=35)
+    out_srv = srv.serve({"a": probe})["a"]
+    fused = build_fused_image([layout], [tables["a"]])
+    images_f = jnp.asarray(fresh.build_shard_images(fused))
+    cq = compile_queries(layout, probe, replica_block=4)
+    sbq = shard_block_queries(cq, fresh, 4)
+    out_f = np.asarray(crossbar_reduce_sharded(
+        images_f, sbq.tile_ids, sbq.bitmaps
+    ))[: sbq.batch]
+    np.testing.assert_array_equal(np.asarray(out_srv), out_f)
+
+
+def test_shard_map_async_serving_subprocess():
+    """The REAL shard_map path must run the async engine — subset
+    flushes scattered into the full device stack — bit-identically to
+    the global policy.  Device forcing must precede jax init →
+    subprocess with 2 host devices."""
+    import os
+    import subprocess
+    import sys
+
+    script = r"""
+import numpy as np
+import jax, jax.numpy as jnp
+assert len(jax.devices()) >= 2, jax.devices()
+import sys
+sys.path.insert(0, {src!r})
+from repro.data import zipf_queries
+from repro.serve import ShardedEmbeddingServer
+from repro.serve.drift import ReplanConfig
+from repro.core.reduction import reduce_dense_oracle
+
+rows, dim, S = 96, 128, 2
+tables = {{"a": np.random.default_rng(3).integers(
+    -8, 9, size=(rows, dim)).astype(np.float32)}}
+histories = {{"a": zipf_queries(rows, 32, 5.0, seed=1)}}
+stream = zipf_queries(rows, 30, 5.0, seed=2)
+perm = np.random.default_rng(4).permutation(rows)
+stream = stream[:10] + [perm[np.asarray(q, np.int64)] for q in stream[10:]]
+mesh = jax.make_mesh((1, S), ("data", "model"))
+
+def run(policy, mesh, **kw):
+    srv = ShardedEmbeddingServer(
+        tables, histories, num_shards=S, mesh=mesh, q_block=4,
+        group_size=16, batch_size=8, flush_policy=policy,
+        replan=ReplanConfig(threshold=0.2, half_life=1.0, min_queries=8,
+                            slack_tiles=4),
+        **kw)
+    outs = []
+    for q in stream:
+        for _, o in srv.submit("a", q).items():
+            outs.append(np.asarray(o))
+    for _, o in srv.flush().items():
+        outs.append(np.asarray(o))
+    return srv, np.concatenate(outs)
+
+srv_sm, out_sm = run("per-shard", mesh)
+srv_emu, out_emu = run("per-shard", None)
+srv_g, out_g = run("global", mesh)
+np.testing.assert_array_equal(out_sm, out_emu)
+np.testing.assert_array_equal(out_sm, out_g)
+oracle = np.asarray(reduce_dense_oracle(jnp.asarray(tables["a"]), stream))
+np.testing.assert_array_equal(out_sm, oracle)
+assert srv_sm.stats.batches >= 2
+print("SCHEDULER_SHARD_MAP_PARITY_OK")
+""".format(src=os.path.join(os.path.dirname(__file__), "..", "src"))
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=2 "
+        + env.get("XLA_FLAGS", "")
+    )
+    env["JAX_PLATFORMS"] = "cpu"
+    proc = subprocess.run(
+        [sys.executable, "-c", script],
+        capture_output=True, text=True, env=env, timeout=480,
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "SCHEDULER_SHARD_MAP_PARITY_OK" in proc.stdout
