@@ -289,7 +289,8 @@ def shard_block_queries(
     §7): the stacked schedules cover only those shards (in the given
     order — :attr:`ShardedBlockedQueries.shards` records the mapping),
     and replicated-everywhere tiles round-robin over the *participants*
-    instead of all shards, so a single shard's batch compiles without
+    instead of all shards, so a home's batch — one shard's, or an
+    owner-set home's exact owner subset — compiles without
     recompiling — or waiting for — the fused global batch.  Every
     sharded-once tile the batch activates must be owned by a
     participant; a query routed to the wrong subset raises.
@@ -374,7 +375,8 @@ class BlockUnionTracker:
     """Incremental block-union fill accounting for one pending stream.
 
     The flush scheduler (DESIGN.md §7) needs to know, as queries
-    accumulate on a shard, how large that shard's kernel grid would be
+    accumulate on a flush home — one shard, or a frozen owner set of
+    shards — how large that home's kernel grid would be
     if it flushed *now* — without compiling anything.  With
     ``replica_block=q_block`` every block resolves each activated group
     to exactly one replica tile, so a block's union width equals the

@@ -128,6 +128,47 @@ def _mesh_fn(mesh, axis_name, chunks, dynamic_switch, interpret, scatter):
 
 
 @functools.lru_cache(maxsize=None)
+def _mesh_subset_fn(mesh, axis_name, chunks, dynamic_switch, interpret,
+                    groups):
+    """jit-cached shard_map reduction combining only a participant
+    subgroup (DESIGN.md §7.1): ``groups`` partitions the mesh axis into
+    EQUAL-SIZED index groups — the participants as one group, the
+    non-participants chunked to the same size (TPU lowering rejects
+    unequal ``axis_index_groups``, so this fn is only dispatched when
+    the participant count divides the mesh) — and the per-chunk
+    ``lax.psum`` rings each subgroup independently: a 2-owner flush on
+    an 8-shard mesh moves combine traffic over 2 shards, while the
+    non-participants (whose schedules are empty) all-reduce zeros
+    among themselves.  psum (not psum_scatter) because a scatter's
+    per-shard slice width would depend on the subgroup size, and the
+    payload is output-sized either way."""
+
+    index_groups = [list(g) for g in groups]
+
+    def local(img, ids, bms):
+        img, ids, bms = img[0], ids[0], bms[0]
+        bounds = _chunk_bounds(ids.shape[0], chunks)
+        outs = []
+        for c0, c1 in bounds:
+            part = crossbar_reduce_pallas(
+                img, ids[c0:c1], bms[c0:c1],
+                dynamic_switch=dynamic_switch, interpret=interpret,
+            ).astype(jnp.float32)
+            outs.append(lax.psum(
+                part, axis_name, axis_index_groups=index_groups
+            ))
+        return jnp.concatenate(outs, axis=0)[None]
+
+    return jax.jit(_shard_map()(
+        local,
+        mesh=mesh,
+        in_specs=(P(axis_name), P(axis_name), P(axis_name)),
+        out_specs=P(axis_name),
+        check_rep=False,
+    ))
+
+
+@functools.lru_cache(maxsize=None)
 def _mesh_single_fn(mesh, axis_name, chunks, dynamic_switch, interpret):
     """jit-cached shard_map reduction with NO combine — the
     single-participant flush path (the participant's stacked output is
@@ -195,13 +236,18 @@ def crossbar_reduce_sharded(
         all-gather; falls back to psum when dim % shards != 0) or "psum".
       combine_chunks: block-axis chunks for combine/DMA overlap.
       shard_ids: when the batch was compiled for a shard *subset*
-        (``participants=`` — the scheduler's independent per-shard
+        (``participants=`` — the scheduler's per-shard and owner-set
         flushes, DESIGN.md §7), the global shard id of each stacked
         schedule.  Emulation runs only the participating shards'
         kernels; under shard_map the subset schedules scatter into a
-        full-``S`` stack of empty (all ``-1``) schedules, so
-        non-participants contribute exact-zero partials and the chunked
-        psum_scatter combine is unchanged.  ``None`` = all shards.
+        full-``S`` stack of empty (all ``-1``) schedules and the
+        combine shrinks with the subset: a single participant skips the
+        collective entirely, a multi-shard subset whose size divides
+        the mesh rings only its participants via grouped psum
+        (``axis_index_groups`` — equal group sizes are a TPU lowering
+        requirement), and any other subset (plus the full stack) runs
+        the full-axis combine with exact-zero payloads from
+        non-participants.  ``None`` = all shards.
 
     Returns:
       ``(nb * q_block, dim)`` summed reduction in block-major query
@@ -258,10 +304,33 @@ def crossbar_reduce_sharded(
     if part.size == 1:
         # single-participant flush: the participant's partial IS the
         # result, so no collective runs at all — a per-shard flush
-        # crosses zero interconnect on the mesh path too.  (Multi-shard
-        # subsets still ring the full axis, zeros from non-participants.)
+        # crosses zero interconnect on the mesh path too.
         fn = _mesh_single_fn(
             mesh, axis_name, combine_chunks, dynamic_switch, interpret
+        )
+        out = fn(images, tile_ids, bitmaps)
+        return out[int(part[0])].astype(images.dtype)
+
+    P = int(part.size)
+    if P < S and S % P == 0:
+        # multi-shard subset (owner-set / pool flush) whose size divides
+        # the mesh: combine only among the participants via grouped psum
+        # — interconnect scales with the owner-set size, not the mesh.
+        # axis_index_groups must partition the axis into EQUAL sizes
+        # (a TPU lowering requirement), so the non-participants are
+        # chunked to the participant count and ring zeros among
+        # themselves.  Subsets that do not divide the mesh fall through
+        # to the full-axis combine below — non-participants contribute
+        # exact-zero partials there, so numerics are identical and only
+        # the ring width differs (the stats account the same rule).
+        others = np.setdiff1d(np.arange(S), part)
+        groups = (tuple(int(s) for s in np.sort(part)),) + tuple(
+            tuple(int(s) for s in others[i : i + P])
+            for i in range(0, others.size, P)
+        )
+        fn = _mesh_subset_fn(
+            mesh, axis_name, combine_chunks, dynamic_switch, interpret,
+            groups,
         )
         out = fn(images, tile_ids, bitmaps)
         return out[int(part[0])].astype(images.dtype)

@@ -14,6 +14,9 @@ Usage::
     PYTHONPATH=src python -m repro.launch.serve_sharded --emulate --drift
     PYTHONPATH=src python -m repro.launch.serve_sharded --emulate \
         --flush-policy deadline --skew 3   # async per-shard pipelining
+    PYTHONPATH=src python -m repro.launch.serve_sharded --shards 4 \
+        --flush-policy owner-set --threaded   # owner-set homes + driver
+                                              # thread (non-blocking submit)
 
 ``--drift`` enables the drifting-workload replay (DESIGN.md §6): after
 ``--drift-at`` of the request stream, row ids are remapped through a
@@ -51,13 +54,28 @@ def parse_args(argv=None):
                     default="psum_scatter")
     ap.add_argument("--combine-chunks", type=int, default=2)
     ap.add_argument("--flush-policy",
-                    choices=["global", "per-shard", "deadline"],
+                    choices=["global", "per-shard", "deadline", "owner-set"],
                     default="global",
                     help="global: synchronous fused flushes (PR-2 path); "
                          "per-shard/deadline: shards flush independently "
                          "as their block unions fill, host compile "
-                         "pipelined against device execution "
+                         "pipelined against device execution; owner-set: "
+                         "multi-owner queries additionally key their home "
+                         "by the frozen owner set, so a 2-owner flush "
+                         "compiles (and combines over) exactly 2 shards "
                          "(DESIGN.md §7)")
+    ap.add_argument("--owner-set-max", type=int, default=None,
+                    help="owner-set policy: sets larger than this pool "
+                         "up instead of getting their own home (None: "
+                         "every multi-owner set is keyed; 2-3 keeps the "
+                         "high-value small-set homes and avoids "
+                         "fragmenting near-mesh traffic)")
+    ap.add_argument("--threaded", action="store_true",
+                    help="run the async engine on a driver thread: "
+                         "submit() only validates + enqueues (bounded "
+                         "hand-off queue) and never blocks on a full "
+                         "in-flight pipeline; submit-side p50/p95/p99 "
+                         "land in the report (DESIGN.md §7.2)")
     ap.add_argument("--union-budget", type=int, default=None,
                     help="per-shard block-union fill that triggers an "
                          "independent flush (None: batch-size/deadline "
@@ -136,7 +154,9 @@ def main(args) -> None:
         flush_policy=args.flush_policy,
         union_budget=args.union_budget,
         flush_deadline=args.flush_deadline,
+        owner_set_max=args.owner_set_max,
         max_in_flight=args.max_in_flight,
+        threaded=args.threaded,
     )
 
     stream = zipf_queries(args.rows, args.requests, args.mean_bag, seed=1234)
@@ -171,6 +191,7 @@ def main(args) -> None:
         flushed += 1
     wall = time.perf_counter() - t0
 
+    server.close()
     report = server.report()
     report["flushes"] = flushed
     report["replay_wall_s"] = wall

@@ -11,15 +11,30 @@ decides *which queries can flush together early*:
     are all replicated-everywhere) is servable by a *single* shard: that
     shard holds every tile the query activates, so its reduction
     completes with no cross-shard combine at all.  Multi-owner queries
-    pool up for a fused flush over exactly their owner union.
+    route by their frozen **owner set**: under ``"owner-set"`` each
+    distinct set is its own home — ``take()`` returns exactly that set
+    as flush participants, so a 2-owner query on an 8-shard mesh
+    compiles (and combines over) a 2-shard subset instead of waiting in
+    a near-mesh-wide pool; under ``"per-shard"``/``"deadline"`` they
+    collapse into the single :data:`POOL` home, flushed over the union
+    of its queries' owners (the PR-4 behavior).
   * **union-fill accounting** — one
     :class:`~repro.core.reduction.BlockUnionTracker` per (home, table)
     maintains the grid a flush-now would run, without compiling
     anything (per table because the fused compile's blocks never span
-    tables; a home's fill is the sum over its tables).  A shard flushes
+    tables; a home's fill is the sum over its tables).  A home flushes
     independently when its union fill crosses ``union_budget``, when its
-    pending count reaches ``batch_size``, or (``deadline`` policy) when
-    its oldest query has waited ``deadline`` submissions.
+    pending count reaches ``batch_size``, or — whenever the policy
+    carries a ``deadline`` — when its oldest query has waited
+    ``deadline`` submissions.
+
+A *home* is therefore either an ``int`` (one shard: single-owner and
+replicated-only queries), the :data:`POOL` sentinel, or a sorted
+``tuple`` of shard ids (an owner-set home).  Owner-set homes are
+created lazily as sets are first seen; the population is bounded by the
+distinct owner sets in the traffic, not ``2^S`` (skewed production
+traffic concentrates on few sets, and the deadline bound keeps any
+cold set from waiting unboundedly).
 
 The scheduler is pure host bookkeeping — it never touches device state.
 Dispatch, the bounded in-flight queue and the double-buffered
@@ -39,10 +54,12 @@ import numpy as np
 
 from repro.core.reduction import BlockUnionTracker
 
-#: pseudo-home for multi-owner queries (flushed over their owner union)
+#: pseudo-home for pooled multi-owner queries, flushed over their owner
+#: union: all of them under ``per-shard`` / ``deadline``, only those
+#: whose owner set exceeds ``owner_set_max`` under ``owner-set``
 POOL = -1
 
-_KINDS = ("global", "per-shard", "deadline")
+_KINDS = ("global", "per-shard", "deadline", "owner-set")
 
 
 @dataclasses.dataclass
@@ -54,58 +71,103 @@ class FlushPolicy:
       kind: ``"global"`` — the PR-2 synchronous path (one fused flush at
         ``batch_size`` buffered, blocking serve); ``"per-shard"`` —
         shards flush independently on their own union-fill /
-        batch-size triggers; ``"deadline"`` — per-shard plus an age
-        bound so a query on a cold shard can never wait unboundedly.
+        batch-size triggers, multi-owner queries pool into one
+        :data:`POOL` home; ``"deadline"`` — per-shard plus a default
+        age bound so a query on a cold shard can never wait
+        unboundedly; ``"owner-set"`` — multi-owner queries route to a
+        home per frozen owner set and flush over exactly that subset
+        (deadline defaults on, since owner-set homes fragment the
+        pending stream and cold sets would otherwise starve).
       batch_size: per-home pending-query trigger (defaults to the
         server's ``batch_size``).
       union_budget: per-home block-union fill trigger (Σ union widths
         the pending stream would DMA); ``None`` disables the fill
         trigger and leaves batch-size/deadline only.
       deadline: max submissions (global ticks) the oldest pending query
-        of a home may wait before a forced flush; only consulted by the
-        ``deadline`` kind (default ``4 × batch_size``).
+        of a home may wait before a forced flush; consulted whenever
+        set, on any async kind.  ``parse`` defaults it to
+        ``4 × batch_size`` for the ``deadline`` and ``owner-set`` kinds
+        and leaves it ``None`` (trigger off) for ``per-shard``.
+      owner_set_max: (``owner-set`` kind) owner sets LARGER than this
+        collapse into the :data:`POOL` home instead of getting their
+        own.  The subset-flush win scales with how far an owner set
+        falls short of the mesh, while fragmentation cost grows with
+        the distinct-set population (which peaks at sets of size
+        ``S/2``) — a cap of 2-3 keeps the high-value small-set homes
+        and pools the near-mesh tail.  ``None`` (default) keys every
+        multi-owner set.
       max_in_flight: bound on dispatched-but-unretired flushes; the
         oldest blocks (``block_until_ready``) when the bound is hit —
-        result hand-off is the ONLY blocking point of the async engine.
+        with the inline driver that block happens inside ``submit()``,
+        with the thread driver it happens on the driver thread.
+      threaded: run the engine's dispatch/retire loop on a driver
+        thread (DESIGN.md §7.2): ``submit()`` only validates, stamps a
+        sequence id and enqueues onto a bounded hand-off queue — it
+        never blocks on a full in-flight pipeline.
+      handoff_depth: bound of the thread driver's hand-off queue
+        (defaults to ``8 × batch_size``); the producer blocks only if
+        it outruns the driver by this many undispatched queries.
     """
 
     kind: str = "global"
     batch_size: int | None = None
     union_budget: int | None = None
     deadline: int | None = None
+    owner_set_max: int | None = None
     max_in_flight: int = 2
+    threaded: bool = False
+    handoff_depth: int | None = None
 
     def __post_init__(self):
         if self.kind not in _KINDS:
             raise ValueError(f"unknown flush policy {self.kind!r}; use {_KINDS}")
         if self.max_in_flight < 1:
             raise ValueError("max_in_flight must be >= 1")
+        if self.threaded and self.kind == "global":
+            raise ValueError("the thread driver requires an async kind")
+        if self.owner_set_max is not None and self.owner_set_max < 2:
+            raise ValueError("owner_set_max must be >= 2 (a 1-owner query "
+                             "already routes to its single owner shard)")
 
     @classmethod
     def parse(cls, policy, *, batch_size: int) -> "FlushPolicy":
         """Normalizes a kind string (or a ready policy) against server
         defaults: ``batch_size`` falls back to the server's, ``deadline``
-        to ``4 × batch_size``."""
+        to ``4 × batch_size`` (``deadline`` / ``owner-set`` kinds), the
+        hand-off bound to ``8 × batch_size``."""
         if isinstance(policy, str):
             policy = cls(kind=policy)
         p = dataclasses.replace(policy)
         if p.batch_size is None:
             p.batch_size = batch_size
-        if p.kind == "deadline" and p.deadline is None:
-            p.deadline = 4 * batch_size
+        if p.kind in ("deadline", "owner-set") and p.deadline is None:
+            p.deadline = 4 * p.batch_size
+        if p.handoff_depth is None:
+            p.handoff_depth = 8 * p.batch_size
         return p
 
     @property
     def is_async(self) -> bool:
         return self.kind != "global"
 
+    @property
+    def owner_set_routing(self) -> bool:
+        return self.kind == "owner-set"
+
+
+#: a flush home: one shard (int), the :data:`POOL` sentinel, or a
+#: sorted owner-set tuple (``owner-set`` routing)
+Home = object
+
 
 class FlushScheduler:
     """Routes queries to flush homes and tracks per-home fill state.
 
     One *home* per shard (single-owner and replicated-only queries) plus
-    the :data:`POOL` home for multi-owner queries.  All state is host
-    NumPy/sets; ``route``/``push`` are O(rows in the query).
+    either the :data:`POOL` home (pooled kinds) or one lazily-created
+    home per distinct frozen owner set (``owner-set`` kind) for
+    multi-owner queries.  All state is host NumPy/sets; ``route``/
+    ``push`` are O(rows in the query).
 
     Args:
       plan: the live :class:`~repro.dist.shard_plan.ShardPlan` (only
@@ -127,17 +189,20 @@ class FlushScheduler:
             for name, layout in zip(self.names, layouts)
         }
         self.rebuild(plan)
-        homes = list(range(self.num_shards)) + [POOL]
-        self._pending: Dict[int, List[Tuple[str, int, list]]] = {
+        # POOL exists under every async kind: the pooled kinds route all
+        # multi-owner queries there, owner-set routing only those whose
+        # sets exceed ``owner_set_max`` (never, when the cap is unset)
+        homes: List[Home] = list(range(self.num_shards)) + [POOL]
+        self._pending: Dict[Home, List[Tuple[str, int, list]]] = {
             h: [] for h in homes
         }
         # one tracker per (home, table): the fused compile never lets a
         # block span tables, so per-table block accounting is what the
         # flush would actually run; a home's fill sums over its tables
-        self._trackers: Dict[int, Dict[str, BlockUnionTracker]] = {
+        self._trackers: Dict[Home, Dict[str, BlockUnionTracker]] = {
             h: {} for h in homes
         }
-        self._first_tick: Dict[int, int] = {}
+        self._first_tick: Dict[Home, int] = {}
         self._tick = 0
         self._rr = 0
         self._pool_owners: set = set()
@@ -162,7 +227,7 @@ class FlushScheduler:
             self._fused_group_of_row[seg.name] = gof
             self._owner_of_row[seg.name] = shard_of_group[gof]
 
-    def route(self, table: str, query: Sequence[int]) -> Tuple[int, np.ndarray]:
+    def route(self, table: str, query: Sequence[int]) -> Tuple[Home, np.ndarray]:
         """Home of one query + its distinct fused group ids (a PEEK —
         does not advance the replicated-work round robin; only
         :meth:`push` consumes a round-robin slot).
@@ -170,42 +235,53 @@ class FlushScheduler:
         Owners = owning shards of the query's sharded-once groups:
         none → any shard serves it (round-robin keeps replicated work
         spread, the degenerate form of the block-level round robin);
-        one → that shard; several → the cross-shard :data:`POOL`.
+        one → that shard; several → the sorted owner-set tuple under
+        ``owner-set`` routing, else the cross-shard :data:`POOL`.
         """
         home, groups, _ = self._route(table, query, advance=False)
         return home, groups
 
     def _route(
         self, table: str, query, *, advance: bool
-    ) -> Tuple[int, np.ndarray, np.ndarray]:
+    ) -> Tuple[Home, np.ndarray, np.ndarray]:
         rows = np.unique(np.asarray(query, dtype=np.int64))
         groups = np.unique(self._fused_group_of_row[table][rows])
         owners = np.unique(self._owner_of_row[table][rows])
         owners = owners[owners >= 0]
         if owners.size == 0:
-            home = self._rr
+            home: Home = self._rr
             if advance:
                 self._rr = (self._rr + 1) % self.num_shards
         elif owners.size == 1:
             home = int(owners[0])
+        elif (self.policy.owner_set_routing
+              and (self.policy.owner_set_max is None
+                   or owners.size <= self.policy.owner_set_max)):
+            # np.unique already sorted the owners: the tuple is the
+            # canonical frozen owner set, one home per distinct set.
+            # Sets wider than owner_set_max fall through to the pool —
+            # the subset win shrinks as a set approaches the mesh while
+            # home fragmentation grows, so the tail is not worth keying.
+            home = tuple(int(o) for o in owners)
         else:
             home = POOL
         return home, groups, owners
 
-    def push(self, table: str, seq: int, query: Sequence[int]) -> int:
-        """Routes and enqueues one query; returns its home."""
+    def push(self, table: str, seq: int, query: Sequence[int]) -> Home:
+        """Routes and enqueues one query; returns its home (owner-set
+        homes are created lazily on first sight)."""
         home, groups, owners = self._route(table, query, advance=True)
         if home == POOL:
             self._pool_owners.update(int(o) for o in owners)
-        self._pending[home].append((table, seq, list(query)))
-        self._trackers[home].setdefault(
+        self._pending.setdefault(home, []).append((table, seq, list(query)))
+        self._trackers.setdefault(home, {}).setdefault(
             table, BlockUnionTracker(self.q_block)
         ).add(groups)
         self._first_tick.setdefault(home, self._tick)
         self._tick += 1
         return home
 
-    def first_tick(self, home: int):
+    def first_tick(self, home: Home):
         """Submission tick of the home's oldest pending query (None if
         empty) — captured by the server before a flush so a failed
         dispatch can requeue without resetting the deadline clock."""
@@ -213,7 +289,7 @@ class FlushScheduler:
 
     def requeue(
         self,
-        home: int,
+        home: Home,
         entries: List[Tuple[str, int, list]],
         first_tick: int | None = None,
     ) -> None:
@@ -229,7 +305,7 @@ class FlushScheduler:
         """
         if not entries:
             return
-        self._pending[home] = list(entries) + self._pending[home]
+        self._pending[home] = list(entries) + self._pending.get(home, [])
         self._trackers[home] = {}
         for table, _seq, query in self._pending[home]:
             rows = np.unique(np.asarray(query, dtype=np.int64))
@@ -250,12 +326,13 @@ class FlushScheduler:
 
     # ----------------------------------------------------------- triggers --
 
-    def due_reason(self, home: int) -> str | None:
+    def due_reason(self, home: Home) -> str | None:
         """Why ``home`` should flush now (``None`` = not due).
 
         Returns ``"batch"`` (pending count), ``"union"`` (block-union
         fill crossed the budget) or ``"deadline"`` (oldest pending query
-        aged out), checked in that order.
+        aged out — checked whenever the policy carries a deadline),
+        in that order.
         """
         n = len(self._pending[home])
         if n == 0:
@@ -265,24 +342,24 @@ class FlushScheduler:
         if (self.policy.union_budget is not None
                 and self.fill(home) >= self.policy.union_budget):
             return "union"
-        if (self.policy.kind == "deadline"
+        if (self.policy.deadline is not None
                 and self._tick - self._first_tick[home] >= self.policy.deadline):
             return "deadline"
         return None
 
-    def due(self, home: int) -> bool:
+    def due(self, home: Home) -> bool:
         """Whether ``home`` should flush now under the policy."""
         return self.due_reason(home) is not None
 
-    def due_homes(self) -> List[int]:
+    def due_homes(self) -> List[Home]:
         return [h for h in self._pending if self.due(h)]
 
-    def fill(self, home: int) -> int:
+    def fill(self, home: Home) -> int:
         """Σ block-union widths over the home's pending per-table
         streams — the tile-DMA count a flush-now would run."""
         return sum(tr.fill for tr in self._trackers[home].values())
 
-    def homes_with_pending(self) -> List[int]:
+    def homes_with_pending(self) -> List[Home]:
         return [h for h, q in self._pending.items() if q]
 
     def pending_total(self) -> int:
@@ -290,13 +367,14 @@ class FlushScheduler:
 
     # --------------------------------------------------------------- take --
 
-    def take(self, home: int) -> Tuple[List[Tuple[str, int, list]], List[int] | None]:
+    def take(self, home: Home) -> Tuple[List[Tuple[str, int, list]], List[int] | None]:
         """Pops a home's pending batch and its flush participants.
 
         Returns ``(entries, participants)``: per-shard homes flush with
-        ``participants=[home]`` (no cross-shard combine); the pool
-        flushes over the union of its queries' owner shards —
-        ``None`` (all shards) only when that union covers the mesh.
+        ``participants=[home]`` (no cross-shard combine); an owner-set
+        home flushes with exactly its frozen set; the pool flushes over
+        the union of its queries' owner shards.  ``None`` (the full
+        stack) is returned only when the set covers the mesh.
         """
         entries = self._pending[home]
         self._pending[home] = []
@@ -308,17 +386,30 @@ class FlushScheduler:
             if not owners or len(owners) == self.num_shards:
                 return entries, None
             return entries, owners
+        if isinstance(home, tuple):
+            if len(home) == self.num_shards:
+                return entries, None
+            return entries, list(home)
         return entries, [home]
 
     def state(self) -> Dict[str, object]:
-        """Pending/fill snapshot for :meth:`ShardedEmbeddingServer.report`."""
+        """Pending/fill snapshot for :meth:`ShardedEmbeddingServer.report`.
+
+        Safe to call from a monitoring thread while the thread driver
+        routes traffic: the dict views are materialized with C-level
+        (GIL-atomic) ``list()`` copies before iteration, so a
+        concurrently-created owner-set home can never raise
+        ``dictionary changed size during iteration`` — the snapshot is
+        merely allowed to be one push stale.
+        """
+        pending_items = list(self._pending.items())
+        union_fill = {}
+        for h, q in pending_items:
+            if q:
+                trackers = list(self._trackers.get(h, {}).values())
+                union_fill[str(h)] = sum(tr.fill for tr in trackers)
         return {
-            "pending": {
-                str(h): len(q) for h, q in self._pending.items() if q
-            },
-            "union_fill": {
-                str(h): self.fill(h)
-                for h in self._pending if len(self._pending[h])
-            },
+            "pending": {str(h): len(q) for h, q in pending_items if q},
+            "union_fill": union_fill,
             "tick": self._tick,
         }

@@ -30,22 +30,37 @@ tiles DMA into the image stack
 ``plan_shards`` + ``build_fused_image`` rebuild never reruns.
 
 **Async flush scheduling** (opt-in via ``flush_policy=``, DESIGN.md §7):
-under ``"per-shard"`` / ``"deadline"`` the synchronous loop above
-becomes a pipelined engine.  Queries route to home shards
-(:class:`~repro.serve.scheduler.FlushScheduler`), homes flush
-independently as their block unions fill, single-shard flushes compile
-with ``participants=[s]`` (no cross-shard combine at all), and each
-dispatch is non-blocking: the host compiles flush *n+1* while flush *n*
-executes on device, ``block_until_ready`` runs only at result hand-off
-(bounded in-flight queue / :meth:`ShardedEmbeddingServer.drain`).  A
-staged plan patch then applies only at a pipeline **barrier** — never
-between in-flight flushes.
+under ``"per-shard"`` / ``"deadline"`` / ``"owner-set"`` the synchronous
+loop above becomes a pipelined engine.  Queries route to homes
+(:class:`~repro.serve.scheduler.FlushScheduler`) — one per shard, plus
+(owner-set routing) one per distinct frozen owner set — homes flush
+independently as their block unions fill, subset flushes compile with
+``participants=`` exactly the home's shards (a single-shard flush
+combines nothing; a 2-owner flush rings 2 shards via grouped psum), and
+each dispatch is non-blocking: the host compiles flush *n+1* while
+flush *n* executes on device, ``block_until_ready`` runs only at result
+hand-off (bounded in-flight queue /
+:meth:`ShardedEmbeddingServer.drain`).  A staged plan patch then
+applies only at a pipeline **barrier** — never between in-flight
+flushes.
+
+**Thread driver** (opt-in via ``threaded=``, DESIGN.md §7.2): the
+engine's dispatch/retire loop moves to a dedicated driver thread.
+``submit()`` then only validates the query, stamps its sequence id and
+enqueues onto a bounded hand-off queue — it never blocks on a full
+in-flight pipeline (the ``max_in_flight`` hand-off block happens on the
+driver).  ``drain()``/``flush()``/``serve()`` post a barrier token and
+join the driver at it; plan patches still apply only at such barriers.
+A flush failure on the driver requeues its batch (same retry contract)
+and surfaces at the next ``submit()``/``drain()``.
 """
 
 from __future__ import annotations
 
 import collections
 import dataclasses
+import queue
+import threading
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -93,6 +108,18 @@ class _InFlight:
     host_cq: object = None                 # host-materialized fused batch
 
 
+def _latency_percentiles(samples: Sequence[float]) -> Dict[str, float]:
+    """p50/p95/p99 of a latency sample list (seconds; zeros when empty)."""
+    if not samples:
+        return {"p50": 0.0, "p95": 0.0, "p99": 0.0}
+    a = np.asarray(samples, dtype=np.float64)
+    return {
+        "p50": float(np.percentile(a, 50)),
+        "p95": float(np.percentile(a, 95)),
+        "p99": float(np.percentile(a, 99)),
+    }
+
+
 @dataclasses.dataclass
 class ShardedServeStats:
     """Accumulated per-flush accounting of the sharded datapath.
@@ -102,6 +129,9 @@ class ShardedServeStats:
     clock is what the scheduler bench measures; the pipelining gain
     shows up here as ``hidden_compile_s`` (host compile time that ran
     while a previous flush executed on device) over ``host_compile_s``.
+    Latency samples are kept raw (one float per flush / per submit) so
+    ``summary()`` can report percentiles; at serving-bench scales this
+    is a few KB — a reservoir is not worth the accounting distortion.
     """
 
     num_shards: int
@@ -116,12 +146,15 @@ class ShardedServeStats:
     combine_bytes: int = 0
     wall_s: float = 0.0
     # ---- async flush scheduling (DESIGN.md §7) ----
-    shard_flushes: Dict[int, int] = dataclasses.field(default_factory=dict)
+    shard_flushes: Dict[object, int] = dataclasses.field(default_factory=dict)
+    participant_sizes: Dict[int, int] = dataclasses.field(default_factory=dict)
     barrier_flushes: int = 0               # pipeline drains (patch/explicit)
     deadline_flushes: int = 0              # flushes forced by query age
     host_compile_s: float = 0.0            # Σ per-flush host compile time
     hidden_compile_s: float = 0.0          # … of which overlapped device exec
     in_flight_peak: int = 0                # deepest dispatch queue seen
+    flush_wall: List[float] = dataclasses.field(default_factory=list)
+    submit_wall: List[float] = dataclasses.field(default_factory=list)
     # ---- online replanning (DESIGN.md §6) ----
     replans: int = 0                       # patches applied (moves > 0)
     rebases: int = 0                       # no-op patches (load reanchor only)
@@ -139,20 +172,36 @@ class ShardedServeStats:
         self.max_shard_width = max(
             self.max_shard_width, int(np.max(sbq.shard_widths, initial=0))
         )
-        # combine traffic: a single-participant flush skips the
-        # collective entirely (kernels.sharded takes the participant's
-        # stacked output directly) — zero interconnect; any wider flush
-        # rings the FULL mesh axis (non-participants contribute zero
-        # payloads, but the ring still moves output-sized buffers)
-        ring = 0 if sbq.num_shards == 1 else self.num_shards
+        # combine traffic scales with the flush's PARTICIPANTS, not the
+        # mesh: a single-participant flush skips the collective entirely
+        # (zero interconnect), and a multi-shard subset whose size
+        # divides the mesh rings only its participants (grouped psum,
+        # kernels.sharded — equal index-group sizes are a TPU lowering
+        # requirement); any other subset falls back to the full-axis
+        # ring with zero payloads from non-participants.  sbq.num_shards
+        # IS the participant count (the stack depth of the subset
+        # compile).
+        p = sbq.num_shards
+        ring = p if (p == 1 or self.num_shards % p == 0) else self.num_shards
         self.combine_bytes += combine_bytes_per_batch(
             sbq.num_blocks * sbq.q_block, dim, ring
         )
+        self.participant_sizes[sbq.num_shards] = (
+            self.participant_sizes.get(sbq.num_shards, 0) + 1
+        )
         self.wall_s += wall_s
+        self.flush_wall.append(wall_s)
 
-    def record_flush_home(self, home: int) -> None:
-        """Counts one dispatched flush against its home (POOL = -1)."""
+    def record_flush_home(self, home) -> None:
+        """Counts one dispatched flush against its home (an int shard,
+        the POOL sentinel -1, or an owner-set tuple)."""
         self.shard_flushes[home] = self.shard_flushes.get(home, 0) + 1
+
+    def record_submit(self, seconds: float) -> None:
+        """Accounts one submit() call's host latency (µs-scale under
+        the thread driver — the never-blocks contract the percentiles
+        in :meth:`summary` make auditable)."""
+        self.submit_wall.append(seconds)
 
     def record_compile(self, seconds: float, *, hidden: bool) -> None:
         """Accounts one flush's host compile; ``hidden`` when at least
@@ -189,7 +238,16 @@ class ShardedServeStats:
             "max_shard_width": self.max_shard_width,
             "combine_bytes": self.combine_bytes,
             "wall_s": self.wall_s,
-            "shard_flushes": {str(k): v for k, v in sorted(self.shard_flushes.items())},
+            "shard_flushes": {
+                str(k): v for k, v in sorted(
+                    self.shard_flushes.items(), key=lambda kv: str(kv[0])
+                )
+            },
+            "participant_sizes": {
+                str(k): v for k, v in sorted(self.participant_sizes.items())
+            },
+            "flush_latency_s": _latency_percentiles(self.flush_wall),
+            "submit_latency_s": _latency_percentiles(self.submit_wall),
             "barrier_flushes": self.barrier_flushes,
             "deadline_flushes": self.deadline_flushes,
             "host_compile_s": self.host_compile_s,
@@ -230,15 +288,24 @@ class ShardedEmbeddingServer:
       replan: optional :class:`~repro.serve.drift.ReplanConfig` enabling
         drift-triggered incremental replanning (DESIGN.md §6).
       flush_policy: ``"global"`` (the synchronous PR-2 path, default) or
-        an async policy — ``"per-shard"`` / ``"deadline"`` kind strings
-        or a full :class:`~repro.serve.scheduler.FlushPolicy`.  Async
-        policies flush shards independently as their block unions fill
-        and pipeline host compile against device execution; results are
-        collected with :meth:`drain` (or :meth:`flush`, which is a
-        barrier in async mode).  DESIGN.md §7.
-      union_budget / flush_deadline / max_in_flight: async policy knobs
+        an async policy — ``"per-shard"`` / ``"deadline"`` /
+        ``"owner-set"`` kind strings or a full
+        :class:`~repro.serve.scheduler.FlushPolicy`.  Async policies
+        flush homes independently as their block unions fill and
+        pipeline host compile against device execution; ``"owner-set"``
+        additionally keys multi-owner homes by their frozen owner set
+        so a flush's participants are exactly its queries' owners.
+        Results are collected with :meth:`drain` (or :meth:`flush`,
+        which is a barrier in async mode).  DESIGN.md §7.
+      union_budget / flush_deadline / owner_set_max / max_in_flight:
+        async policy knobs
         (see :class:`~repro.serve.scheduler.FlushPolicy`); ignored under
         ``"global"``.
+      threaded: run the async engine on a dedicated driver thread
+        (DESIGN.md §7.2): :meth:`submit` validates + enqueues onto a
+        bounded hand-off queue and never blocks on a full in-flight
+        pipeline; call :meth:`close` (or use the server as a context
+        manager) to stop the driver.  Requires an async flush policy.
     """
 
     def __init__(
@@ -261,7 +328,9 @@ class ShardedEmbeddingServer:
         flush_policy: str | FlushPolicy = "global",
         union_budget: int | None = None,
         flush_deadline: int | None = None,
+        owner_set_max: int | None = None,
         max_in_flight: int = 2,
+        threaded: bool = False,
     ):
         if set(tables) != set(histories):
             raise ValueError("tables and histories must cover the same names")
@@ -346,12 +415,14 @@ class ShardedEmbeddingServer:
         self._staged: Optional[PlanPatch] = None
         self._demote_streak = 0
         knobs_set = (union_budget is not None or flush_deadline is not None
-                     or max_in_flight != 2)
+                     or owner_set_max is not None or max_in_flight != 2
+                     or threaded)
         if isinstance(flush_policy, str):
             if knobs_set:
                 flush_policy = FlushPolicy(
                     kind=flush_policy, union_budget=union_budget,
-                    deadline=flush_deadline, max_in_flight=max_in_flight,
+                    deadline=flush_deadline, owner_set_max=owner_set_max,
+                    max_in_flight=max_in_flight, threaded=threaded,
                 )
         elif knobs_set:
             raise ValueError(
@@ -376,6 +447,19 @@ class ShardedEmbeddingServer:
             n: [] for n in self.names
         }
         self._seq: Dict[str, int] = {n: 0 for n in self.names}
+        # per-table row counts: submit()-time validation rejects
+        # out-of-range ids BEFORE anything is enqueued, so a malformed
+        # query can never poison a buffered batch (the retry contract's
+        # "remove the offender" happens at the door)
+        self._num_rows: Dict[str, int] = {
+            n: int(np.asarray(tables[n]).shape[0]) for n in self.names
+        }
+        # ---- thread driver state (DESIGN.md §7.2); started lazily on
+        # the first submit under a threaded policy ----
+        self._handoff: Optional[queue.Queue] = None
+        self._driver: Optional[threading.Thread] = None
+        self._driver_stop = threading.Event()
+        self._driver_error: Optional[BaseException] = None
 
     # ------------------------------------------------------------ serving --
 
@@ -561,10 +645,20 @@ class ShardedEmbeddingServer:
 
         Under ``"global"``: auto-flushes (synchronously) at
         ``batch_size`` buffered and returns that flush's results.
-        Under an async policy: the query routes to its home shard, any
-        due homes flush *asynchronously* (dispatch only — no blocking),
-        and the return value is always ``{}``; collect results with
-        :meth:`drain` / :meth:`flush`.
+        Under an async policy: the query routes to its home, any due
+        homes flush *asynchronously* (dispatch only — no blocking on
+        results), and the return value is always ``{}``; collect
+        results with :meth:`drain` / :meth:`flush`.  With the thread
+        driver the call only validates, stamps a sequence id and
+        enqueues onto the bounded hand-off queue — dispatch and retire
+        run on the driver, so submit never blocks on a full in-flight
+        pipeline.
+
+        The query is validated HERE, before anything is enqueued: a
+        malformed query (row ids outside the table) raises and leaves
+        every buffer/queue untouched, so retrying the pending work
+        never replays the offender.  Per-call host latency is recorded
+        (``submit_latency_s`` percentiles in the stats summary).
 
         Args:
           table: table name the query reduces over.
@@ -576,12 +670,34 @@ class ShardedEmbeddingServer:
 
         Raises:
           KeyError: ``table`` is not a served table.
+          IndexError: a row id falls outside ``[0, rows)``.
         """
+        t0 = time.perf_counter()
+        try:
+            return self._submit(table, query)
+        finally:
+            self.stats.record_submit(time.perf_counter() - t0)
+
+    def _submit(self, table: str, query: Sequence[int]) -> Dict[str, jax.Array]:
         if table not in self._buffer:
             raise KeyError(f"unknown table {table!r}")
+        ids = np.asarray(list(query), dtype=np.int64)
+        if ids.size:
+            lo, hi = int(ids.min()), int(ids.max())
+            if lo < 0 or hi >= self._num_rows[table]:
+                raise IndexError(
+                    f"query row ids [{lo}, {hi}] out of range "
+                    f"[0, {self._num_rows[table]}) for table {table!r}"
+                )
         if self.scheduler is not None:
+            self._raise_driver_error()
             seq = self._seq[table]
             self._seq[table] = seq + 1
+            if self.policy.threaded:
+                if self._driver is None:
+                    self._start_driver()
+                self._handoff.put(("query", table, seq, list(query)))
+                return {}
             self.scheduler.push(table, seq, query)
             self._maybe_flush()
             return {}
@@ -659,26 +775,29 @@ class ShardedEmbeddingServer:
             self.scheduler.requeue(home, entries, first_tick=first_tick)
             raise
         self._in_flight.append(entry)
+        # peak is sampled at APPEND time — the queue transiently holds
+        # max_in_flight + 1 entries before the retire loop below trims
+        # it, and that transient depth is exactly what the stat reports
+        self.stats.in_flight_peak = max(
+            self.stats.in_flight_peak, len(self._in_flight)
+        )
         self.stats.record_flush_home(home)
         # drift bookkeeping is pure host work: it overlaps this flush's
         # device execution exactly like the next flush's compile does
         self._observe_and_stage(entry.host_cq, entry.n_queries)
         while len(self._in_flight) > self.policy.max_in_flight:
             self._retire_oldest()
-        self.stats.in_flight_peak = max(
-            self.stats.in_flight_peak, len(self._in_flight)
-        )
 
     def _device_busy(self) -> bool:
-        """Whether any in-flight flush is still executing on device."""
-        for e in self._in_flight:
-            for o in e.outs:
-                try:
-                    if not o.is_ready():
-                        return True
-                except AttributeError:  # array type without is_ready
-                    return True
-        return False
+        """Whether any in-flight flush is still executing on device.
+
+        Feeds the ``hidden_compile_s`` accounting, whose contract is a
+        conservative LOWER bound on genuinely-overlapped compile time —
+        so an array type without ``is_ready`` (e.g. an already-
+        materialized NumPy output from a stubbed dispatch) counts as
+        idle, never as busy.
+        """
+        return any(not self._entry_ready(e) for e in self._in_flight)
 
     def _compile_and_dispatch(
         self,
@@ -743,13 +862,132 @@ class ShardedEmbeddingServer:
         plan they were submitted against; only after every dispatched
         flush retires does the staged patch swap placement arrays and
         the scheduler re-derive its routing.
+
+        With the thread driver running, a caller on any other thread
+        posts a barrier token onto the hand-off queue and joins the
+        driver at it: the driver first drains every earlier hand-off
+        item (FIFO), then runs this barrier inline — so the ordering
+        guarantees are identical to the inline engine's.
         """
+        if (self._driver is not None
+                and threading.current_thread() is not self._driver):
+            done = threading.Event()
+            self._handoff.put(("barrier", done))
+            done.wait()
+            self._raise_driver_error()
+            return
         for home in self.scheduler.homes_with_pending():
             self._flush_home(home, forced=True)
         while self._in_flight:
             self._retire_oldest()
         self._apply_staged_patch()
         self.stats.barrier_flushes += 1
+
+    # ------------------------------------------------------ thread driver --
+
+    def _start_driver(self) -> None:
+        self._handoff = queue.Queue(maxsize=self.policy.handoff_depth)
+        self._driver_stop = threading.Event()
+        self._driver = threading.Thread(
+            target=self._driver_loop, name="recross-flush-driver", daemon=True
+        )
+        self._driver.start()
+
+    def _driver_loop(self) -> None:
+        """Dispatch/retire loop of the thread driver (DESIGN.md §7.2).
+
+        Pops hand-off items FIFO: a query item routes + maybe-flushes
+        (exactly the inline engine's submit path), a barrier token runs
+        :meth:`_barrier` inline and wakes its waiter.  While the queue
+        is idle, in-flight flushes whose outputs are already
+        materialized retire opportunistically, so result hand-off
+        latency does not wait for the next submission.  A flush failure
+        leaves its batch requeued (the :meth:`_flush_home` contract)
+        and is stashed for :meth:`_raise_driver_error` to surface on
+        the caller's thread.
+        """
+        while not self._driver_stop.is_set():
+            try:
+                item = self._handoff.get(timeout=0.005)
+            except queue.Empty:
+                try:
+                    self._retire_ready()
+                except Exception as e:  # pragma: no cover - device fault
+                    if self._driver_error is None:
+                        self._driver_error = e
+                continue
+            if item[0] == "barrier":
+                done = item[1]
+                try:
+                    self._barrier()
+                except Exception as e:
+                    if self._driver_error is None:
+                        self._driver_error = e
+                finally:
+                    done.set()
+                continue
+            _, table, seq, query_list = item
+            try:
+                self.scheduler.push(table, seq, query_list)
+                self._maybe_flush()
+            except Exception as e:
+                # the batch is already requeued; surface the failure at
+                # the caller's next submit()/drain() (retry contract)
+                if self._driver_error is None:
+                    self._driver_error = e
+
+    def _retire_ready(self) -> None:
+        """Retires in-flight flushes whose outputs are already
+        materialized, oldest-first (hand-off order preserved)."""
+        while self._in_flight and self._entry_ready(self._in_flight[0]):
+            self._retire_oldest()
+
+    @staticmethod
+    def _entry_ready(e: _InFlight) -> bool:
+        for o in e.outs:
+            try:
+                if not o.is_ready():
+                    return False
+            except AttributeError:  # no is_ready ⇒ already materialized
+                continue
+        return True
+
+    def _raise_driver_error(self) -> None:
+        """Re-raises (once) a failure stashed by the driver thread."""
+        if self._driver_error is not None:
+            err, self._driver_error = self._driver_error, None
+            raise err
+
+    def close(self) -> None:
+        """Stops the thread driver (if running).  Any hand-off items the
+        driver had not yet popped are pushed back into the scheduler,
+        so no submitted query (or its stamped sequence id) is ever
+        dropped — a later :meth:`drain` serves them inline.  Idempotent;
+        the server remains usable (a later submit restarts the driver).
+        """
+        if self._driver is not None:
+            self._driver_stop.set()
+            self._driver.join(timeout=30.0)
+            self._driver = None
+        if self._handoff is not None:
+            while True:
+                try:
+                    item = self._handoff.get_nowait()
+                except queue.Empty:
+                    break
+                if item[0] == "barrier":
+                    # single-producer contract: a waiter can't also be
+                    # calling close(); wake it defensively regardless
+                    item[1].set()
+                else:
+                    _, table, seq, query_list = item
+                    self.scheduler.push(table, seq, query_list)
+
+    def __enter__(self) -> "ShardedEmbeddingServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     def drain(self) -> Dict[str, jax.Array]:
         """Barrier + result hand-off for async policies.
@@ -758,6 +996,10 @@ class ShardedEmbeddingServer:
         applies a staged plan patch (the only legal application point
         besides a triggered barrier), and returns everything served
         since the previous hand-off, per table in submission order.
+        Under the thread driver this joins the driver at a barrier
+        token; a failure stashed by the driver (or one raised by the
+        barrier's own retry of requeued work) surfaces here — retry by
+        draining again once the transient clears.
 
         Returns:
           ``{table: (n_queries_since_last_drain, dim)}`` arrays; ``{}``
@@ -765,6 +1007,7 @@ class ShardedEmbeddingServer:
         """
         if self.scheduler is None:
             return self.flush()
+        self._raise_driver_error()
         self._barrier()
         out: Dict[str, jax.Array] = {}
         for name in self.names:
@@ -775,7 +1018,12 @@ class ShardedEmbeddingServer:
             rows = np.concatenate([c[1] for c in chunks])
             out[name] = jnp.asarray(rows[np.argsort(seqs)])
         self._completed = {n: [] for n in self.names}
-        self._seq = {n: 0 for n in self.names}
+        # sequence ids restart ONLY when no requeued/pending work is
+        # still carrying the old ones — resetting with a failed flush's
+        # entries alive would hand new submissions colliding seqs and
+        # scramble the next drain's argsort row order
+        if self.scheduler.pending_total() == 0 and not self._in_flight:
+            self._seq = {n: 0 for n in self.names}
         return out
 
     # ------------------------------------------------------------- report --
@@ -810,6 +1058,11 @@ class ShardedEmbeddingServer:
                 "deadline": self.policy.deadline,
                 "max_in_flight": self.policy.max_in_flight,
                 "in_flight": len(self._in_flight),
+                "threaded": self.policy.threaded,
+                "handoff_depth": self.policy.handoff_depth,
+                "handoff_pending": (
+                    self._handoff.qsize() if self._handoff is not None else 0
+                ),
                 **self.scheduler.state(),
             }
         if self.tracker is not None:

@@ -293,6 +293,139 @@ def test_failed_async_flush_requeues_batch():
     np.testing.assert_array_equal(np.asarray(out["a"]), want)
 
 
+# --------------------------------------------- engine accounting fixes --
+
+
+def test_device_busy_ignores_unknown_array_types():
+    """hidden_compile_s promises a conservative LOWER bound: an output
+    without is_ready (e.g. a materialized NumPy array from a stubbed
+    dispatch) must count as idle, not busy — the old AttributeError
+    branch overcounted hidden compile exactly where it mattered."""
+    from repro.serve.sharded import _InFlight
+
+    rows, dim = 160, 128
+    tables = {"a": _int_table(rows, dim, 50)}
+    histories = {"a": zipf_queries(rows, 48, 5.0, seed=51)}
+    srv = ShardedEmbeddingServer(
+        tables, histories, num_shards=1, q_block=4, group_size=16,
+        batch_size=8, flush_policy="per-shard",
+    )
+    stub = _InFlight(outs=[np.zeros((4, dim), np.float32)], sbq=None,
+                     served=["a"], seqs={}, t0=0.0, n_queries=1)
+    srv._in_flight.append(stub)
+    assert srv._device_busy() is False, (
+        "array without is_ready treated as busy — overcounts overlap"
+    )
+    assert srv._entry_ready(stub)
+
+    class _NotReady:
+        def is_ready(self):
+            return False
+
+    srv._in_flight.append(_InFlight(
+        outs=[_NotReady()], sbq=None, served=["a"], seqs={}, t0=0.0,
+        n_queries=1,
+    ))
+    assert srv._device_busy() is True
+    srv._in_flight.clear()
+
+
+def test_in_flight_peak_sampled_at_append():
+    """The queue transiently holds max_in_flight + 1 entries before the
+    retire loop trims it; the peak stat must report that transient, not
+    the post-trim depth (which can never exceed the bound)."""
+    rows, dim = 160, 128
+    tables = {"a": _int_table(rows, dim, 52)}
+    histories = {"a": zipf_queries(rows, 48, 5.0, seed=53)}
+    srv = ShardedEmbeddingServer(
+        tables, histories, num_shards=1, q_block=4, group_size=16,
+        batch_size=4, flush_policy="per-shard", max_in_flight=1,
+    )
+    stream = zipf_queries(rows, 12, 5.0, seed=54)  # >= 3 flushes
+    for q in stream:
+        srv.submit("a", q)
+    out = srv.drain()
+    assert srv.stats.batches >= 2
+    assert srv.stats.in_flight_peak == 2, (
+        f"peak {srv.stats.in_flight_peak} != max_in_flight + 1 — "
+        "sampled after the retire loop trimmed the queue"
+    )
+    want = np.asarray(reduce_dense_oracle(jnp.asarray(tables["a"]), stream))
+    np.testing.assert_array_equal(np.asarray(out["a"]), want)
+
+
+@pytest.mark.parametrize("policy", ["global", "per-shard"])
+def test_submit_validates_ids_before_enqueue(policy):
+    """Malformed queries are rejected at the door: no buffer entry, no
+    scheduler entry, and — crucially — no sequence id consumed, so the
+    pending stream stays retryable without a removal API."""
+    rows, dim = 160, 128
+    tables = {"a": _int_table(rows, dim, 55)}
+    histories = {"a": zipf_queries(rows, 48, 5.0, seed=56)}
+    srv = ShardedEmbeddingServer(
+        tables, histories, num_shards=2, q_block=4, group_size=16,
+        batch_size=64, flush_policy=policy,
+    )
+    good = zipf_queries(rows, 5, 5.0, seed=57)
+    for q in good:
+        srv.submit("a", q)
+    for bad in ([rows], [rows + 5], [-1], [0, rows + 2]):
+        with pytest.raises(IndexError, match="out of range"):
+            srv.submit("a", bad)
+    if srv.scheduler is not None:
+        assert srv.scheduler.pending_total() == len(good)
+        assert srv._seq["a"] == len(good), "rejected query consumed a seq"
+    else:
+        assert srv._buffered == len(good)
+    out = srv.flush()
+    want = np.asarray(reduce_dense_oracle(jnp.asarray(tables["a"]), good))
+    np.testing.assert_array_equal(np.asarray(out["a"]), want)
+
+
+def test_seq_reset_guarded_by_requeued_entries():
+    """drain() restarts sequence ids ONLY when nothing requeued is still
+    carrying the old ones — a reset with a failed flush's entries alive
+    would hand new submissions colliding seqs and scramble the argsort
+    row order of the next drain."""
+    rows, dim = 160, 128
+    tables = {"a": _int_table(rows, dim, 58)}
+    histories = {"a": zipf_queries(rows, 48, 5.0, seed=59)}
+    srv = ShardedEmbeddingServer(
+        tables, histories, num_shards=1, q_block=4, group_size=16,
+        batch_size=8, flush_policy="per-shard",
+    )
+    good = zipf_queries(rows, 7, 5.0, seed=60)
+    for q in good:
+        srv.submit("a", q)
+    orig = srv._compile_and_dispatch
+
+    def broken(entries, participants):
+        raise RuntimeError("persistent device error")
+
+    srv._compile_and_dispatch = broken
+    last = zipf_queries(rows, 1, 5.0, seed=61)[0]
+    with pytest.raises(RuntimeError):
+        srv.submit("a", last)  # trips the flush → fails → requeues
+    assert srv.scheduler.pending_total() == 8
+    assert srv._seq["a"] == 8
+    # a barrier that hands back without flushing (the partial-recovery
+    # hazard) must not let drain() reset seqs over live requeued work
+    orig_barrier = srv._barrier
+    srv._barrier = lambda: None
+    assert srv.drain() == {}
+    assert srv._seq["a"] == 8, "seq reset while requeued entries alive"
+    srv._barrier = orig_barrier
+    srv._compile_and_dispatch = orig
+    more = zipf_queries(rows, 3, 5.0, seed=62)
+    for q in more:
+        srv.submit("a", q)
+    out = srv.drain()
+    stream = list(good) + [last] + list(more)
+    want = np.asarray(reduce_dense_oracle(jnp.asarray(tables["a"]), stream))
+    np.testing.assert_array_equal(np.asarray(out["a"]), want)
+    assert srv._seq["a"] == 0  # clean drain: seqs restart
+
+
 def test_route_is_a_peek():
     """route() must not consume round-robin state: inspecting a query's
     home twice returns the same answer, and only push() advances."""
@@ -317,6 +450,268 @@ def test_route_is_a_peek():
     # query routes to the other shard
     h3, _ = sched.route("a", q)
     assert h3 == (h1 + 1) % 2
+
+
+# ------------------------------------------------- owner-set routing --
+
+
+def _owner_rows(sched, table):
+    """{owner shard: [row ids]} of the sharded-once rows of a table."""
+    owner = sched._owner_of_row[table]
+    out = {}
+    for r, o in enumerate(owner):
+        if o >= 0:
+            out.setdefault(int(o), []).append(r)
+    return out
+
+
+def test_owner_set_scheduler_routes_by_frozen_owner_set():
+    """Under owner-set routing each distinct multi-owner set is its own
+    home (a sorted tuple) and take() returns exactly that set as flush
+    participants — the full stack only when the set covers the mesh."""
+    rows, dim, S = 160, 128, 4
+    tables = {"a": _int_table(rows, dim, 63)}
+    histories = {"a": zipf_queries(rows, 48, 5.0, seed=64)}
+    srv = ShardedEmbeddingServer(
+        tables, histories, num_shards=S, q_block=4, group_size=16,
+        batch_size=1024, flush_policy="owner-set",
+    )
+    sched = srv.scheduler
+    by_owner = _owner_rows(sched, "a")
+    if len(by_owner) < 2:
+        return  # vacuous at this seed
+    owners = sorted(by_owner)
+    a, b = owners[0], owners[1]
+    q2 = [by_owner[a][0], by_owner[b][0]]
+    home, _ = sched.route("a", q2)
+    assert home == (a, b)
+    assert sched.push("a", 0, q2) == (a, b)
+    entries, participants = sched.take((a, b))
+    assert [e[2] for e in entries] == [q2]
+    assert participants == [a, b]
+    # single-owner queries still route to int homes
+    h1, _ = sched.route("a", [by_owner[a][0]])
+    assert h1 == a
+    if len(by_owner) == S:
+        qall = [by_owner[o][0] for o in owners]
+        homeall, _ = sched.route("a", qall)
+        assert homeall == tuple(owners)
+        sched.push("a", 1, qall)
+        _, parts = sched.take(tuple(owners))
+        assert parts is None  # covers the mesh → full stack
+
+
+def test_owner_set_max_pools_wide_sets():
+    """Owner sets larger than owner_set_max collapse into the POOL home
+    (flushed over their owner union) while sets within the cap keep
+    their own — the fragmentation guard for near-mesh traffic."""
+    from repro.serve.scheduler import POOL
+
+    rows, dim, S = 160, 128, 4
+    tables = {"a": _int_table(rows, dim, 73)}
+    histories = {"a": zipf_queries(rows, 48, 5.0, seed=74)}
+    srv = ShardedEmbeddingServer(
+        tables, histories, num_shards=S, q_block=4, group_size=16,
+        batch_size=1024, flush_policy="owner-set", owner_set_max=2,
+    )
+    assert srv.policy.owner_set_max == 2
+    sched = srv.scheduler
+    by_owner = _owner_rows(sched, "a")
+    if len(by_owner) < 3:
+        return  # vacuous at this seed
+    owners = sorted(by_owner)
+    a, b, c = owners[:3]
+    home2, _ = sched.route("a", [by_owner[a][0], by_owner[b][0]])
+    assert home2 == (a, b)  # within the cap: keyed home
+    home3, _ = sched.route("a", [by_owner[o][0] for o in (a, b, c)])
+    assert home3 == POOL    # beyond the cap: pooled
+    sched.push("a", 0, [by_owner[o][0] for o in (a, b, c)])
+    _, parts = sched.take(POOL)
+    assert parts == [a, b, c]  # pool still flushes over the owner union
+    with pytest.raises(ValueError, match="owner_set_max"):
+        FlushPolicy(kind="owner-set", owner_set_max=1)
+
+
+@pytest.mark.parametrize("num_shards", [1, 2, 4])
+@pytest.mark.parametrize("threaded", [False, True])
+def test_owner_set_serving_bit_identical_to_sync(num_shards, threaded):
+    """Owner-set homes (and the thread driver on top of them) must serve
+    bit-identically to the synchronous global path and the oracle."""
+    rows, dim = 160, 128
+    tables = {"a": _int_table(rows, dim, 11), "b": _int_table(rows, dim, 12)}
+    histories = {"a": zipf_queries(rows, 48, 5.0, seed=13),
+                 "b": zipf_queries(rows, 48, 5.0, seed=14)}
+    streams = {"a": zipf_queries(rows, 30, 5.0, seed=15),
+               "b": zipf_queries(rows, 17, 5.0, seed=16)}
+    replay, ia, ib = [], 0, 0
+    for i in range(len(streams["a"]) + len(streams["b"])):
+        if (i % 3 < 2 and ia < len(streams["a"])) or ib >= len(streams["b"]):
+            replay.append(("a", streams["a"][ia])); ia += 1
+        else:
+            replay.append(("b", streams["b"][ib])); ib += 1
+
+    def run(policy, **kw):
+        srv = ShardedEmbeddingServer(
+            tables, histories, num_shards=num_shards, q_block=4,
+            group_size=16, batch_size=8, flush_policy=policy, **kw,
+        )
+        outs = {n: [] for n in tables}
+        for name, q in replay:
+            for n, o in srv.submit(name, q).items():
+                outs[n].append(np.asarray(o))
+        for n, o in srv.flush().items():
+            outs[n].append(np.asarray(o))
+        srv.close()
+        return srv, {n: np.concatenate(v) for n, v in outs.items() if v}
+
+    srv_g, outs_g = run("global")
+    srv_o, outs_o = run("owner-set", threaded=threaded, max_in_flight=2)
+    for n in tables:
+        np.testing.assert_array_equal(outs_o[n], outs_g[n])
+        want = np.asarray(reduce_dense_oracle(
+            jnp.asarray(tables[n]), streams[n]))
+        np.testing.assert_array_equal(outs_o[n], want)
+    st = srv_o.stats.summary()
+    assert st["flush_policy"] == "owner-set"
+    assert st["batches"] >= 1
+    if num_shards > 1:
+        # no flush may stack more schedules than the mesh has shards
+        assert max(int(k) for k in st["participant_sizes"]) <= num_shards
+
+
+def test_two_owner_traffic_flushes_two_participants():
+    """The acceptance contract of owner-set routing: 2-owner traffic on
+    a 4-shard mesh flushes with participant sets of size two — never
+    the near-mesh-wide pool the PR-4 scheduler collapsed it into."""
+    rows, dim, S = 160, 128, 4
+    tables = {"a": _int_table(rows, dim, 65)}
+    histories = {"a": zipf_queries(rows, 48, 5.0, seed=66)}
+    srv = ShardedEmbeddingServer(
+        tables, histories, num_shards=S, q_block=4, group_size=16,
+        batch_size=8, flush_policy="owner-set",
+    )
+    by_owner = _owner_rows(srv.scheduler, "a")
+    if len(by_owner) < 2:
+        return  # vacuous at this seed
+    owners = sorted(by_owner)
+    a, b = owners[0], owners[1]
+    stream = [
+        [by_owner[a][i % len(by_owner[a])], by_owner[b][i % len(by_owner[b])]]
+        for i in range(24)
+    ]
+    for q in stream:
+        srv.submit("a", q)
+    out = srv.drain()
+    sizes = {int(k) for k in srv.stats.summary()["participant_sizes"]}
+    assert sizes == {2}, (
+        f"2-owner traffic flushed with participant sizes {sizes}"
+    )
+    want = np.asarray(reduce_dense_oracle(jnp.asarray(tables["a"]), stream))
+    np.testing.assert_array_equal(np.asarray(out["a"]), want)
+
+
+# ------------------------------------------------------- thread driver --
+
+
+def test_thread_driver_submit_is_enqueue_only():
+    """Under the thread driver submit() never dispatches inline: the
+    driver owns compile/dispatch/retire, results arrive at drain(), and
+    submit-side latency samples are recorded for every call."""
+    rows, dim = 160, 128
+    tables = {"a": _int_table(rows, dim, 67)}
+    histories = {"a": zipf_queries(rows, 48, 5.0, seed=68)}
+    srv = ShardedEmbeddingServer(
+        tables, histories, num_shards=2, q_block=4, group_size=16,
+        batch_size=4, flush_policy="per-shard", threaded=True,
+        max_in_flight=1,
+    )
+    stream = zipf_queries(rows, 23, 5.0, seed=69)
+    for q in stream:
+        assert srv.submit("a", q) == {}
+    out = srv.drain()
+    srv.close()
+    want = np.asarray(reduce_dense_oracle(jnp.asarray(tables["a"]), stream))
+    np.testing.assert_array_equal(np.asarray(out["a"]), want)
+    assert len(srv.stats.submit_wall) == len(stream)
+    assert len(srv.stats.flush_wall) == srv.stats.batches
+    st = srv.stats.summary()
+    assert st["submit_latency_s"]["p50"] <= st["submit_latency_s"]["p95"]
+    assert st["submit_latency_s"]["p95"] <= st["submit_latency_s"]["p99"]
+    # a second drain with no traffic returns nothing and is harmless
+    assert srv.drain() == {}
+
+
+def test_thread_driver_surfaces_failures_and_retries():
+    """A flush failure on the driver thread requeues its batch and
+    surfaces at the next submit()/drain(); a later drain retries the
+    requeued work and returns every row in submission order."""
+    import time as _time
+
+    rows, dim = 160, 128
+    tables = {"a": _int_table(rows, dim, 70)}
+    histories = {"a": zipf_queries(rows, 48, 5.0, seed=71)}
+    srv = ShardedEmbeddingServer(
+        tables, histories, num_shards=1, q_block=4, group_size=16,
+        batch_size=8, flush_policy="per-shard", threaded=True,
+    )
+    calls = {"n": 0}
+    orig = srv._compile_and_dispatch
+
+    def flaky(entries, participants):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("transient device error")
+        return orig(entries, participants)
+
+    srv._compile_and_dispatch = flaky
+    stream = zipf_queries(rows, 9, 5.0, seed=72)
+    for q in stream[:8]:
+        srv.submit("a", q)  # 8th trips the flush on the driver → fails
+    deadline = _time.monotonic() + 10.0
+    while srv._driver_error is None and _time.monotonic() < deadline:
+        _time.sleep(0.005)
+    assert srv._driver_error is not None, "driver never recorded the failure"
+    with pytest.raises(RuntimeError, match="transient device error"):
+        srv.drain()
+    out = srv.drain()  # retry: the requeued batch flushes cleanly now
+    for q in stream[8:]:
+        srv.submit("a", q)
+    out2 = srv.drain()
+    srv.close()
+    got = np.concatenate([np.asarray(out["a"]), np.asarray(out2["a"])])
+    want = np.asarray(reduce_dense_oracle(jnp.asarray(tables["a"]), stream))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_close_preserves_handoff_backlog():
+    """close() must never drop submitted queries: whatever the driver
+    had not yet popped from the hand-off queue is pushed back into the
+    scheduler, and a later (inline) drain serves every row in
+    submission order."""
+    rows, dim = 160, 128
+    tables = {"a": _int_table(rows, dim, 75)}
+    histories = {"a": zipf_queries(rows, 48, 5.0, seed=76)}
+    srv = ShardedEmbeddingServer(
+        tables, histories, num_shards=2, q_block=4, group_size=16,
+        batch_size=64, flush_policy="per-shard", threaded=True,
+    )
+    stream = zipf_queries(rows, 9, 5.0, seed=77)
+    for q in stream:
+        srv.submit("a", q)
+    srv.close()  # races the driver: any undispatched backlog must survive
+    assert srv._driver is None
+    out = srv.drain()  # driver stopped → inline barrier
+    want = np.asarray(reduce_dense_oracle(jnp.asarray(tables["a"]), stream))
+    np.testing.assert_array_equal(np.asarray(out["a"]), want)
+
+
+def test_latency_percentiles_sanity():
+    from repro.serve.sharded import _latency_percentiles
+
+    assert _latency_percentiles([]) == {"p50": 0.0, "p95": 0.0, "p99": 0.0}
+    pct = _latency_percentiles([1.0, 2.0, 3.0, 4.0])
+    assert pct["p50"] <= pct["p95"] <= pct["p99"] <= 4.0
+    assert pct["p50"] == 2.5
 
 
 # ------------------------------------- PlanPatch × async-flush barrier --
@@ -373,6 +768,47 @@ def test_patch_staged_mid_pipeline_applies_at_barrier_only(num_shards):
             saw_staged_mid_pipeline = True
     out = srv.drain()
     assert saw_staged_mid_pipeline, "drift never staged while in flight"
+    assert applied_with_in_flight, "no patch was ever applied"
+    assert all(n == 0 for n in applied_with_in_flight), (
+        "patch applied with flushes in flight"
+    )
+    assert srv.stats.replans + srv.stats.rebases >= 1
+    assert srv.stats.barrier_flushes >= 1
+    want = np.asarray(reduce_dense_oracle(jnp.asarray(tables["a"]), stream))
+    np.testing.assert_array_equal(np.asarray(out["a"]), want)
+
+
+def test_patch_applies_at_barrier_only_under_thread_driver():
+    """The §7.3 barrier rule must survive the thread driver: a patch
+    staged by driver-side flushes applies only with the pipeline empty
+    (spied on the driver thread), and the drained outputs stay exact
+    across the plan transition."""
+    rows, dim = 128, 128
+    tables = {"a": _int_table(rows, dim, 31)}
+    histories = {"a": zipf_queries(rows, 48, 5.0, seed=32)}
+    srv = ShardedEmbeddingServer(
+        tables, histories, num_shards=2, q_block=4, group_size=16,
+        batch_size=8, batch_size_for_eq1=512,
+        flush_policy="per-shard", max_in_flight=4, threaded=True,
+        replan=ReplanConfig(threshold=0.15, half_life=1.0, min_queries=8,
+                            slack_tiles=8),
+    )
+    applied_with_in_flight = []
+    orig_apply = srv._apply_staged_patch
+
+    def spy_apply():
+        if srv._staged is not None:
+            applied_with_in_flight.append(len(srv._in_flight))
+        orig_apply()
+
+    srv._apply_staged_patch = spy_apply
+    stream = zipf_queries(rows, 48, 5.0, seed=33)
+    perm = np.random.default_rng(34).permutation(rows)
+    stream = stream[:16] + [perm[np.asarray(q, np.int64)] for q in stream[16:]]
+    for q in stream:
+        srv.submit("a", q)
+    out = srv.drain()
+    srv.close()
     assert applied_with_in_flight, "no patch was ever applied"
     assert all(n == 0 for n in applied_with_in_flight), (
         "patch applied with flushes in flight"
@@ -529,3 +965,87 @@ print("SCHEDULER_SHARD_MAP_PARITY_OK")
     )
     assert proc.returncode == 0, proc.stderr[-2000:]
     assert "SCHEDULER_SHARD_MAP_PARITY_OK" in proc.stdout
+
+
+def test_owner_set_thread_driver_shard_map_subprocess():
+    """Owner-set homes + the thread driver on the REAL shard_map path
+    (4 forced host devices): 2-owner flushes dispatch the grouped-psum
+    subset combine and everything stays bit-identical to emulation, the
+    global policy, and the oracle.  Device forcing must precede jax
+    init → subprocess."""
+    import os
+    import subprocess
+    import sys
+
+    script = r"""
+import numpy as np
+import jax, jax.numpy as jnp
+assert len(jax.devices()) >= 4, jax.devices()
+import sys
+sys.path.insert(0, {src!r})
+from repro.data import zipf_queries
+from repro.serve import ShardedEmbeddingServer
+from repro.core.reduction import reduce_dense_oracle
+
+rows, dim, S = 96, 128, 4
+tables = {{"a": np.random.default_rng(3).integers(
+    -8, 9, size=(rows, dim)).astype(np.float32)}}
+histories = {{"a": zipf_queries(rows, 32, 5.0, seed=1)}}
+mesh = jax.make_mesh((1, S), ("data", "model"))
+
+# owner map for crafting 2-owner queries (read off a probe server)
+probe = ShardedEmbeddingServer(
+    tables, histories, num_shards=S, q_block=4, group_size=16,
+    batch_size=8, flush_policy="owner-set")
+owner = probe.scheduler._owner_of_row["a"]
+by_owner = {{}}
+for r, o in enumerate(owner):
+    if o >= 0:
+        by_owner.setdefault(int(o), []).append(r)
+owners = sorted(by_owner)
+assert len(owners) >= 2, owners
+a, b = owners[0], owners[1]
+stream = list(zipf_queries(rows, 18, 5.0, seed=2))
+stream += [
+    [by_owner[a][i % len(by_owner[a])], by_owner[b][i % len(by_owner[b])]]
+    for i in range(10)
+]
+
+def run(policy, mesh, **kw):
+    srv = ShardedEmbeddingServer(
+        tables, histories, num_shards=S, mesh=mesh, q_block=4,
+        group_size=16, batch_size=8, flush_policy=policy, **kw)
+    outs = []
+    for q in stream:
+        for _, o in srv.submit("a", q).items():
+            outs.append(np.asarray(o))
+    for _, o in srv.flush().items():
+        outs.append(np.asarray(o))
+    srv.close()
+    return srv, np.concatenate(outs)
+
+srv_sm, out_sm = run("owner-set", mesh, threaded=True)
+srv_emu, out_emu = run("owner-set", None, threaded=True)
+srv_g, out_g = run("global", mesh)
+np.testing.assert_array_equal(out_sm, out_emu)
+np.testing.assert_array_equal(out_sm, out_g)
+oracle = np.asarray(reduce_dense_oracle(jnp.asarray(tables["a"]), stream))
+np.testing.assert_array_equal(out_sm, oracle)
+sizes = {{int(k) for k in srv_sm.stats.summary()["participant_sizes"]}}
+assert 2 in sizes, sizes   # the grouped-psum subset combine really ran
+assert len(srv_sm.stats.submit_wall) == len(stream)
+print("OWNER_SET_THREAD_DRIVER_SHARD_MAP_OK")
+""".format(src=os.path.join(os.path.dirname(__file__), "..", "src"))
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=4 "
+        + env.get("XLA_FLAGS", "")
+    )
+    env["JAX_PLATFORMS"] = "cpu"
+    proc = subprocess.run(
+        [sys.executable, "-c", script],
+        capture_output=True, text=True, env=env, timeout=480,
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "OWNER_SET_THREAD_DRIVER_SHARD_MAP_OK" in proc.stdout
