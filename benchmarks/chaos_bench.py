@@ -1,0 +1,219 @@
+"""Chaos-replay benchmark → the ``chaos`` section of BENCH_serving.json.
+
+Measures the self-healing contract of the flush pipeline (DESIGN.md §8)
+under a seeded, deterministic fault schedule: the SAME skewed replay
+runs once fault-free (the oracle) and once on the threaded driver with
+a :class:`~repro.serve.faults.FaultPlan` injecting transient compile
+failures, dispatch-time and retire-time device faults, an (effectively)
+infinite execution hang, and two randomly-drawn poisoned queries.  The
+acceptance invariant is asserted, not just recorded:
+
+  * ``drain()`` under chaos is **bit-identical** to the fault-free
+    oracle for every non-poisoned row (integer tables — every partial
+    sum exact in f32);
+  * the error ledger shows nonzero retries and **exactly** the injected
+    poison offenders quarantined (with their errors);
+  * the hung flush trips the watchdog and is served degraded via the
+    inline host path — ``drain()`` completes instead of wedging.
+
+Recorded: chaos vs fault-free wall clock (the recovery overhead),
+recovery-latency percentiles (first failed dispatch → successful
+re-dispatch), the degraded-flush fraction, backoff seconds slept,
+bisection count, and the injector's per-seam attempt/injected counters.
+Both execution modes run when the host presents enough devices
+(**emulated** single-device, **shard_map** on forced host devices — CI
+forces 4); the headline record is the emulated mode, same convention as
+the scheduler bench.
+
+Env knobs: ``RECROSS_CHAOS_ROWS`` / ``RECROSS_CHAOS_HISTORY`` (defaults
+12_500), ``RECROSS_CHAOS_BATCH`` (32), ``RECROSS_CHAOS_SHARDS`` (4),
+``RECROSS_CHAOS_SEED`` (0, the fault-plan + jitter seed),
+``RECROSS_CHAOS_WATCHDOG_S`` (10.0 — generous vs the full-scale flush
+p99 so only the injected hang times out).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+import jax
+
+from benchmarks.common import (
+    bench_is_full_scale,
+    bench_json_path,
+    emit,
+    mesh_for,
+    update_bench_json,
+)
+from repro.data import zipf_queries
+from repro.serve import FaultPlan, RetryPolicy, ShardedEmbeddingServer
+
+JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serving.json")
+
+NUM_ROWS = int(os.environ.get("RECROSS_CHAOS_ROWS", 12_500))
+NUM_HISTORY = int(os.environ.get("RECROSS_CHAOS_HISTORY", 12_500))
+SERVE_BATCH = int(os.environ.get("RECROSS_CHAOS_BATCH", 32))
+NUM_SHARDS = int(os.environ.get("RECROSS_CHAOS_SHARDS", 4))
+CHAOS_SEED = int(os.environ.get("RECROSS_CHAOS_SEED", 0))
+#: generous vs the full-scale flush p99 (~1.4 s) so only the injected
+#: hang times out; CI smoke sets its own budget for the tiny sizes
+WATCHDOG_S = float(os.environ.get("RECROSS_CHAOS_WATCHDOG_S", 10.0))
+MEAN_BAG = float(os.environ.get("RECROSS_PIPELINE_MEAN_BAG", 41.32))
+SKEW = 3
+GROUP_SIZE = 64
+Q_BLOCK = 8
+DIM = 128
+#: committed BENCH_serving.json only updates at the full DEFAULT config
+FULL_SCALE = bench_is_full_scale()
+
+
+def _fault_plan(max_seq: int) -> FaultPlan:
+    """The injected schedule: every retriable seam plus two poisoned
+    queries drawn reproducibly from the seed (≥ 3 fault kinds, per the
+    acceptance criteria)."""
+    return (
+        FaultPlan.random(CHAOS_SEED, {"poison": 2},
+                         tables=("t0", "t1"), max_seq=max_seq)
+        .add("compile", tick=0, times=2)     # transient compile failures
+        .add("device", tick=2, times=1)      # device fault at dispatch
+        .add("device-late", tick=1, times=1)  # ... surfacing at retire
+        .add("hang", tick=4, hang_s=999.0)   # hung flush → watchdog
+    )
+
+
+def run() -> list:
+    rows_out = []
+    irng = np.random.default_rng(7)
+    itables = {
+        "t0": irng.integers(-8, 9, size=(NUM_ROWS, DIM)).astype(np.float32),
+        "t1": irng.integers(-8, 9, size=(NUM_ROWS, DIM)).astype(np.float32),
+    }
+    ihistories = {
+        name: zipf_queries(NUM_ROWS, NUM_HISTORY, MEAN_BAG, seed=20 + i,
+                           num_baskets=max(256, NUM_HISTORY // 32))
+        for i, name in enumerate(itables)
+    }
+    n_req = SERVE_BATCH * 8
+    replay_qs = zipf_queries(NUM_ROWS, n_req, MEAN_BAG, seed=29,
+                             num_baskets=max(256, NUM_HISTORY // 32))
+    replay = [("t0" if i % (SKEW + 1) < SKEW else "t1", q)
+              for i, q in enumerate(replay_qs)]
+    per_table = {n: sum(1 for t, _ in replay if t == n) for n in itables}
+    plan = _fault_plan(max_seq=min(per_table.values()))
+    poisoned = set(plan.poisoned())
+    S = NUM_SHARDS
+
+    def run_replay(mesh, *, faults=None, retry=None):
+        server = ShardedEmbeddingServer(
+            itables, ihistories, num_shards=S, mesh=mesh,
+            q_block=Q_BLOCK, group_size=GROUP_SIZE, batch_size=SERVE_BATCH,
+            flush_policy="per-shard", threaded=True, max_in_flight=2,
+            faults=faults, retry=retry,
+        )
+        t0 = time.perf_counter()
+        for name, q in replay:
+            server.submit(name, q)
+        outs = {n: np.asarray(o) for n, o in server.drain().items()}
+        wall = time.perf_counter() - t0
+        server.close()
+        return server, wall, outs
+
+    modes = {"emulated": None}
+    if mesh_for(S) is not None:
+        modes["shard_map"] = mesh_for(S)
+    mode_rec = {}
+    for label, mesh in modes.items():
+        # warm: the kernel dispatch is jit-cached per shape; an unwarmed
+        # chaos run would bill trace+compile time as recovery latency
+        run_replay(mesh)
+        _, wall_ok, oracle = run_replay(mesh)
+        srv, wall_chaos, outs = run_replay(
+            mesh,
+            faults=_fault_plan(max_seq=min(per_table.values())),
+            retry=RetryPolicy(max_retries=3, seed=CHAOS_SEED,
+                              watchdog_s=WATCHDOG_S),
+        )
+        led = srv.stats.ledger
+        # ---- the acceptance invariants, asserted -----------------------
+        assert led.retries > 0, "chaos replay healed nothing"
+        assert set(led.quarantined_keys()) == poisoned, (
+            f"quarantined {led.quarantined_keys()}, injected {poisoned}"
+        )
+        assert led.timed_out_flushes >= 1 and led.degraded_flushes >= 1, (
+            "the hung flush never tripped the watchdog"
+        )
+        for n in itables:
+            drop = {s for t, s in poisoned if t == n}
+            keep = np.asarray([i for i in range(per_table[n])
+                               if i not in drop])
+            np.testing.assert_array_equal(outs[n], oracle[n][keep])
+        # ----------------------------------------------------------------
+        batches = srv.stats.summary()["batches"]
+        fsum = srv.stats.summary()["faults"]
+        mode_rec[label] = {
+            "wall_s_fault_free": wall_ok,
+            "wall_s_chaos": wall_chaos,
+            "recovery_overhead": (wall_chaos / wall_ok
+                                  if wall_ok > 0 else None),
+            "retries": led.retries,
+            "backoff_s": led.backoff_s,
+            "bisections": led.bisections,
+            "recoveries": fsum["recoveries"],
+            "recovery_latency_s": fsum["recovery_latency_s"],
+            "quarantined": fsum["quarantined"],
+            "degraded_flushes": led.degraded_flushes,
+            "timed_out_flushes": led.timed_out_flushes,
+            "degraded_fraction": (led.degraded_flushes / batches
+                                  if batches else None),
+            "batches": batches,
+            "injected": srv.report()["faults"]["injected"],
+            "bit_identical_to_fault_free": True,     # asserted above
+        }
+        rows_out.append({
+            "name": f"serving_chaos_{label}",
+            "us_per_call": f"{wall_chaos * 1e6:.0f}",
+            "derived": (
+                f"recovery_p50_s="
+                f"{fsum['recovery_latency_s']['p50']:.4f};"
+                f"degraded_frac="
+                f"{mode_rec[label]['degraded_fraction']:.3f};"
+                f"quarantined={len(led.quarantined)};"
+                f"retries={led.retries};"
+                f"overhead={mode_rec[label]['recovery_overhead']:.2f}x"
+            ),
+        })
+    head = mode_rec["emulated"]
+    record = {
+        "config": {
+            "num_rows": NUM_ROWS, "requests": n_req, "skew": SKEW,
+            "shards": S, "batch_size": SERVE_BATCH,
+            "watchdog_s": WATCHDOG_S, "seed": CHAOS_SEED,
+            "plan": plan.summary(),
+            "devices": len(jax.devices()),
+        },
+        "modes": mode_rec,
+        **{k: head[k] for k in (
+            "recovery_latency_s", "degraded_fraction",
+            "recovery_overhead", "retries",
+            "bit_identical_to_fault_free",
+        )},
+        "mode": "emulated+shard_map" if "shard_map" in mode_rec
+                else "emulated",
+    }
+    # merge into BENCH_serving.json (the serving bench owns the rest);
+    # CI smoke sizes write to a temp path — never the committed record
+    update_bench_json(
+        bench_json_path(JSON_PATH, full_scale=FULL_SCALE),
+        {"chaos": record},
+    )
+    return rows_out
+
+
+def main():
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -13,6 +13,7 @@ import time
 
 from benchmarks import (
     beyond_multiread,
+    chaos_bench,
     fig456_distributions,
     fig8_speedup,
     fig9_activations,
@@ -36,10 +37,11 @@ MODULES = {
     "multiread": beyond_multiread,
     "pipeline": pipeline_bench,
     "serving": serving_bench,
-    # after serving: all three write BENCH_serving.json (each preserves
+    # after serving: all four write BENCH_serving.json (each preserves
     # the others' sections, but keep the full-run order deterministic)
     "replan": replan_bench,
     "scheduler": scheduler_bench,
+    "chaos": chaos_bench,
 }
 
 

@@ -17,6 +17,11 @@ Usage::
     PYTHONPATH=src python -m repro.launch.serve_sharded --shards 4 \
         --flush-policy owner-set --threaded   # owner-set homes + driver
                                               # thread (non-blocking submit)
+    PYTHONPATH=src python -m repro.launch.serve_sharded --emulate \
+        --flush-policy per-shard --threaded \
+        --inject compile:2,device:1,poison:1,hang:1 \
+        --inject-seed 0 --watchdog 2.0        # seeded chaos replay: the
+                                              # engine heals (DESIGN.md §8)
 
 ``--drift`` enables the drifting-workload replay (DESIGN.md §6): after
 ``--drift-at`` of the request stream, row ids are remapped through a
@@ -104,7 +109,58 @@ def parse_args(argv=None):
     ap.add_argument("--replan-min-queries", type=int, default=64)
     ap.add_argument("--slack-tiles", type=int, default=8,
                     help="per-shard zero-tile image headroom for promotions")
+    ap.add_argument("--inject", default=None, metavar="KIND:N[,KIND:N...]",
+                    help="chaos replay (DESIGN.md §8): inject a seeded, "
+                         "deterministic fault schedule, e.g. "
+                         "'compile:2,device:1,poison:2,hang:1'.  Kinds: "
+                         "compile (transient host-compile failure), "
+                         "device (fault at dispatch), device-late (fault "
+                         "at retire), hang (flush never reports ready — "
+                         "pair with --watchdog), poison (a (table, seq) "
+                         "query that fails every containing batch until "
+                         "bisection quarantines it), patch (staged plan "
+                         "patch fails to apply).  The self-healing "
+                         "policy retries/bisects/degrades; the report's "
+                         "'faults' section shows the ledger")
+    ap.add_argument("--inject-seed", type=int, default=0,
+                    help="fault-plan draw + retry-jitter seed (same seed "
+                         "+ same replay = same faults: replayable chaos)")
+    ap.add_argument("--inject-hang-s", type=float, default=None,
+                    help="simulated hang duration for injected 'hang' "
+                         "faults (default: forever — the watchdog's job)")
+    ap.add_argument("--watchdog", type=float, default=None,
+                    help="per-flush watchdog deadline in seconds: a "
+                         "flush not ready by then is timed out and "
+                         "served degraded via the inline host path "
+                         "(None: no watchdog)")
+    ap.add_argument("--max-retries", type=int, default=2,
+                    help="in-place re-dispatch attempts per failed flush "
+                         "before bisection/quarantine (0 + the other "
+                         "defaults still bisects; see RetryPolicy)")
     return ap.parse_args(argv)
+
+
+def build_fault_plan(args, table_names, requests):
+    """``--inject 'compile:2,poison:1'`` → a seeded FaultPlan (None when
+    no injection was requested)."""
+    if not args.inject:
+        return None
+    from repro.serve.faults import FaultPlan
+
+    counts = {}
+    for part in args.inject.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        kind, _, n = part.partition(":")
+        counts[kind.strip()] = int(n) if n else 1
+    per_table = max(1, requests // max(1, len(table_names)))
+    return FaultPlan.random(
+        args.inject_seed, counts,
+        horizon=max(4, requests // max(1, args.batch_size)),
+        tables=tuple(table_names), max_seq=per_table,
+        hang_s=args.inject_hang_s,
+    )
 
 
 def main(args) -> None:
@@ -144,6 +200,9 @@ def main(args) -> None:
             min_queries=args.replan_min_queries,
             slack_tiles=args.slack_tiles,
         )
+    from repro.serve.faults import RetryPolicy
+
+    fault_plan = build_fault_plan(args, list(tables), args.requests)
     server = ShardedEmbeddingServer(
         tables, histories,
         num_shards=args.shards, mesh=mesh,
@@ -157,6 +216,10 @@ def main(args) -> None:
         owner_set_max=args.owner_set_max,
         max_in_flight=args.max_in_flight,
         threaded=args.threaded,
+        retry=RetryPolicy(max_retries=args.max_retries,
+                          watchdog_s=args.watchdog,
+                          seed=args.inject_seed),
+        faults=fault_plan,
     )
 
     stream = zipf_queries(args.rows, args.requests, args.mean_bag, seed=1234)

@@ -2,6 +2,16 @@ from repro.serve.decode import decode_step
 from repro.serve.kvcache import cache_bytes, init_cache
 from repro.serve.batching import RequestBatcher, ServeMetrics
 from repro.serve.drift import DriftTracker, ReplanConfig
+from repro.serve.faults import (
+    ErrorLedger,
+    FaultInjector,
+    FaultPlan,
+    FaultSpec,
+    FlushTimeout,
+    InjectedFault,
+    PoisonedQueryError,
+    RetryPolicy,
+)
 from repro.serve.scheduler import POOL, FlushPolicy, FlushScheduler
 from repro.serve.sharded import ShardedEmbeddingServer, ShardedServeStats
 
@@ -10,4 +20,6 @@ __all__ = [
     "ServeMetrics", "ShardedEmbeddingServer", "ShardedServeStats",
     "DriftTracker", "ReplanConfig",
     "FlushPolicy", "FlushScheduler", "POOL",
+    "FaultPlan", "FaultSpec", "FaultInjector", "RetryPolicy",
+    "ErrorLedger", "FlushTimeout", "InjectedFault", "PoisonedQueryError",
 ]

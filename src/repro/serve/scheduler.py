@@ -206,6 +206,11 @@ class FlushScheduler:
         self._tick = 0
         self._rr = 0
         self._pool_owners: set = set()
+        #: failure-path accounting (DESIGN.md §8): batches put back by a
+        #: failed dispatch, and queries permanently dropped after
+        #: offender bisection isolated them
+        self.requeues = 0
+        self.quarantined = 0
 
     # ------------------------------------------------------------ routing --
 
@@ -305,6 +310,7 @@ class FlushScheduler:
         """
         if not entries:
             return
+        self.requeues += 1
         self._pending[home] = list(entries) + self._pending.get(home, [])
         self._trackers[home] = {}
         for table, _seq, query in self._pending[home]:
@@ -323,6 +329,12 @@ class FlushScheduler:
             )
         else:
             self._first_tick.setdefault(home, self._tick)
+
+    def record_quarantine(self, n: int) -> None:
+        """Counts ``n`` queries permanently dropped by the server's
+        offender bisection (they were already taken, so there is no
+        pending state to unwind — this is pure accounting)."""
+        self.quarantined += int(n)
 
     # ----------------------------------------------------------- triggers --
 
@@ -412,4 +424,6 @@ class FlushScheduler:
             "pending": {str(h): len(q) for h, q in pending_items if q},
             "union_fill": union_fill,
             "tick": self._tick,
+            "requeues": self.requeues,
+            "quarantined": self.quarantined,
         }

@@ -53,12 +53,26 @@ driver).  ``drain()``/``flush()``/``serve()`` post a barrier token and
 join the driver at it; plan patches still apply only at such barriers.
 A flush failure on the driver requeues its batch (same retry contract)
 and surfaces at the next ``submit()``/``drain()``.
+
+**Self-healing failure policy** (DESIGN.md §8, default on via
+``retry=``): a failed compile/dispatch retries in place with bounded
+exponential backoff + seeded jitter; a batch that keeps failing is
+**bisected** so a single poisoned query is quarantined with its error
+(recorded in the :class:`~repro.serve.faults.ErrorLedger`) instead of
+wedging its home; a flush that exceeds the ``watchdog_s`` deadline is
+timed out and **degraded** to the inline host/reference path, so
+``drain()`` never blocks forever on hung device work.
+``RetryPolicy.legacy()`` restores the requeue-and-re-raise contract.
+The ``faults=`` hook accepts a :class:`~repro.serve.faults.FaultPlan`
+— a deterministic, seeded fault-injection layer wrapping the compile,
+dispatch, retire and patch-apply seams (chaos replay, CI smoke).
 """
 
 from __future__ import annotations
 
 import collections
 import dataclasses
+import math
 import queue
 import threading
 import time
@@ -92,6 +106,13 @@ from repro.kernels.sharded import (
     patch_shard_images,
 )
 from repro.serve.drift import DriftTracker, ReplanConfig
+from repro.serve.faults import (
+    ErrorLedger,
+    FaultInjector,
+    FlushTimeout,
+    RetryPolicy,
+    latency_percentiles as _latency_percentiles,
+)
 from repro.serve.scheduler import POOL, FlushPolicy, FlushScheduler
 
 
@@ -106,18 +127,19 @@ class _InFlight:
     t0: float                              # host compile start (perf_counter)
     n_queries: int
     host_cq: object = None                 # host-materialized fused batch
+    # ---- healing metadata (DESIGN.md §8): the raw batch so a retire-
+    # time fault can re-dispatch it and a watchdog timeout can degrade
+    # it to the host path ----
+    home: object = None
+    entries: Optional[List[tuple]] = None  # raw (table, seq, query) triples
+    participants: Optional[List[int]] = None
+    t_dispatch: float = 0.0                # kernel dispatch (perf_counter)
+    hang_s: Optional[float] = None         # injected hang (None = healthy)
 
 
-def _latency_percentiles(samples: Sequence[float]) -> Dict[str, float]:
-    """p50/p95/p99 of a latency sample list (seconds; zeros when empty)."""
-    if not samples:
-        return {"p50": 0.0, "p95": 0.0, "p99": 0.0}
-    a = np.asarray(samples, dtype=np.float64)
-    return {
-        "p50": float(np.percentile(a, 50)),
-        "p95": float(np.percentile(a, 95)),
-        "p99": float(np.percentile(a, 99)),
-    }
+#: bound of the driver-failure stash (first-in surfaces first; overflow
+#: is counted, never silently dropped) — see _stash_driver_error
+_MAX_STASHED_ERRORS = 8
 
 
 @dataclasses.dataclass
@@ -161,6 +183,8 @@ class ShardedServeStats:
     patched_tiles: int = 0                 # Σ tiles DMA'd by applied patches
     promoted_groups: int = 0
     demoted_groups: int = 0
+    # ---- failure/recovery accounting (DESIGN.md §8) ----
+    ledger: ErrorLedger = dataclasses.field(default_factory=ErrorLedger)
 
     def record(self, sbq, dim: int, wall_s: float, queries: int) -> None:
         cells = sbq.grid_cells_per_shard()
@@ -259,6 +283,7 @@ class ShardedServeStats:
             "patched_tiles": self.patched_tiles,
             "promoted_groups": self.promoted_groups,
             "demoted_groups": self.demoted_groups,
+            "faults": self.ledger.summary(),
         }
 
 
@@ -306,6 +331,15 @@ class ShardedEmbeddingServer:
         bounded hand-off queue and never blocks on a full in-flight
         pipeline; call :meth:`close` (or use the server as a context
         manager) to stop the driver.  Requires an async flush policy.
+      retry: the self-healing policy (DESIGN.md §8) — bounded retries
+        with backoff + jitter, offender bisection/quarantine, and the
+        flush watchdog.  ``None`` uses the :class:`~repro.serve.faults.
+        RetryPolicy` defaults (healing on, watchdog off);
+        ``RetryPolicy.legacy()`` restores requeue-and-re-raise.
+      faults: optional :class:`~repro.serve.faults.FaultPlan` (or a
+        ready injector) wrapping the compile / dispatch / retire /
+        patch-apply seams with deterministic, seeded fault injection —
+        chaos replays and the driver-fault-branch tests.
     """
 
     def __init__(
@@ -331,6 +365,8 @@ class ShardedEmbeddingServer:
         owner_set_max: int | None = None,
         max_in_flight: int = 2,
         threaded: bool = False,
+        retry: RetryPolicy | None = None,
+        faults=None,
     ):
         if set(tables) != set(histories):
             raise ValueError("tables and histories must cover the same names")
@@ -454,12 +490,27 @@ class ShardedEmbeddingServer:
         self._num_rows: Dict[str, int] = {
             n: int(np.asarray(tables[n]).shape[0]) for n in self.names
         }
+        # ---- self-healing failure policy + fault injection (§8) ----
+        self.retry = RetryPolicy.parse(retry)
+        self._injector = FaultInjector.parse(faults)
+        self._retry_rng = np.random.default_rng(self.retry.seed)
+        # host copies of the logical tables: the watchdog's degraded
+        # flush recomputes its rows here (reference gather+sum) — the
+        # same bytes a parameter server holds, like self._fused
+        self._host_tables: Dict[str, np.ndarray] = {
+            n: np.asarray(tables[n]) for n in self.names
+        }
+        self._patch_fail_streak = 0
         # ---- thread driver state (DESIGN.md §7.2); started lazily on
         # the first submit under a threaded policy ----
         self._handoff: Optional[queue.Queue] = None
         self._driver: Optional[threading.Thread] = None
         self._driver_stop = threading.Event()
-        self._driver_error: Optional[BaseException] = None
+        # driver failures stash into a BOUNDED deque: the first error is
+        # surfaced first (with the count of others), overflow beyond the
+        # bound is counted in the ledger instead of silently overwriting
+        self._driver_errors: collections.deque = collections.deque()
+        self._suppressed_errors = 0
 
     # ------------------------------------------------------------ serving --
 
@@ -566,13 +617,33 @@ class ShardedEmbeddingServer:
         against the plan — flush *n*'s outputs were produced entirely
         under the old plan, flush *n+1* runs entirely under the new one
         (no torn state).  Image update DMAs only the moved tiles.
+
+        A patch-apply failure (injected or real, before any state
+        mutates) keeps the patch staged and retries it at the next
+        barrier, up to ``retry.patch_retries`` times — then the patch is
+        dropped (recorded) and serving continues under the live plan.
+        Under the legacy policy the failure re-raises instead.
         """
         if self._staged is None:
             return
         assert not self._in_flight, (
             "plan patch applied mid-pipeline — barrier rule violated"
         )
+        if self._injector is not None:
+            try:
+                self._injector.on_patch()
+            except Exception:
+                self.stats.ledger.patch_failures += 1
+                self._patch_fail_streak += 1
+                if not self.retry.quarantine:
+                    raise
+                if self._patch_fail_streak > self.retry.patch_retries:
+                    self.stats.ledger.patches_dropped += 1
+                    self._staged = None
+                    self._patch_fail_streak = 0
+                return
         patch, self._staged = self._staged, None
+        self._patch_fail_streak = 0
         self.shard_images = patch_shard_images(
             self.shard_images, patch, self._fused
         )
@@ -756,12 +827,15 @@ class ShardedEmbeddingServer:
     def _flush_home(self, home: int, *, forced: bool = False) -> None:
         """Compiles and dispatches one home's pending batch (no block).
 
-        A failed compile/dispatch (e.g. one malformed query) requeues
-        the whole batch in submission order — with its deadline clock
-        intact — before re-raising: the async analogue of the sync
-        path's flush-retry contract.  ``forced`` marks barrier flushes,
-        which are not policy-triggered and must not count as deadline
-        firings.
+        The dispatch goes through the self-healing loop
+        (:meth:`_heal_dispatch`, DESIGN.md §8): transient failures
+        retry in place with backoff, persistent failures bisect down to
+        (and quarantine) single offenders.  Only an error the policy
+        does not absorb (``quarantine=False``, the legacy contract)
+        requeues the whole batch in submission order — with its
+        deadline clock intact — before re-raising.  ``forced`` marks
+        barrier flushes, which are not policy-triggered and must not
+        count as deadline firings.
         """
         if not forced and self.scheduler.due_reason(home) == "deadline":
             self.stats.deadline_flushes += 1
@@ -770,10 +844,73 @@ class ShardedEmbeddingServer:
         if not entries:
             return
         try:
-            entry = self._compile_and_dispatch(entries, participants)
+            admitted = self._heal_dispatch(home, entries, participants)
         except Exception:
             self.scheduler.requeue(home, entries, first_tick=first_tick)
             raise
+        # admission is OUTSIDE the requeue guard: a retire failure while
+        # trimming the pipeline must not requeue a batch that is already
+        # in flight (it would be served twice)
+        for entry in admitted:
+            self._admit(home, entry)
+
+    def _heal_dispatch(self, home, entries, participants) -> List[_InFlight]:
+        """Self-healing dispatch of one batch (DESIGN.md §8).
+
+        State machine: up to ``max_retries`` in-place re-dispatches with
+        jittered exponential backoff; a batch that still fails and
+        holds > 1 queries **bisects** (both halves heal independently —
+        repeated failure converges on single offenders in
+        ``O(log batch)`` rounds); a single query that still fails is
+        **quarantined** with its error in the ledger and dropped, so
+        one poisoned query can never wedge its home.  Under the legacy
+        policy (``quarantine=False``) the terminal error re-raises
+        instead and the caller requeues.  Returns the successfully
+        dispatched entries (metadata attached) for the caller to admit;
+        a healed transient records its first-failure→dispatch recovery
+        latency.
+        """
+        policy = self.retry
+        ledger = self.stats.ledger
+        t_first = None
+        last: Optional[Exception] = None
+        for attempt in range(policy.max_retries + 1):
+            try:
+                entry = self._compile_and_dispatch(entries, participants)
+            except Exception as e:
+                last = e
+                if t_first is None:
+                    t_first = time.perf_counter()
+                if attempt < policy.max_retries:
+                    pause = policy.backoff_s(attempt, self._retry_rng)
+                    ledger.retries += 1
+                    ledger.backoff_s += pause
+                    if pause > 0:
+                        time.sleep(pause)
+                continue
+            if t_first is not None:
+                ledger.record_recovery(time.perf_counter() - t_first)
+            entry.home = home
+            entry.entries = entries
+            entry.participants = participants
+            return [entry]
+        if policy.quarantine and policy.bisect and len(entries) > 1:
+            ledger.bisections += 1
+            mid = len(entries) // 2
+            return (self._heal_dispatch(home, entries[:mid], participants)
+                    + self._heal_dispatch(home, entries[mid:], participants))
+        if policy.quarantine:
+            # terminal: drop the offender(s), keep the home serving.
+            # With bisection on, entries is a single isolated query;
+            # with it off, the whole batch quarantines (recorded).
+            for table, seq, _query in entries:
+                ledger.quarantine(table, seq, last)
+            self.scheduler.record_quarantine(len(entries))
+            return []
+        raise last
+
+    def _admit(self, home, entry: _InFlight) -> None:
+        """Enqueues one dispatched flush and trims the pipeline."""
         self._in_flight.append(entry)
         # peak is sampled at APPEND time — the queue transiently holds
         # max_in_flight + 1 entries before the retire loop below trims
@@ -815,9 +952,15 @@ class ShardedEmbeddingServer:
         happens only at result hand-off (:meth:`_retire_oldest`).
 
         Mutates no engine state besides stats — a raise anywhere leaves
-        the pipeline exactly as it was (the caller requeues).
+        the pipeline exactly as it was (the caller retries or requeues).
+        The fault injector's compile seam fires before the compile and
+        its dispatch seam between compile and kernel dispatch
+        (DESIGN.md §8); an injected hang tags the entry so readiness
+        polling simulates the hung device.
         """
         t0 = time.perf_counter()
+        if self._injector is not None:
+            self._injector.on_compile(entries)
         by_table: Dict[str, Tuple[List[int], List[list]]] = {}
         for table, seq, query in entries:
             seqs, qs = by_table.setdefault(table, ([], []))
@@ -831,6 +974,10 @@ class ShardedEmbeddingServer:
         self.stats.record_compile(
             time.perf_counter() - t0, hidden=self._device_busy()
         )
+        hang_s = (
+            self._injector.on_dispatch() if self._injector is not None
+            else None
+        )
         outs = crossbar_reduce_tables(
             self.shard_images, sbq, spans,
             mesh=self.mesh, axis_name=self.axis_name,
@@ -843,17 +990,108 @@ class ShardedEmbeddingServer:
                   for n in served},
             t0=t0, n_queries=sum(len(by_table[n][1]) for n in served),
             host_cq=host_cq,
+            t_dispatch=time.perf_counter(), hang_s=hang_s,
         )
 
     def _retire_oldest(self) -> None:
-        """Blocks on the oldest in-flight flush and stashes its rows."""
+        """Retires the oldest in-flight flush and stashes its rows.
+
+        The §8 failure seams live here: a watchdog timeout (hung device
+        work) degrades the flush to the host path instead of blocking
+        forever; a retire-time device fault re-enters the healing loop
+        (re-compile + re-dispatch of the same batch) under the default
+        policy, or requeues + re-raises under the legacy one.
+        """
         e = self._in_flight.popleft()
-        outs = [jax.block_until_ready(o) for o in e.outs]
+        try:
+            if self._injector is not None:
+                self._injector.on_retire()
+            outs = self._wait_outputs(e)
+        except FlushTimeout:
+            self._degrade(e)
+            return
+        except Exception:
+            if self.retry.quarantine and e.entries is not None:
+                # late device fault: the outputs are lost but the raw
+                # batch is not — heal it like a dispatch-time failure
+                self.stats.ledger.retries += 1
+                for entry in self._heal_dispatch(
+                    e.home, e.entries, e.participants
+                ):
+                    self._admit(e.home, entry)
+                return
+            if e.entries is not None:
+                # legacy contract: the batch goes back to its home so
+                # the next barrier retries it, then the error surfaces
+                self.scheduler.requeue(e.home, e.entries)
+            raise
         self.stats.record(
             e.sbq, self.dim, time.perf_counter() - e.t0, e.n_queries
         )
         for name, out in zip(e.served, outs):
             self._completed[name].append((e.seqs[name], np.asarray(out)))
+
+    def _wait_outputs(self, e: _InFlight) -> List[np.ndarray]:
+        """Blocks on one flush's outputs, bounded by the watchdog.
+
+        Without a watchdog (and without an injected hang) this is a
+        plain ``block_until_ready``.  With one, readiness is polled and
+        :class:`FlushTimeout` raises once ``watchdog_s`` has elapsed
+        since the flush's kernel DISPATCH — a flush that hung long
+        before the barrier reached it times out immediately.  An
+        injected infinite hang with no watchdog configured also times
+        out (degrading is always preferred to wedging ``drain()``).
+        """
+        wd = self.retry.watchdog_s
+        if wd is None and e.hang_s is None:
+            return [jax.block_until_ready(o) for o in e.outs]
+        while not self._entry_ready(e):
+            waited = time.perf_counter() - e.t_dispatch
+            if wd is not None and waited >= wd:
+                raise FlushTimeout(
+                    f"flush not ready {waited:.3f}s after dispatch "
+                    f"(watchdog {wd}s)"
+                )
+            if wd is None and e.hang_s == math.inf:
+                raise FlushTimeout(
+                    "flush hung forever with no watchdog configured"
+                )
+            time.sleep(self.retry.watchdog_poll_s)
+        return [jax.block_until_ready(o) for o in e.outs]
+
+    def _degrade(self, e: _InFlight) -> None:
+        """Serves one timed-out flush via the inline host/reference path.
+
+        The graceful half of the watchdog: the hung device outputs are
+        abandoned and every query in the flush is recomputed as a host
+        gather+sum over the logical table (the oracle semantics the
+        kernels are pinned against — distinct rows summed, empty bags
+        zero), so ``drain()`` still returns every row.  Recorded as a
+        degraded + timed-out flush in the ledger.
+        """
+        ledger = self.stats.ledger
+        ledger.timed_out_flushes += 1
+        ledger.degraded_flushes += 1
+        if e.entries is None:  # no raw batch — nothing to recompute from
+            raise FlushTimeout(
+                "timed-out flush carries no raw batch to degrade with"
+            )
+        rows_of: Dict[str, Tuple[List[int], List[np.ndarray]]] = {}
+        for table, seq, query in e.entries:
+            ids = np.unique(np.asarray(list(query), dtype=np.int64))
+            tab = self._host_tables[table]
+            row = (tab[ids].sum(axis=0) if ids.size
+                   else np.zeros(self.dim, dtype=tab.dtype))
+            seqs, rows = rows_of.setdefault(table, ([], []))
+            seqs.append(seq)
+            rows.append(row.astype(tab.dtype, copy=False))
+        for table, (seqs, rows) in rows_of.items():
+            self._completed[table].append(
+                (np.asarray(seqs, dtype=np.int64), np.stack(rows))
+            )
+        self.stats.record(
+            e.sbq, self.dim, time.perf_counter() - e.t0, e.n_queries
+        )
 
     def _barrier(self) -> None:
         """Flush-everything + drain + apply any staged patch atomically.
@@ -872,8 +1110,13 @@ class ShardedEmbeddingServer:
         if (self._driver is not None
                 and threading.current_thread() is not self._driver):
             done = threading.Event()
+            driver = self._driver
             self._handoff.put(("barrier", done))
-            done.wait()
+            # never wait forever on a driver that died or was closed
+            # under us — poll its liveness while waiting for the token
+            while not done.wait(0.1):
+                if self._driver is not driver or not driver.is_alive():
+                    break
             self._raise_driver_error()
             return
         for home in self.scheduler.homes_with_pending():
@@ -912,17 +1155,15 @@ class ShardedEmbeddingServer:
             except queue.Empty:
                 try:
                     self._retire_ready()
-                except Exception as e:  # pragma: no cover - device fault
-                    if self._driver_error is None:
-                        self._driver_error = e
+                except Exception as e:  # device fault surfacing at retire
+                    self._stash_driver_error(e)
                 continue
             if item[0] == "barrier":
                 done = item[1]
                 try:
                     self._barrier()
                 except Exception as e:
-                    if self._driver_error is None:
-                        self._driver_error = e
+                    self._stash_driver_error(e)
                 finally:
                     done.set()
                 continue
@@ -933,17 +1174,31 @@ class ShardedEmbeddingServer:
             except Exception as e:
                 # the batch is already requeued; surface the failure at
                 # the caller's next submit()/drain() (retry contract)
-                if self._driver_error is None:
-                    self._driver_error = e
+                self._stash_driver_error(e)
 
     def _retire_ready(self) -> None:
         """Retires in-flight flushes whose outputs are already
-        materialized, oldest-first (hand-off order preserved)."""
+        materialized, oldest-first (hand-off order preserved).  With a
+        watchdog configured, a hung HEAD entry past its deadline is
+        retired proactively here (taking the timeout/degrade path) so
+        a stuck flush degrades while the driver idles, not only when a
+        barrier finally reaches it."""
         while self._in_flight and self._entry_ready(self._in_flight[0]):
+            self._retire_oldest()
+        wd = self.retry.watchdog_s
+        if (wd is not None and self._in_flight
+                and time.perf_counter() - self._in_flight[0].t_dispatch >= wd):
             self._retire_oldest()
 
     @staticmethod
     def _entry_ready(e: _InFlight) -> bool:
+        # an injected hang simulates a device that never reports ready
+        # until hang_s has elapsed since dispatch (math.inf = never) —
+        # the watchdog path is exercised without wedging real hardware
+        if e.hang_s is not None and (
+            time.perf_counter() - e.t_dispatch
+        ) < e.hang_s:
+            return False
         for o in e.outs:
             try:
                 if not o.is_ready():
@@ -952,23 +1207,71 @@ class ShardedEmbeddingServer:
                 continue
         return True
 
+    def _stash_driver_error(self, e: BaseException) -> None:
+        """Stashes one driver failure for the caller's thread, bounded.
+
+        The first failure is what the caller sees first; later ones
+        queue behind it (up to :data:`_MAX_STASHED_ERRORS`) instead of
+        silently overwriting, and overflow beyond the bound is counted
+        in the ledger — never dropped without trace.
+        """
+        if len(self._driver_errors) < _MAX_STASHED_ERRORS:
+            self._driver_errors.append(e)
+        else:
+            self._suppressed_errors += 1
+            self.stats.ledger.driver_errors_suppressed += 1
+
     def _raise_driver_error(self) -> None:
-        """Re-raises (once) a failure stashed by the driver thread."""
-        if self._driver_error is not None:
-            err, self._driver_error = self._driver_error, None
-            raise err
+        """Re-raises the OLDEST failure stashed by the driver thread.
+
+        The message carries the count of further failures still stashed
+        (and of any suppressed past the bound) so a burst of errors is
+        never mistaken for a single one; each later
+        ``submit()``/``drain()`` surfaces the next.
+        """
+        if not self._driver_errors:
+            return
+        err = self._driver_errors.popleft()
+        more = len(self._driver_errors) + self._suppressed_errors
+        if more and err.args and isinstance(err.args[0], str):
+            suppressed = (
+                f", {self._suppressed_errors} suppressed past the stash "
+                f"bound" if self._suppressed_errors else ""
+            )
+            err.args = (
+                f"{err.args[0]} [+{more} more driver failure(s) "
+                f"stashed{suppressed}]",
+            ) + err.args[1:]
+        raise err
+
+    #: driver join bound at close(); a driver stuck in un-watchdogged
+    #: device work is abandoned (daemon thread) rather than wedging the
+    #: caller, and the leak is recorded in the ledger's lost-work summary
+    _CLOSE_JOIN_S = 30.0
 
     def close(self) -> None:
         """Stops the thread driver (if running).  Any hand-off items the
         driver had not yet popped are pushed back into the scheduler,
         so no submitted query (or its stamped sequence id) is ever
-        dropped — a later :meth:`drain` serves them inline.  Idempotent;
-        the server remains usable (a later submit restarts the driver).
+        dropped — a later :meth:`drain` serves them inline.
+
+        Idempotent and bounded: a second ``close()`` is a no-op, the
+        driver join can never hang past :data:`_CLOSE_JOIN_S` (a driver
+        wedged in un-watchdogged device work is abandoned — it is a
+        daemon thread — and recorded), and any work still unserved at
+        close (requeued batches, pushed-back hand-off items, unretired
+        in-flight flushes) is summarized into the ledger's
+        ``lost_work`` instead of silently discarded — it stays queued,
+        so a later :meth:`drain` still serves it (the server remains
+        usable; a later submit restarts the driver).
         """
+        leaked = False
         if self._driver is not None:
             self._driver_stop.set()
-            self._driver.join(timeout=30.0)
+            self._driver.join(timeout=self._CLOSE_JOIN_S)
+            leaked = self._driver.is_alive()
             self._driver = None
+        pushed_back = 0
         if self._handoff is not None:
             while True:
                 try:
@@ -982,6 +1285,18 @@ class ShardedEmbeddingServer:
                 else:
                     _, table, seq, query_list = item
                     self.scheduler.push(table, seq, query_list)
+                    pushed_back += 1
+            self._handoff = None
+        unserved = {
+            "requeued": (self.scheduler.pending_total()
+                         if self.scheduler is not None else self._buffered),
+            "handoff_pushed_back": pushed_back,
+            "in_flight": len(self._in_flight),
+            "stashed_errors": len(self._driver_errors),
+            "driver_leaked": int(leaked),
+        }
+        if any(unserved.values()):
+            self.stats.ledger.lost_work = unserved
 
     def __enter__(self) -> "ShardedEmbeddingServer":
         return self
@@ -1040,6 +1355,12 @@ class ShardedEmbeddingServer:
             (:meth:`ShardedServeStats.summary`), including the replan
             counters.
           * ``mode`` — ``"shard_map"`` or ``"emulated"``.
+          * ``retry`` — the live :class:`~repro.serve.faults.
+            RetryPolicy` knobs; the matching error ledger rides inside
+            ``serve["faults"]`` (retries, backoff, quarantined queries,
+            degraded/timed-out flushes, lost work at close).
+          * ``faults`` — fault-injection plan + per-seam attempt/
+            injection counters (only when a ``faults=`` plan is set).
           * ``replan`` — drift/replanning state (only when enabled):
             current drift vs the live plan, tracker readiness, staged
             patch summary if one is waiting for the next flush.
@@ -1049,7 +1370,10 @@ class ShardedEmbeddingServer:
             "plan": self.plan.memory_summary(),
             "serve": self.stats.summary(),
             "mode": "shard_map" if self.mesh is not None else "emulated",
+            "retry": dataclasses.asdict(self.retry),
         }
+        if self._injector is not None:
+            rep["faults"] = self._injector.summary()
         if self.scheduler is not None:
             rep["scheduler"] = {
                 "policy": self.policy.kind,

@@ -1,8 +1,23 @@
-"""Test bootstrap: fall back to the deterministic hypothesis stub when the
-real `hypothesis` package is absent (this container does not ship it; the
-CI workflow installs the real one when available)."""
+"""Test bootstrap.
 
+* Falls back to the deterministic hypothesis stub when the real
+  `hypothesis` package is absent (this container does not ship it; the
+  CI workflow installs the real one when available).
+* Provides a stdlib per-test hang watchdog when `pytest-timeout` is
+  absent: CI passes ``--timeout=600 --timeout-method=thread`` via
+  ``PYTEST_ADDOPTS`` (a wedged driver thread or never-retiring flush
+  must fail fast with a traceback, not hang the job for 45 minutes),
+  and this fallback keeps the same protection — via
+  ``faulthandler.dump_traceback_later(exit=True)`` — in environments
+  where the plugin cannot be installed.  The budget comes from
+  ``RECROSS_TEST_TIMEOUT_S`` (default 600; 0 disables).
+"""
+
+import faulthandler
+import os
 import sys
+
+import pytest
 
 try:
     import hypothesis  # noqa: F401
@@ -11,3 +26,38 @@ except ImportError:
 
     sys.modules["hypothesis"] = _hypothesis_stub
     sys.modules["hypothesis.strategies"] = _hypothesis_stub.strategies
+
+try:
+    import pytest_timeout  # noqa: F401
+
+    _HAVE_PYTEST_TIMEOUT = True
+except ImportError:
+    _HAVE_PYTEST_TIMEOUT = False
+    # the plugin is absent, so its --timeout/--timeout-method options
+    # (e.g. from a CI-wide PYTEST_ADDOPTS) would make pytest error out
+    # at startup — swallow them and let the faulthandler fallback honor
+    # the same budget
+    _TIMEOUT_S = float(os.environ.get("RECROSS_TEST_TIMEOUT_S", 600))
+
+    def pytest_addoption(parser):
+        parser.addoption("--timeout", type=float, default=None)
+        parser.addoption("--timeout-method", default="thread")
+
+    def pytest_configure(config):
+        global _TIMEOUT_S
+        opt = config.getoption("--timeout", default=None)
+        if opt is not None:
+            _TIMEOUT_S = float(opt)
+
+    @pytest.hookimpl(hookwrapper=True)
+    def pytest_runtest_protocol(item, nextitem):
+        if _TIMEOUT_S > 0:
+            # dumps every thread's traceback and kills the process if
+            # the test (setup+call+teardown) exceeds the budget — the
+            # closest stdlib analogue of pytest-timeout's thread method
+            faulthandler.dump_traceback_later(_TIMEOUT_S, exit=True)
+        try:
+            yield
+        finally:
+            if _TIMEOUT_S > 0:
+                faulthandler.cancel_dump_traceback_later()

@@ -30,7 +30,7 @@ from repro.core.reduction import reduce_dense_oracle
 from repro.data import zipf_queries
 from repro.dist import build_fused_image, plan_shards
 from repro.kernels import crossbar_reduce_sharded
-from repro.serve import FlushPolicy, ShardedEmbeddingServer
+from repro.serve import FlushPolicy, RetryPolicy, ShardedEmbeddingServer
 from repro.serve.drift import ReplanConfig
 
 EQ1_BATCH = 64
@@ -256,13 +256,15 @@ def test_failed_async_flush_requeues_batch():
     """A failed flush must not drop its batch: a malformed query is
     rejected at routing time (nothing enqueued), and a dispatch-time
     failure requeues the whole batch for retry — the async analogue of
-    the sync flush's leave-buffered-on-failure contract."""
+    the sync flush's leave-buffered-on-failure contract.  Pinned on
+    ``RetryPolicy.legacy()``: the default self-healing policy retries
+    in place instead of requeue-and-re-raise (test_faults.py)."""
     rows, dim = 160, 128
     tables = {"a": _int_table(rows, dim, 40)}
     histories = {"a": zipf_queries(rows, 48, 5.0, seed=41)}
     srv = ShardedEmbeddingServer(
         tables, histories, num_shards=1, q_block=4, group_size=16,
-        batch_size=8, flush_policy="per-shard",
+        batch_size=8, flush_policy="per-shard", retry=RetryPolicy.legacy(),
     )
     good = zipf_queries(rows, 7, 5.0, seed=42)
     for q in good:
@@ -386,13 +388,14 @@ def test_seq_reset_guarded_by_requeued_entries():
     """drain() restarts sequence ids ONLY when nothing requeued is still
     carrying the old ones — a reset with a failed flush's entries alive
     would hand new submissions colliding seqs and scramble the argsort
-    row order of the next drain."""
+    row order of the next drain.  Pinned on ``RetryPolicy.legacy()``:
+    only the legacy policy requeues (healing retries in place)."""
     rows, dim = 160, 128
     tables = {"a": _int_table(rows, dim, 58)}
     histories = {"a": zipf_queries(rows, 48, 5.0, seed=59)}
     srv = ShardedEmbeddingServer(
         tables, histories, num_shards=1, q_block=4, group_size=16,
-        batch_size=8, flush_policy="per-shard",
+        batch_size=8, flush_policy="per-shard", retry=RetryPolicy.legacy(),
     )
     good = zipf_queries(rows, 7, 5.0, seed=60)
     for q in good:
@@ -644,7 +647,9 @@ def test_thread_driver_submit_is_enqueue_only():
 def test_thread_driver_surfaces_failures_and_retries():
     """A flush failure on the driver thread requeues its batch and
     surfaces at the next submit()/drain(); a later drain retries the
-    requeued work and returns every row in submission order."""
+    requeued work and returns every row in submission order.  Pinned on
+    ``RetryPolicy.legacy()`` — the default policy heals on the driver
+    thread without surfacing (test_faults.py)."""
     import time as _time
 
     rows, dim = 160, 128
@@ -653,6 +658,7 @@ def test_thread_driver_surfaces_failures_and_retries():
     srv = ShardedEmbeddingServer(
         tables, histories, num_shards=1, q_block=4, group_size=16,
         batch_size=8, flush_policy="per-shard", threaded=True,
+        retry=RetryPolicy.legacy(),
     )
     calls = {"n": 0}
     orig = srv._compile_and_dispatch
@@ -668,9 +674,9 @@ def test_thread_driver_surfaces_failures_and_retries():
     for q in stream[:8]:
         srv.submit("a", q)  # 8th trips the flush on the driver → fails
     deadline = _time.monotonic() + 10.0
-    while srv._driver_error is None and _time.monotonic() < deadline:
+    while not srv._driver_errors and _time.monotonic() < deadline:
         _time.sleep(0.005)
-    assert srv._driver_error is not None, "driver never recorded the failure"
+    assert srv._driver_errors, "driver never recorded the failure"
     with pytest.raises(RuntimeError, match="transient device error"):
         srv.drain()
     out = srv.drain()  # retry: the requeued batch flushes cleanly now
