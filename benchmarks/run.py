@@ -24,6 +24,7 @@ from benchmarks import (
     replan_bench,
     scheduler_bench,
     serving_bench,
+    tier_bench,
 )
 from benchmarks.common import emit
 
@@ -42,6 +43,7 @@ MODULES = {
     "replan": replan_bench,
     "scheduler": scheduler_bench,
     "chaos": chaos_bench,
+    "tiers": tier_bench,
 }
 
 

@@ -217,7 +217,7 @@ def run() -> list:
     # committed record.
     update_bench_json(
         bench_json_path(JSON_PATH, full_scale=FULL_SCALE),
-        record, preserve=["replan", "scheduler"],
+        record, preserve=["replan", "scheduler", "chaos", "tiers"],
     )
 
     rows_out.append({

@@ -321,6 +321,16 @@ def shard_block_queries(
     vblk = vq // q_block
     shard_of_tile = np.asarray(plan.shard_of_tile)
     own = shard_of_tile[vt].astype(np.int64)
+    # cold (host-tier) tiles are held by NO shard — a capacity-bounded
+    # plan serves them via the host gather+sum path, and the server's
+    # residency router must divert such queries before compile.  -2 is
+    # repro.dist.shard_plan.COLD (literal here: repro.core stays free of
+    # a repro.dist import).
+    if (own == -2).any():
+        raise ValueError(
+            "batch activates cold (host-tier) tiles; cold queries must "
+            "take the host gather+sum path, not the crossbar kernels"
+        )
     # replicated-everywhere tiles: block-level round robin over the
     # participating shards (degrades to "the one flushing shard owns
     # everything" for a single-shard flush)

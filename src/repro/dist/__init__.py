@@ -20,12 +20,14 @@ demote cooled ones, DMA only the moved tiles (DESIGN.md §6).
 from repro.dist import sharding
 from repro.dist import pipeline_parallel
 from repro.dist.replan import (
+    PagingPolicy,
     PlanPatch,
     apply_plan_patch,
     compute_plan_patch,
     rescale_load_to_plan,
 )
 from repro.dist.shard_plan import (
+    COLD,
     ShardPlan,
     TableSegment,
     build_fused_image,
@@ -34,7 +36,7 @@ from repro.dist.shard_plan import (
 
 __all__ = [
     "sharding", "pipeline_parallel",
-    "ShardPlan", "TableSegment", "build_fused_image", "plan_shards",
-    "PlanPatch", "apply_plan_patch", "compute_plan_patch",
+    "COLD", "ShardPlan", "TableSegment", "build_fused_image", "plan_shards",
+    "PagingPolicy", "PlanPatch", "apply_plan_patch", "compute_plan_patch",
     "rescale_load_to_plan",
 ]

@@ -37,17 +37,54 @@ only the ``dma`` triples move tile data, never the full image.
 ``tests/test_replan.py`` pins patched-plan serving bit-identical to a
 from-scratch ``plan_shards(..., eq1_batch=...)`` rebuild on the drifted
 frequencies.
+
+**Paging** (DESIGN.md §9): when the plan was built under a
+``capacity_tiles`` hot-tier budget, passing a :class:`PagingPolicy`
+extends the patch with **fetch** (cold group pages into the hot tier —
+one master-image DMA per tile) and **evict** (a cooled resident group
+pages out — its slots return to the free-list, no data moves: the host
+master is authoritative).  A swap is hysteresis-gated — the incoming
+group's load must exceed ``hysteresis ×`` the victim's — so a pair of
+groups oscillating around equal load cannot thrash in and out every
+barrier.  Under paging the capacity is FIXED: promotions that would
+grow the image are deferred instead, and slack age-out is skipped.
 """
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
 from typing import List, Tuple
 
 import numpy as np
 
 from repro.core.replication import log_scaled_copies
-from repro.dist.shard_plan import ShardPlan
+from repro.dist.shard_plan import COLD, ShardPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class PagingPolicy:
+    """Hot-tier paging knobs consumed by :func:`compute_plan_patch`.
+
+    Attributes:
+      capacity_tiles: the per-shard hot-tier budget (slots per shard
+        image).  Fixed for the lifetime of the server — paging swaps
+        within it, never grows it.
+      hysteresis: a cold group may displace a resident victim only when
+        ``load[in] > hysteresis · load[victim]``.  Values > 1 make the
+        reverse swap immediately impossible (it would require
+        ``load[victim] > hysteresis² · load[victim]``), which is the
+        anti-thrash guarantee.
+      max_fetch_tiles: optional cap on tiles paged IN per patch, to
+        bound the DMA stall at one flush barrier (None: unbounded).
+      min_fetch_load: a cold group pages in only when its decayed load
+        exceeds this (0.0: any observed traffic qualifies).
+    """
+
+    capacity_tiles: int
+    hysteresis: float = 1.5
+    max_fetch_tiles: int | None = None
+    min_fetch_load: float = 0.0
 
 
 @dataclasses.dataclass
@@ -77,6 +114,16 @@ class PlanPatch:
       drifted_load: the ``(G,)`` fused-group load snapshot the patch was
         computed on; becomes the patched plan's ``group_load`` so the
         drift statistic re-anchors to the new placement.
+      fetched: ``(fused group id, shard)`` pairs paging cold →
+        sharded-once resident (tiered storage only).
+      evicted: fused group ids paging sharded-once → cold; their slots
+        land on ``freed`` (no data movement — the host master image is
+        authoritative, so page-out is free).
+      fetch_dma: ``(shard, local_slot, fused_tile)`` triples for the
+        paged-in tiles — like ``dma`` but sourced by the paging path,
+        kept separate so paged-tile/byte accounting is exact.
+      evicted_tiles: Σ copies over ``evicted`` (slot-count the
+        evictions return to the free-list).
     """
 
     promoted: List[int]
@@ -88,10 +135,22 @@ class PlanPatch:
     moved: List[Tuple[int, int, int, int]] = dataclasses.field(
         default_factory=list
     )
+    fetched: List[Tuple[int, int]] = dataclasses.field(default_factory=list)
+    evicted: List[int] = dataclasses.field(default_factory=list)
+    fetch_dma: List[Tuple[int, int, int]] = dataclasses.field(
+        default_factory=list
+    )
+    evicted_tiles: int = 0
 
     @property
     def num_moved_groups(self) -> int:
         return len(self.promoted) + len(self.demoted)
+
+    @property
+    def num_paged_tiles(self) -> int:
+        """Tiles paged across the host↔device boundary: fetches DMA
+        data in; evictions only free slots but count as paging events."""
+        return len(self.fetch_dma) + self.evicted_tiles
 
     @property
     def num_moved_tiles(self) -> int:
@@ -105,10 +164,12 @@ class PlanPatch:
         return len(self.moved)
 
     def is_noop(self) -> bool:
-        """True when drift changed no replication class AND no tile
-        relocated (rebase only) — the only patches safe to apply
-        without the image update, since they touch no device state."""
-        return not (self.promoted or self.demoted or self.moved)
+        """True when drift changed no replication class, no tile
+        relocated AND nothing paged (rebase only) — the only patches
+        safe to apply without the image update, since they touch no
+        device state."""
+        return not (self.promoted or self.demoted or self.moved
+                    or self.fetched or self.evicted)
 
     def summary(self) -> dict:
         return {
@@ -118,6 +179,10 @@ class PlanPatch:
             "relocated_tiles": self.num_relocated_tiles,
             "freed_slots": len(self.freed),
             "new_capacity": self.new_capacity,
+            "fetched_groups": len(self.fetched),
+            "evicted_groups": len(self.evicted),
+            "fetched_tiles": len(self.fetch_dma),
+            "evicted_tiles": self.evicted_tiles,
         }
 
 
@@ -173,6 +238,7 @@ def compute_plan_patch(
     eq1_batch: int,
     capacity: int | None = None,
     shrink_slack: int | None = None,
+    paging: PagingPolicy | None = None,
 ) -> PlanPatch:
     """Diffs the live plan against Eq. 1 evaluated on the drifted load.
 
@@ -191,7 +257,14 @@ def compute_plan_patch(
         of staying at the high-water mark.  The server requests this
         after long demotion streaks so the slot free-list shrinks back
         instead of growing monotonically; never raises capacity above
-        what the patch itself requires.
+        what the patch itself requires.  Ignored under ``paging``
+        (tiered capacity is fixed).
+      paging: a :class:`PagingPolicy` for capacity-bounded plans.  When
+        set, the patch additionally pages cold groups in (``fetched`` /
+        ``fetch_dma``) and cooled residents out (``evicted``) within
+        the fixed ``paging.capacity_tiles`` budget, hysteresis-gated;
+        promotions that would exceed the budget are deferred instead of
+        growing the image.
 
     Returns:
       A :class:`PlanPatch`.  Pure host-side computation — no device
@@ -208,7 +281,9 @@ def compute_plan_patch(
     S = plan.num_shards
     tile_base = _group_tile_base(plan)
     copies = plan.group_copies
-    if capacity is None:
+    if paging is not None:
+        capacity = int(paging.capacity_tiles)
+    elif capacity is None:
         capacity = plan.max_local_tiles
 
     # target replicated set: Eq. 1 on the drifted load, per table segment
@@ -218,7 +293,11 @@ def compute_plan_patch(
         gs = slice(seg.group_offset, seg.group_offset + seg.num_groups)
         target[gs] = log_scaled_copies(load[gs], eq1_batch) >= max(S, 2)
 
-    promoted = np.nonzero(target & ~plan.replicated_group)[0]
+    # cold (host-only) groups cannot jump straight to replicated: they
+    # must page in first (sharded-once), and may promote a later patch
+    promoted = np.nonzero(
+        target & ~plan.replicated_group & plan.resident_group
+    )[0]
     demote_ids = np.nonzero(~target & plan.replicated_group)[0]
 
     # drifted load + resident-tile pressure of the placement that stays
@@ -277,9 +356,19 @@ def compute_plan_patch(
     grow = [capacity] * S
     dma: List[Tuple[int, int, int]] = []
     dma_index: dict = {}                   # (shard, slot) → index into dma
+    kept_promoted: List[int] = []
     for g in promoted.tolist():
         owner = int(plan.shard_of_group[g])
-        for t in range(int(tile_base[g]), int(tile_base[g] + copies[g])):
+        c = int(copies[g])
+        if paging is not None and any(
+            len(free[s]) < c for s in range(S) if s != owner
+        ):
+            # fixed hot-tier budget: a promotion that would grow the
+            # image is deferred (the group stays sharded-once; Eq. 1
+            # will re-target it once evictions open slots)
+            continue
+        kept_promoted.append(g)
+        for t in range(int(tile_base[g]), int(tile_base[g] + c)):
             for s in range(S):
                 if s == owner:
                     continue
@@ -291,9 +380,94 @@ def compute_plan_patch(
                 slot_tile[s][slot] = t
                 dma_index[(s, slot)] = len(dma)
                 dma.append((s, slot, t))
+    promoted = np.asarray(kept_promoted, dtype=np.int64)
+
+    # ---- paging (tiered storage, DESIGN.md §9): swap the drifted-hot
+    # cold groups into the fixed budget, hysteresis-gated ---------------
+    fetched: List[Tuple[int, int]] = []
+    evicted: List[int] = []
+    fetch_dma: List[Tuple[int, int, int]] = []
+    evicted_tiles = 0
+    if paging is not None:
+        # post-patch owner map (promotions → -1, demotions → new owner)
+        own = plan.shard_of_group.copy()
+        for g, o in demoted:
+            own[g] = o
+        own[promoted] = -1
+        # eviction candidates: sharded-once residents per shard,
+        # coldest first (a group fetched THIS patch is not a candidate —
+        # within-patch anti-thrash on top of the hysteresis gate)
+        victims: List[List[Tuple[float, int]]] = [[] for _ in range(S)]
+        for g in np.nonzero(own >= 0)[0].tolist():
+            victims[int(own[g])].append((float(load[g]), g))
+        for s in range(S):
+            victims[s].sort()
+        vpos = [0] * S                      # consumed prefix per shard
+        cold_ids = np.nonzero(own == COLD)[0]
+        cold_ids = cold_ids[load[cold_ids] > paging.min_fetch_load]
+        cold_order = cold_ids[np.argsort(-load[cold_ids], kind="stable")]
+        for g in cold_order.tolist():
+            c = int(copies[g])
+            if (paging.max_fetch_tiles is not None
+                    and len(fetch_dma) + c > paging.max_fetch_tiles):
+                break
+            fits = [s for s in range(S) if len(free[s]) >= c]
+            if fits:
+                s = min(fits, key=lambda i: (shard_load[i], shard_tiles[i], i))
+            else:
+                # pick the shard whose coldest victims free ≥ c slots at
+                # the least evicted load, every victim hysteresis-gated
+                best = None               # (victim load Σ, shard, victims)
+                for cs in range(S):
+                    have = len(free[cs])
+                    picks: List[int] = []
+                    vload = 0.0
+                    pos = vpos[cs]
+                    while have < c and pos < len(victims[cs]):
+                        lv, gv = victims[cs][pos]
+                        if load[g] <= paging.hysteresis * lv:
+                            break         # not hot enough to displace
+                        picks.append(gv)
+                        vload += lv
+                        have += int(copies[gv])
+                        pos += 1
+                    if have >= c and (best is None or (vload, cs) < best[:2]):
+                        best = (vload, cs, picks, pos)
+                if best is None:
+                    continue              # nothing evictable for this one
+                _, s, picks, pos = best
+                vpos[s] = pos
+                for gv in picks:
+                    o = int(own[gv])
+                    for t in range(int(tile_base[gv]),
+                                   int(tile_base[gv] + copies[gv])):
+                        slot = int(plan.local_tile_of[o, t])
+                        if slot < 0:
+                            raise ValueError(
+                                f"evicting group {gv}: shard {o} does not "
+                                f"hold tile {t}"
+                            )
+                        del slot_tile[o][slot]
+                        bisect.insort(free[o], slot)
+                        freed.append((o, slot))
+                    evicted.append(gv)
+                    evicted_tiles += int(copies[gv])
+                    own[gv] = COLD
+                    shard_load[o] -= float(load[gv])
+                    shard_tiles[o] -= int(copies[gv])
+            for t in range(int(tile_base[g]), int(tile_base[g] + c)):
+                slot = free[s].pop(0)
+                slot_tile[s][slot] = t
+                fetch_dma.append((s, slot, t))
+            fetched.append((g, s))
+            own[g] = s
+            shard_load[s] += float(load[g])
+            shard_tiles[s] += c
+
     new_capacity = max(grow)
     moved: List[Tuple[int, int, int, int]] = []
-    if shrink_slack is not None and new_capacity <= capacity:
+    if (shrink_slack is not None and paging is None
+            and new_capacity <= capacity):
         # slack age-out: compact the stack down to the busiest shard's
         # resident count + requested headroom.  Tiles above the new
         # depth relocate into free holes below it (one master-image DMA
@@ -326,6 +500,10 @@ def compute_plan_patch(
         new_capacity=new_capacity,
         drifted_load=load.copy(),
         moved=moved,
+        fetched=fetched,
+        evicted=evicted,
+        fetch_dma=fetch_dma,
+        evicted_tiles=evicted_tiles,
     )
 
 
@@ -356,14 +534,37 @@ def apply_plan_patch(plan: ShardPlan, patch: PlanPatch) -> ShardPlan:
                 if s != o and local[s, t] >= 0:
                     local[s, t] = -1
                     nloc[s] -= 1
+    for g in patch.evicted:
+        o = int(shard_of_group[g])
+        if replicated[g] or o < 0:
+            raise ValueError(
+                f"evicting group {g} which is not sharded-once resident"
+            )
+        shard_of_group[g] = COLD
+        for t in range(int(tile_base[g]), int(tile_base[g] + copies[g])):
+            if local[o, t] < 0:
+                raise ValueError(
+                    f"evicting group {g}: shard {o} does not hold tile {t}"
+                )
+            shard_of_tile[t] = COLD
+            local[o, t] = -1
+            nloc[o] -= 1
     for g in patch.promoted:
         if replicated[g]:
             raise ValueError(f"promoting group {g} which is already replicated")
+        if shard_of_group[g] == COLD:
+            raise ValueError(f"promoting group {g} which is cold (fetch first)")
         replicated[g] = True
         shard_of_group[g] = -1
         ts = slice(int(tile_base[g]), int(tile_base[g] + copies[g]))
         shard_of_tile[ts] = -1
-    for s, slot, t in patch.dma:
+    for g, o in patch.fetched:
+        if shard_of_group[g] != COLD:
+            raise ValueError(f"fetching group {g} which is already resident")
+        shard_of_group[g] = o
+        ts = slice(int(tile_base[g]), int(tile_base[g] + copies[g]))
+        shard_of_tile[ts] = o
+    for s, slot, t in list(patch.dma) + list(patch.fetch_dma):
         if local[s, t] >= 0:
             raise ValueError(f"shard {s} already holds fused tile {t}")
         local[s, t] = slot
@@ -386,4 +587,5 @@ def apply_plan_patch(plan: ShardPlan, patch: PlanPatch) -> ShardPlan:
         local_num_tiles=nloc,
         group_load=patch.drifted_load.copy(),
         group_copies=copies,
+        capacity_tiles=plan.capacity_tiles,
     )

@@ -30,6 +30,16 @@ Plans are not immutable at serve time: :mod:`repro.dist.replan` edits
 the placement arrays *incrementally* when serve-time access frequencies
 drift (DESIGN.md §6).  The fields a patch may touch and the fields that
 stay frozen are spelled out there.
+
+**Tiered storage** (DESIGN.md §9): when ``plan_shards`` is given a
+``capacity_tiles`` budget, the shard images become a *hot tier* — a
+capacity-bounded cache over the host-resident fused master image.  Only
+the hottest groups (by load, greedy while the per-shard budget lasts)
+are planned resident; the rest are **cold**: ``shard_of_group`` /
+``shard_of_tile`` hold the :data:`COLD` sentinel (-2) and no shard
+allocates a local slot.  Cold groups are served by the host gather+sum
+fallback and can be paged in later by :mod:`repro.dist.replan`
+fetch/evict patches.
 """
 
 from __future__ import annotations
@@ -45,6 +55,11 @@ from repro.core.replication import (
     log_scaled_copies,
     shard_replication_sets,
 )
+
+# ``shard_of_group`` / ``shard_of_tile`` sentinel for groups outside the
+# hot tier (host-resident only).  Distinct from -1 (replicated on every
+# shard): -1 tiles are held everywhere, COLD tiles are held nowhere.
+COLD = -2
 
 
 @dataclasses.dataclass
@@ -72,10 +87,11 @@ class ShardPlan:
       tables: per-table segments of the fused id spaces, in input order.
       replicated_group: ``(G,)`` bool — True where the group is stored on
         every shard (fused group ids).
-      shard_of_group: ``(G,)`` int32 — owning shard, -1 for replicated.
+      shard_of_group: ``(G,)`` int32 — owning shard, -1 for replicated,
+        :data:`COLD` (-2) for groups outside the hot tier (host-only).
       shard_of_tile: ``(T,)`` int32 — owning shard per fused physical
         tile, -1 for replicated (consumed as the ownership rule by the
-        block compiler).
+        block compiler), :data:`COLD` for host-only tiles.
       local_tile_of: ``(num_shards, T)`` int32 — fused tile id → local
         tile id on that shard, -1 where the shard does not hold the tile.
       local_num_tiles: ``(num_shards,)`` — tiles resident per shard
@@ -89,6 +105,8 @@ class ShardPlan:
         ``cumsum(group_copies)[g-1]`` — the layout invariant
         :func:`plan_shards` pins.  Consumed by
         :func:`repro.dist.replan.compute_plan_patch`.
+      capacity_tiles: per-shard hot-tier budget the plan was built under
+        (None: unbounded — every group resident, no cold tier).
     """
 
     num_shards: int
@@ -100,6 +118,7 @@ class ShardPlan:
     local_num_tiles: np.ndarray
     group_load: np.ndarray
     group_copies: np.ndarray | None = None
+    capacity_tiles: int | None = None
 
     @property
     def num_groups(self) -> int:
@@ -124,7 +143,22 @@ class ShardPlan:
 
     @property
     def replicated_tiles(self) -> int:
-        return int((self.shard_of_tile < 0).sum())
+        return int((self.shard_of_tile == -1).sum())
+
+    @property
+    def resident_group(self) -> np.ndarray:
+        """``(G,)`` bool — True where the group is in the hot tier
+        (replicated or sharded-once); False for cold (host-only)."""
+        return self.shard_of_group != COLD
+
+    @property
+    def cold_groups(self) -> np.ndarray:
+        """Fused group ids outside the hot tier (host-resident only)."""
+        return np.nonzero(self.shard_of_group == COLD)[0]
+
+    @property
+    def cold_tiles(self) -> int:
+        return int((self.shard_of_tile == COLD).sum())
 
     def shard_tiles(self, shard: int) -> np.ndarray:
         """Fused tile ids resident on ``shard``, in local-tile order."""
@@ -165,11 +199,17 @@ class ShardPlan:
 
     def memory_summary(self) -> dict:
         """Tile residency accounting (replication overhead of the plan)."""
-        sharded_tiles = self.num_tiles - self.replicated_tiles
+        cold = self.cold_tiles
+        sharded_tiles = self.num_tiles - self.replicated_tiles - cold
         stored = sharded_tiles + self.replicated_tiles * self.num_shards
         return {
             "num_tiles": self.num_tiles,
             "replicated_tiles": self.replicated_tiles,
+            "cold_tiles": cold,
+            "cold_groups": int((self.shard_of_group == COLD).sum()),
+            "capacity_tiles": self.capacity_tiles,
+            "resident_tile_fraction":
+                (self.num_tiles - cold) / max(self.num_tiles, 1),
             "stored_tiles": stored,
             "storage_ratio": stored / max(self.num_tiles, 1),
             "local_num_tiles": self.local_num_tiles.tolist(),
@@ -207,6 +247,7 @@ def plan_shards(
     names: Sequence[str] | None = None,
     group_freqs: Sequence[np.ndarray] | None = None,
     eq1_batch: int | None = None,
+    capacity_tiles: int | None = None,
 ) -> ShardPlan:
     """Builds the shard placement for one or more tables.
 
@@ -231,12 +272,23 @@ def plan_shards(
         ``eq1_batch`` equal to the plans' ``batch_size``, the replicated
         set is identical to the default path (assuming the ``log``
         scheme with no area budget).
+      capacity_tiles: optional per-shard hot-tier budget (in tiles).
+        When set, placement walks groups in descending load and admits
+        them while the budget lasts: a replicated group needs
+        ``copies[g]`` free slots on *every* shard (else it degrades to
+        sharded-once), a sharded-once group needs ``copies[g]`` free on
+        some shard (else it is left **cold**: host-resident only,
+        served by the gather+sum fallback until a replan patch pages it
+        in).  None (the default) keeps the uncapped all-resident
+        behavior bit-for-bit.
 
     Returns:
       A :class:`ShardPlan` over the fused group/tile spaces.
     """
     if num_shards < 1:
         raise ValueError("num_shards must be >= 1")
+    if capacity_tiles is not None and capacity_tiles < 1:
+        raise ValueError("capacity_tiles must be >= 1 (or None for uncapped)")
     if len(layouts) != len(plans) or not layouts:
         raise ValueError("need one replication plan per layout (>= 1 table)")
     if eq1_batch is not None and group_freqs is None:
@@ -287,21 +339,45 @@ def plan_shards(
     # forfeit the memory relief that is half the point of sharding.
     # Cold groups sort last, so they also repair tile imbalance the hot
     # phase left behind.
+    #
+    # Under a capacity budget the same descending-load walk doubles as
+    # the hot-tier admission policy: the hottest groups are admitted
+    # until the per-shard budget runs out, everything after goes COLD.
+    # Replicated admission charges every shard's budget (uncapped
+    # placement deliberately does NOT count replicated tiles in the
+    # tie-break totals — that behavior is preserved bit-for-bit).
     shard_of_group = np.full(G, -1, dtype=np.int32)
     shard_load = np.zeros(num_shards, dtype=np.float64)
     shard_tiles = np.zeros(num_shards, dtype=np.int64)
     order = np.argsort(-load, kind="stable")
     shard_ids = range(num_shards)
+    cap = capacity_tiles
     for g in order.tolist():
+        c = int(copies[g])
         if replicated[g]:
-            continue
-        if load[g] > 0:
-            s = min(shard_ids, key=lambda i: (shard_load[i], shard_tiles[i], i))
+            if cap is not None:
+                if int(shard_tiles.max()) + c <= cap:
+                    shard_tiles += c
+                else:
+                    # no room on every shard: degrade to sharded-once
+                    # (still hot — it gets the next-best residency)
+                    replicated[g] = False
+            if replicated[g]:
+                continue
+        if cap is None:
+            fits = shard_ids
         else:
-            s = min(shard_ids, key=lambda i: (shard_tiles[i], i))
+            fits = [i for i in shard_ids if shard_tiles[i] + c <= cap]
+            if not fits:
+                shard_of_group[g] = COLD
+                continue
+        if load[g] > 0:
+            s = min(fits, key=lambda i: (shard_load[i], shard_tiles[i], i))
+        else:
+            s = min(fits, key=lambda i: (shard_tiles[i], i))
         shard_of_group[g] = s
         shard_load[s] += load[g]
-        shard_tiles[s] += int(copies[g])
+        shard_tiles[s] += c
 
     # per-tile placement: a group's replica tiles travel with the group
     tile_group = np.repeat(np.arange(G, dtype=np.int64), copies)
@@ -311,7 +387,7 @@ def plan_shards(
     local_tile_of = np.full((num_shards, T), -1, dtype=np.int32)
     local_num_tiles = np.zeros(num_shards, dtype=np.int64)
     for s in range(num_shards):
-        resident = np.nonzero((shard_of_tile == s) | (shard_of_tile < 0))[0]
+        resident = np.nonzero((shard_of_tile == s) | (shard_of_tile == -1))[0]
         local_tile_of[s, resident] = np.arange(resident.size, dtype=np.int32)
         local_num_tiles[s] = resident.size
 
@@ -325,6 +401,7 @@ def plan_shards(
         local_num_tiles=local_num_tiles,
         group_load=load,
         group_copies=copies,
+        capacity_tiles=capacity_tiles,
     )
 
 

@@ -28,6 +28,7 @@ from repro.kernels.sharded import (
     combine_bytes_per_batch,
     crossbar_reduce_sharded,
     crossbar_reduce_tables,
+    dispatch_cache_stats,
     patch_shard_images,
 )
 
@@ -35,7 +36,7 @@ __all__ = [
     "crossbar_reduce", "crossbar_reduce_ref", "crossbar_reduce_pallas",
     "crossbar_reduce_blocked", "crossbar_reduce_blocked_ref",
     "crossbar_reduce_sharded", "crossbar_reduce_tables",
-    "combine_bytes_per_batch", "patch_shard_images",
+    "combine_bytes_per_batch", "dispatch_cache_stats", "patch_shard_images",
     "embedding_bag", "embedding_bag_ref", "embedding_bag_pallas",
     "fused_decode_attention_pallas", "fused_decode_attention_ref",
 ]

@@ -58,7 +58,17 @@ def _shard_map():
         return shard_map
 
 
-@functools.lru_cache(maxsize=None)
+# Bound on each jit-dispatch cache below.  The caches are keyed on the
+# participants tuple (plus static knobs), and an adversarial mix of
+# owner-set flush shapes can mint a fresh participants tuple per flush —
+# unbounded caches would pin every retraced executable forever.  64
+# distinct keys per path comfortably covers every steady-state policy
+# (global: 1; per-shard: S; owner-set: S + the small sets that survive
+# ``owner_set_max`` pooling) while evicting the long tail LRU-style.
+DISPATCH_CACHE_MAXSIZE = 64
+
+
+@functools.lru_cache(maxsize=DISPATCH_CACHE_MAXSIZE)
 def _emulated_fn(shards, chunks, dynamic_switch, interpret):
     """jit-cached single-device emulation of the sharded reduction.
 
@@ -89,7 +99,7 @@ def _emulated_fn(shards, chunks, dynamic_switch, interpret):
     return jax.jit(fn)
 
 
-@functools.lru_cache(maxsize=None)
+@functools.lru_cache(maxsize=DISPATCH_CACHE_MAXSIZE)
 def _mesh_fn(mesh, axis_name, chunks, dynamic_switch, interpret, scatter):
     """jit-cached shard_map reduction (full-axis combine)."""
 
@@ -127,7 +137,7 @@ def _mesh_fn(mesh, axis_name, chunks, dynamic_switch, interpret, scatter):
     ))
 
 
-@functools.lru_cache(maxsize=None)
+@functools.lru_cache(maxsize=DISPATCH_CACHE_MAXSIZE)
 def _mesh_subset_fn(mesh, axis_name, chunks, dynamic_switch, interpret,
                     groups):
     """jit-cached shard_map reduction combining only a participant
@@ -168,7 +178,7 @@ def _mesh_subset_fn(mesh, axis_name, chunks, dynamic_switch, interpret,
     ))
 
 
-@functools.lru_cache(maxsize=None)
+@functools.lru_cache(maxsize=DISPATCH_CACHE_MAXSIZE)
 def _mesh_single_fn(mesh, axis_name, chunks, dynamic_switch, interpret):
     """jit-cached shard_map reduction with NO combine — the
     single-participant flush path (the participant's stacked output is
@@ -193,6 +203,43 @@ def _mesh_single_fn(mesh, axis_name, chunks, dynamic_switch, interpret):
         out_specs=P(axis_name),
         check_rep=False,
     ))
+
+
+_DISPATCH_CACHES = {
+    "emulated": _emulated_fn,
+    "mesh": _mesh_fn,
+    "mesh_subset": _mesh_subset_fn,
+    "mesh_single": _mesh_single_fn,
+}
+
+
+def dispatch_cache_stats() -> dict:
+    """Hit/miss/size counters of the bounded jit-dispatch caches.
+
+    Process-global (the caches are module-level, shared by every server
+    in the process); surfaced by ``ShardedEmbeddingServer.report()``.  A
+    "hit" is a flush that reused a cached dispatcher — jax.jit's own
+    shape cache then decides whether the *executable* was also reused.
+    """
+    out = {}
+    hits = misses = 0
+    for name, fn in _DISPATCH_CACHES.items():
+        info = fn.cache_info()
+        out[name] = {
+            "hits": info.hits, "misses": info.misses,
+            "currsize": info.currsize, "maxsize": info.maxsize,
+        }
+        hits += info.hits
+        misses += info.misses
+    out["total"] = {"hits": hits, "misses": misses,
+                    "maxsize": DISPATCH_CACHE_MAXSIZE}
+    return out
+
+
+def clear_dispatch_caches() -> None:
+    """Drops every cached dispatcher (tests that count hits exactly)."""
+    for fn in _DISPATCH_CACHES.values():
+        fn.cache_clear()
 
 
 def _chunk_bounds(nb: int, combine_chunks: int) -> list[tuple[int, int]]:
@@ -401,11 +448,19 @@ def patch_shard_images(
     behind — every slot the patched plan addresses stays below the new
     depth by construction.
 
+    Tiered storage (DESIGN.md §9) rides the same scatter: a paging
+    patch's ``fetch_dma`` triples copy the paged-in groups' tiles from
+    the host master image into the slots its evictions (and earlier
+    demotions) returned to the free-list.  Evicted slots themselves move
+    no data — like demotion-freed slots they just stop being addressed,
+    and the host master image stays authoritative for the cold tier.
+
     Args:
       images: the serving image stack (``ShardPlan.build_shard_images``
         output, possibly already patched and/or slack-padded).
       patch: the :class:`~repro.dist.replan.PlanPatch` being applied;
-        only ``dma`` and ``new_capacity`` are read.
+        only ``dma``, ``fetch_dma``, ``moved`` and ``new_capacity`` are
+        read (``fetch_dma`` via getattr — pre-paging patches lack it).
       fused_image: the fused multi-table host image the plan indexes
         (``repro.dist.build_fused_image``).
 
@@ -423,9 +478,10 @@ def patch_shard_images(
         # addresses is below the new depth (compaction relocated the
         # rest), so the slice drops only unaddressable bytes
         images = images[:, : patch.new_capacity]
-    # promotions' new holders + compaction relocations, one batched
-    # scatter from the host master image
+    # promotions' new holders + paged-in tiles + compaction relocations,
+    # one batched scatter from the host master image
     writes = list(patch.dma)
+    writes += list(getattr(patch, "fetch_dma", ()) or ())
     writes += [(s, new, t) for s, t, _old, new in patch.moved]
     if not writes:
         return images

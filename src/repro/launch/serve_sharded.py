@@ -22,6 +22,12 @@ Usage::
         --inject compile:2,device:1,poison:1,hang:1 \
         --inject-seed 0 --watchdog 2.0        # seeded chaos replay: the
                                               # engine heals (DESIGN.md §8)
+    PYTHONPATH=src python -m repro.launch.serve_sharded --emulate \
+        --flush-policy deadline --capacity-frac 0.25 --drift
+                                              # tiered hot/cold storage:
+                                              # device holds 1/4 of the
+                                              # working set, drift pages
+                                              # groups in/out (§9)
 
 ``--drift`` enables the drifting-workload replay (DESIGN.md §6): after
 ``--drift-at`` of the request stream, row ids are remapped through a
@@ -109,6 +115,26 @@ def parse_args(argv=None):
     ap.add_argument("--replan-min-queries", type=int, default=64)
     ap.add_argument("--slack-tiles", type=int, default=8,
                     help="per-shard zero-tile image headroom for promotions")
+    ap.add_argument("--capacity-frac", type=float, default=None,
+                    help="tiered storage (DESIGN.md §9): cap the per-shard "
+                         "hot-tier image at this fraction of what an "
+                         "uncapped plan would need — 0.25 means the device "
+                         "holds a quarter of the working set; cold queries "
+                         "serve via the host gather+sum path and drift-"
+                         "driven paging swaps groups in/out at flush "
+                         "barriers (None: untiered, everything resident)")
+    ap.add_argument("--capacity-tiles", type=int, default=None,
+                    help="absolute per-shard hot-tier budget in tiles "
+                         "(alternative to --capacity-frac)")
+    ap.add_argument("--tier-hysteresis", type=float, default=1.5,
+                    help="load ratio a cold group must beat over its "
+                         "eviction victim to page in (anti-thrash; >= 1)")
+    ap.add_argument("--host-batch", type=int, default=None,
+                    help="cold queries buffered before a host-path flush "
+                         "(default: --batch-size)")
+    ap.add_argument("--host-deadline", type=int, default=None,
+                    help="max submissions a queued cold query waits before "
+                         "a forced host flush (default: 4x host batch)")
     ap.add_argument("--inject", default=None, metavar="KIND:N[,KIND:N...]",
                     help="chaos replay (DESIGN.md §8): inject a seeded, "
                          "deterministic fault schedule, e.g. "
@@ -202,6 +228,17 @@ def main(args) -> None:
         )
     from repro.serve.faults import RetryPolicy
 
+    tiers_cfg = None
+    if args.capacity_frac is not None or args.capacity_tiles is not None:
+        from repro.serve.tiers import TierConfig
+
+        tiers_cfg = TierConfig(
+            capacity_tiles=args.capacity_tiles,
+            capacity_frac=args.capacity_frac,
+            hysteresis=args.tier_hysteresis,
+            host_batch=args.host_batch,
+            host_deadline=args.host_deadline,
+        )
     fault_plan = build_fault_plan(args, list(tables), args.requests)
     server = ShardedEmbeddingServer(
         tables, histories,
@@ -220,6 +257,7 @@ def main(args) -> None:
                           watchdog_s=args.watchdog,
                           seed=args.inject_seed),
         faults=fault_plan,
+        tiers=tiers_cfg,
     )
 
     stream = zipf_queries(args.rows, args.requests, args.mean_bag, seed=1234)

@@ -1,7 +1,7 @@
 from repro.serve.decode import decode_step
 from repro.serve.kvcache import cache_bytes, init_cache
 from repro.serve.batching import RequestBatcher, ServeMetrics
-from repro.serve.drift import DriftTracker, ReplanConfig
+from repro.serve.drift import DriftTracker, LoadObservationCache, ReplanConfig
 from repro.serve.faults import (
     ErrorLedger,
     FaultInjector,
@@ -14,12 +14,14 @@ from repro.serve.faults import (
 )
 from repro.serve.scheduler import POOL, FlushPolicy, FlushScheduler
 from repro.serve.sharded import ShardedEmbeddingServer, ShardedServeStats
+from repro.serve.tiers import HostFetchQueue, ResidencyIndex, TierConfig
 
 __all__ = [
     "decode_step", "init_cache", "cache_bytes", "RequestBatcher",
     "ServeMetrics", "ShardedEmbeddingServer", "ShardedServeStats",
-    "DriftTracker", "ReplanConfig",
+    "DriftTracker", "LoadObservationCache", "ReplanConfig",
     "FlushPolicy", "FlushScheduler", "POOL",
+    "TierConfig", "ResidencyIndex", "HostFetchQueue",
     "FaultPlan", "FaultSpec", "FaultInjector", "RetryPolicy",
     "ErrorLedger", "FlushTimeout", "InjectedFault", "PoisonedQueryError",
 ]

@@ -252,6 +252,14 @@ class FlushScheduler:
         rows = np.unique(np.asarray(query, dtype=np.int64))
         groups = np.unique(self._fused_group_of_row[table][rows])
         owners = np.unique(self._owner_of_row[table][rows])
+        if owners.size and owners[0] == -2:
+            # COLD sentinel (repro.dist.shard_plan): no shard holds the
+            # tile, so no flush home can serve it — the server must have
+            # detoured this query to its host fetch queue before routing
+            raise ValueError(
+                f"query on table {table!r} touches a cold (host-tier) "
+                "group; cold queries take the host path, not a flush home"
+            )
         owners = owners[owners >= 0]
         if owners.size == 0:
             home: Home = self._rr

@@ -66,6 +66,23 @@ timed out and **degraded** to the inline host/reference path, so
 The ``faults=`` hook accepts a :class:`~repro.serve.faults.FaultPlan`
 — a deterministic, seeded fault-injection layer wrapping the compile,
 dispatch, retire and patch-apply seams (chaos replay, CI smoke).
+
+**Tiered host↔device storage** (opt-in via ``tiers=``, DESIGN.md §9):
+a :class:`~repro.serve.tiers.TierConfig` caps the per-shard image
+depth — the device images become a **hot tier** over the host-resident
+master image, planned capacity-bounded so only the hottest groups are
+resident and the cold tail lives host-side only
+(``shard_of_group == COLD``).  Every query routes by residency at
+submit time: resident queries flow through the crossbar kernels
+unchanged, cold queries detour into a deadline-batched host queue
+served by the same gather+sum the degrade path uses (bit-identical on
+integer tables).  Cold traffic feeds the drift tracker too, so when a
+cold group warms past the hysteresis-gated paging policy the next
+patch barrier **fetches** its tiles into free slots (DMA from the host
+master) and **evicts** colder victims (slots reclaimed through the
+free-list, no data movement — the host master stays authoritative).
+Residency snapshots refresh only at those barriers, so routing is
+always consistent with the images a flush executes against.
 """
 
 from __future__ import annotations
@@ -92,7 +109,7 @@ from repro.core import (
     plan_replication,
     shard_block_queries,
 )
-from repro.core.reduction import CompiledQueries, fused_group_loads
+from repro.core.reduction import CompiledQueries
 from repro.dist.replan import (
     PlanPatch,
     apply_plan_patch,
@@ -103,9 +120,10 @@ from repro.dist.shard_plan import ShardPlan, build_fused_image, plan_shards
 from repro.kernels.sharded import (
     combine_bytes_per_batch,
     crossbar_reduce_tables,
+    dispatch_cache_stats,
     patch_shard_images,
 )
-from repro.serve.drift import DriftTracker, ReplanConfig
+from repro.serve.drift import DriftTracker, LoadObservationCache, ReplanConfig
 from repro.serve.faults import (
     ErrorLedger,
     FaultInjector,
@@ -114,6 +132,7 @@ from repro.serve.faults import (
     latency_percentiles as _latency_percentiles,
 )
 from repro.serve.scheduler import POOL, FlushPolicy, FlushScheduler
+from repro.serve.tiers import HostFetchQueue, ResidencyIndex, TierConfig
 
 
 @dataclasses.dataclass
@@ -183,6 +202,17 @@ class ShardedServeStats:
     patched_tiles: int = 0                 # Σ tiles DMA'd by applied patches
     promoted_groups: int = 0
     demoted_groups: int = 0
+    # ---- tiered host/device storage (DESIGN.md §9) ----
+    hot_queries: int = 0                   # routed through the crossbar path
+    host_queries: int = 0                  # routed to the host (cold) path
+    host_flushes: int = 0                  # host-queue batches served
+    host_deadline_flushes: int = 0         # … of which forced by query age
+    sync_cold_batches: int = 0             # sync serve()'s inline cold splits
+    fetched_tiles: int = 0                 # Σ tiles paged INTO the hot tier
+    evicted_tiles: int = 0                 # Σ tiles paged OUT (slots freed)
+    paging_bytes: int = 0                  # Σ host→device bytes of fetches
+    load_obs_hits: int = 0                 # drift-observation memo hits
+    load_obs_misses: int = 0
     # ---- failure/recovery accounting (DESIGN.md §8) ----
     ledger: ErrorLedger = dataclasses.field(default_factory=ErrorLedger)
 
@@ -240,7 +270,13 @@ class ShardedServeStats:
         return (self.hidden_compile_s / self.host_compile_s
                 if self.host_compile_s > 0 else 0.0)
 
-    def record_patch(self, patch: PlanPatch) -> None:
+    def record_patch(self, patch: PlanPatch, tile_bytes: int = 0) -> None:
+        # paging accounting rides every applied patch: fetches DMA host
+        # master bytes onto the device, evictions only free slots
+        fetched = len(getattr(patch, "fetch_dma", ()) or ())
+        self.fetched_tiles += fetched
+        self.evicted_tiles += int(getattr(patch, "evicted_tiles", 0) or 0)
+        self.paging_bytes += fetched * int(tile_bytes)
         if patch.is_noop():
             self.rebases += 1
             return
@@ -283,7 +319,37 @@ class ShardedServeStats:
             "patched_tiles": self.patched_tiles,
             "promoted_groups": self.promoted_groups,
             "demoted_groups": self.demoted_groups,
+            "tiers": self.tier_summary(),
             "faults": self.ledger.summary(),
+        }
+
+    def tier_summary(self) -> Dict[str, object]:
+        """Hot-tier effectiveness metrics (DESIGN.md §9).
+
+        ``hot_tier_hit_rate`` is the fraction of routed queries served
+        entirely from the device images (1.0 when tiering is off or no
+        query has been routed yet); ``host_path_fraction`` is its
+        complement — the tier bench's steady-state acceptance metric.
+        """
+        routed = self.hot_queries + self.host_queries
+        return {
+            "hot_queries": self.hot_queries,
+            "host_queries": self.host_queries,
+            "hot_tier_hit_rate": (
+                self.hot_queries / routed if routed else 1.0
+            ),
+            "host_path_fraction": (
+                self.host_queries / routed if routed else 0.0
+            ),
+            "host_flushes": self.host_flushes,
+            "host_deadline_flushes": self.host_deadline_flushes,
+            "sync_cold_batches": self.sync_cold_batches,
+            "fetched_tiles": self.fetched_tiles,
+            "evicted_tiles": self.evicted_tiles,
+            "paged_tiles": self.fetched_tiles + self.evicted_tiles,
+            "paging_bytes": self.paging_bytes,
+            "load_obs_hits": self.load_obs_hits,
+            "load_obs_misses": self.load_obs_misses,
         }
 
 
@@ -340,6 +406,16 @@ class ShardedEmbeddingServer:
         ready injector) wrapping the compile / dispatch / retire /
         patch-apply seams with deterministic, seeded fault injection —
         chaos replays and the driver-fault-branch tests.
+      tiers: optional :class:`~repro.serve.tiers.TierConfig` making the
+        shard images a capacity-bounded **hot tier** (DESIGN.md §9):
+        the plan admits only the hottest groups up to the budget, cold
+        queries serve through a deadline-batched host gather+sum path,
+        and drift-driven plan patches page groups in/out at flush
+        barriers.  Enables replanning implicitly (a default
+        :class:`~repro.serve.drift.ReplanConfig`) when ``replan`` is
+        not given — paging needs the drift tracker.  ``replan.
+        slack_tiles`` / ``shrink_streak`` are ignored under tiering:
+        the image depth IS the (fixed) capacity.
     """
 
     def __init__(
@@ -367,6 +443,7 @@ class ShardedEmbeddingServer:
         threaded: bool = False,
         retry: RetryPolicy | None = None,
         faults=None,
+        tiers: TierConfig | None = None,
     ):
         if set(tables) != set(histories):
             raise ValueError("tables and histories must cover the same names")
@@ -400,9 +477,27 @@ class ShardedEmbeddingServer:
             raise ValueError("fused serving requires a uniform embedding dim")
         self.dim = dims.pop()
 
+        self.tiers = tiers
+        if tiers is not None and replan is None:
+            # paging rides the drift tracker: tiering without an explicit
+            # replan config still needs one to ever page a group in
+            replan = ReplanConfig()
+        self._capacity_tiles: Optional[int] = None
+        if tiers is not None:
+            # the budget is resolved against what an UNCAPPED plan of
+            # the same tables would need — capacity_frac=0.1 means "the
+            # device holds a tenth of the working set"
+            uncapped = plan_shards(
+                self.layouts, plans, num_shards,
+                names=self.names, group_freqs=gfreqs,
+            )
+            self._capacity_tiles = tiers.resolve_capacity(
+                uncapped.max_local_tiles
+            )
         self.plan: ShardPlan = plan_shards(
             self.layouts, plans, num_shards,
             names=self.names, group_freqs=gfreqs,
+            capacity_tiles=self._capacity_tiles,
         )
         # host-resident master image: the serve-time DMA source for
         # incremental plan patches (kept even without replan so a later
@@ -416,7 +511,18 @@ class ShardedEmbeddingServer:
         self._eq1_batch = (
             replan.eq1_batch if replan and replan.eq1_batch else eq1_batch
         )
-        if replan is not None and replan.slack_tiles > 0:
+        if self._capacity_tiles is not None:
+            # the hot tier is FIXED at its budget: pad the image stack
+            # to capacity so every free slot is fetchable from day one
+            # (slack_tiles growth/shrink is a no-tier concern)
+            extra = self._capacity_tiles - images.shape[1]
+            if extra > 0:
+                pad = np.zeros(
+                    (num_shards, extra) + images.shape[2:],
+                    dtype=images.dtype,
+                )
+                images = np.concatenate([images, pad], axis=1)
+        elif replan is not None and replan.slack_tiles > 0:
             # zero-tile headroom so early promotions fill slack instead
             # of growing (reallocating) the device image stack
             pad = np.zeros(
@@ -425,6 +531,8 @@ class ShardedEmbeddingServer:
             )
             images = np.concatenate([images, pad], axis=1)
         self.shard_images = jnp.asarray(images)
+        #: host→device bytes of one fused tile — the paging_bytes unit
+        self._tile_bytes = int(self._fused[0].nbytes) if len(self._fused) else 0
         self._tile_group = np.repeat(
             np.arange(self.plan.num_groups, dtype=np.int64),
             self.plan.group_copies,
@@ -450,6 +558,27 @@ class ShardedEmbeddingServer:
         )
         self._staged: Optional[PlanPatch] = None
         self._demote_streak = 0
+        # per-flush drift-observation memo (content-keyed): replayed /
+        # steady-state streams re-flush byte-identical compiled batches
+        self._load_obs: Optional[LoadObservationCache] = (
+            LoadObservationCache() if replan is not None else None
+        )
+        # ---- tiered storage state (DESIGN.md §9); None when untiered --
+        self._residency: Optional[ResidencyIndex] = None
+        self._host_queue: Optional[HostFetchQueue] = None
+        self._tick = 0
+        if tiers is not None:
+            name_to_layout = dict(zip(self.names, self.layouts))
+            self._residency = ResidencyIndex(self.plan, {
+                seg.name: np.asarray(
+                    name_to_layout[seg.name].group_of, dtype=np.int64
+                ) + seg.group_offset
+                for seg in self.plan.tables
+            })
+            hb = tiers.host_batch or batch_size
+            self._host_queue = HostFetchQueue(
+                hb, tiers.host_deadline or 4 * hb
+            )
         knobs_set = (union_budget is not None or flush_deadline is not None
                      or owner_set_max is not None or max_in_flight != 2
                      or threaded)
@@ -555,27 +684,102 @@ class ShardedEmbeddingServer:
             self._barrier()
         else:
             self._apply_staged_patch()
-        tc = time.perf_counter()
-        host_cq, sbq, spans = self._compile_batch(
-            served, {n: queries_by_table[n] for n in served}
-        )
-        # synchronous compile sits squarely on the serving critical
-        # path — never hidden (the §7 engine's motivating cost)
-        self.stats.record_compile(time.perf_counter() - tc, hidden=False)
-        outs = crossbar_reduce_tables(
-            self.shard_images, sbq, spans,
-            mesh=self.mesh, axis_name=self.axis_name,
-            combine=self.combine, combine_chunks=self.combine_chunks,
-            dynamic_switch=self.dynamic_switch, interpret=self.interpret,
-        )
-        n_queries = sum(len(queries_by_table[n]) for n in served)
-        # double buffering: the kernel above is dispatched but NOT yet
-        # blocked on — drift bookkeeping and patch computation are pure
-        # host work and overlap the device execution of this flush
-        self._observe_and_stage(host_cq, n_queries)
-        outs = [jax.block_until_ready(o) for o in outs]
-        self.stats.record(sbq, self.dim, time.perf_counter() - t0, n_queries)
-        return dict(zip(served, outs))
+        # ---- residency split (DESIGN.md §9): a compiled batch may
+        # never reference a cold tile, so cold queries peel off to the
+        # host gather+sum path here, against the *post-patch* plan ----
+        queries_of = {n: list(queries_by_table[n]) for n in served}
+        parts: Dict[str, tuple] = {}
+        if self._residency is not None and self._residency.any_cold:
+            for n in served:
+                hot_idx: List[int] = []
+                cold_idx: List[int] = []
+                for i, q in enumerate(queries_of[n]):
+                    arr = np.asarray(list(q), dtype=np.int64)
+                    if self._residency.is_resident(n, arr):
+                        hot_idx.append(i)
+                    else:
+                        cold_idx.append(i)
+                parts[n] = (hot_idx, cold_idx)
+            cold_entries = [
+                (n, i, queries_of[n][i])
+                for n in served for i in parts[n][1]
+            ]
+            if cold_entries:
+                self.stats.host_queries += len(cold_entries)
+                # NOT host_flushes: that counter means "HostFetchQueue
+                # batches served" — the sync path's inline cold
+                # sub-batch never enters the queue
+                self.stats.sync_cold_batches += 1
+                if self.tracker is not None:
+                    # cold queries never compile, but their loads must
+                    # feed the tracker or a cold group can never warm
+                    self.tracker.observe(
+                        self._residency.host_group_loads(cold_entries),
+                        len(cold_entries),
+                    )
+            self.stats.hot_queries += sum(
+                len(parts[n][0]) for n in served
+            )
+        elif self._residency is not None:
+            # fully-resident tiered plan: everything is a hot-tier hit
+            self.stats.hot_queries += sum(
+                len(queries_of[n]) for n in served
+            )
+        hot_of = {
+            n: ([queries_of[n][i] for i in parts[n][0]]
+                if n in parts else queries_of[n])
+            for n in served
+        }
+        served_dev = [n for n in served if hot_of[n]]
+        outs: List[np.ndarray] = []
+        sbq = None
+        if served_dev:
+            tc = time.perf_counter()
+            host_cq, sbq, spans = self._compile_batch(
+                served_dev, {n: hot_of[n] for n in served_dev}
+            )
+            # synchronous compile sits squarely on the serving critical
+            # path — never hidden (the §7 engine's motivating cost)
+            self.stats.record_compile(time.perf_counter() - tc, hidden=False)
+            outs = crossbar_reduce_tables(
+                self.shard_images, sbq, spans,
+                mesh=self.mesh, axis_name=self.axis_name,
+                combine=self.combine, combine_chunks=self.combine_chunks,
+                dynamic_switch=self.dynamic_switch, interpret=self.interpret,
+            )
+            n_queries = sum(len(hot_of[n]) for n in served_dev)
+            # double buffering: the kernel above is dispatched but NOT
+            # yet blocked on — drift bookkeeping and patch computation
+            # are pure host work overlapping this flush's device time
+            self._observe_and_stage(host_cq, n_queries)
+            outs = [jax.block_until_ready(o) for o in outs]
+        elif self.tracker is not None:
+            # an all-cold batch still observed loads above — give the
+            # drift statistic its chance to stage a paging patch
+            self._maybe_stage()
+        out: Dict[str, jax.Array] = {}
+        dev_out = dict(zip(served_dev, outs))
+        for n in served:
+            if n not in parts or not parts[n][1]:
+                out[n] = dev_out[n]
+                continue
+            hot_idx, cold_idx = parts[n]
+            full = np.zeros(
+                (len(queries_of[n]), self.dim),
+                dtype=self._host_tables[n].dtype,
+            )
+            if hot_idx:
+                full[np.asarray(hot_idx)] = np.asarray(dev_out[n])
+            full[np.asarray(cold_idx)] = self._serve_cold_rows(
+                n, [queries_of[n][i] for i in cold_idx]
+            )
+            out[n] = jnp.asarray(full)
+        if sbq is not None:
+            self.stats.record(
+                sbq, self.dim, time.perf_counter() - t0,
+                sum(len(hot_of[n]) for n in served_dev),
+            )
+        return out
 
     def _compile_batch(self, served, queries_of, participants=None):
         """Fused host compile shared by the sync and async paths.
@@ -648,7 +852,12 @@ class ShardedEmbeddingServer:
             self.shard_images, patch, self._fused
         )
         self.plan = apply_plan_patch(self.plan, patch)
-        self.stats.record_patch(patch)
+        self.stats.record_patch(patch, tile_bytes=self._tile_bytes)
+        if self._residency is not None:
+            # paging moved groups across the hot/cold boundary: routing
+            # re-snapshots residency HERE and only here (barrier rule),
+            # so every routed query matches the images its flush sees
+            self._residency.refresh(self.plan)
         # slack age-out bookkeeping (DESIGN.md §6.2): demotion-only
         # patches extend the streak, any promotion resets it
         if patch.promoted:
@@ -670,10 +879,23 @@ class ShardedEmbeddingServer:
         """
         if self.tracker is None:
             return
-        loads = fused_group_loads(
+        # content-keyed memo: steady-state / replayed streams re-flush
+        # byte-identical compiled batches, whose loads are identical too
+        loads = self._load_obs.loads(
             fused_cq, self._tile_group, self.plan.num_groups
         )
+        self.stats.load_obs_hits = self._load_obs.hits
+        self.stats.load_obs_misses = self._load_obs.misses
         self.tracker.observe(loads, n_queries)
+        self._maybe_stage()
+
+    def _maybe_stage(self) -> None:
+        """Stages a patch when the tracked drift crosses the threshold.
+
+        Shared by the compiled-batch observation above and the host
+        (cold) path's flush — under tiering, cold-only traffic must
+        still be able to trigger the paging patch that warms it up.
+        """
         if self._staged is not None or not self.tracker.ready:
             return
         drift = self.tracker.drift_from(
@@ -688,24 +910,31 @@ class ShardedEmbeddingServer:
         )
         # long demotion streaks: age the accumulated slack back out so
         # the image stack shrinks to the live working set + headroom
+        # (untiered only — the hot tier's capacity is fixed)
         shrink = (
             self.replan_cfg.slack_tiles
-            if self.replan_cfg.shrink_streak
+            if self.tiers is None
+            and self.replan_cfg.shrink_streak
             and self._demote_streak >= self.replan_cfg.shrink_streak
             else None
+        )
+        paging = (
+            self.tiers.paging_policy(self._capacity_tiles)
+            if self.tiers is not None else None
         )
         patch = compute_plan_patch(
             self.plan, drifted,
             eq1_batch=self._eq1_batch,
             capacity=int(self.shard_images.shape[1]),
             shrink_slack=shrink,
+            paging=paging,
         )
         if patch.is_noop():
             # drift without a class change: reanchor group_load so the
             # greedy demotion targets and the drift statistic both track
             # the observed distribution
             self.plan = apply_plan_patch(self.plan, patch)
-            self.stats.record_patch(patch)
+            self.stats.record_patch(patch, tile_bytes=self._tile_bytes)
             return
         self._staged = patch
 
@@ -769,8 +998,7 @@ class ShardedEmbeddingServer:
                     self._start_driver()
                 self._handoff.put(("query", table, seq, list(query)))
                 return {}
-            self.scheduler.push(table, seq, query)
-            self._maybe_flush()
+            self._ingest(table, seq, query)
             return {}
         self._buffer[table].append(list(query))
         self._buffered += 1
@@ -804,6 +1032,104 @@ class ShardedEmbeddingServer:
         self._buffer = {n: [] for n in self.names}
         self._buffered = 0
         return out
+
+    # ------------------------------------------- tiered host path (§9) ----
+
+    def _ingest(self, table: str, seq: int, query) -> None:
+        """Routes one stamped query by residency, then into the engine.
+
+        The single entry point shared by the inline async submit path
+        and the thread driver's loop — residency routing must happen
+        where ``_completed`` is owned (the driver thread, when running),
+        because a due host flush appends results directly.
+        """
+        if self._route_host(table, seq, query):
+            return
+        self.scheduler.push(table, seq, query)
+        self._maybe_flush()
+
+    def _route_host(self, table: str, seq: int, query) -> bool:
+        """Detours a cold query into the host fetch queue.
+
+        Every submission (hot or cold) advances the tier tick, so a
+        queued cold query's deadline fires even in a hot-dominated
+        stream.  Returns True when the query was queued host-side.
+        """
+        if self._residency is None:
+            return False
+        self._tick += 1
+        arr = np.asarray(list(query), dtype=np.int64)
+        if self._residency.is_resident(table, arr):
+            self._maybe_flush_host()
+            # the host flush above may have hit a patch barrier, which
+            # pages groups and refreshes residency — re-check under the
+            # post-patch plan: pushing a query whose group was just
+            # evicted into the scheduler would raise on the cold group
+            # instead of detouring host-side
+            if self._residency.is_resident(table, arr):
+                self.stats.hot_queries += 1
+                return False
+        self.stats.host_queries += 1
+        self._host_queue.push(table, seq, arr, self._tick)
+        self._maybe_flush_host()
+        return True
+
+    def _maybe_flush_host(self) -> None:
+        reason = self._host_queue.due(self._tick)
+        if reason is None:
+            return
+        if reason == "deadline":
+            self.stats.host_deadline_flushes += 1
+        self._flush_host_queue()
+
+    def _flush_host_queue(self, *, forced: bool = False) -> None:
+        """Serves every queued cold query via the host gather+sum path.
+
+        The cold tier's compute: the same distinct-rows-summed oracle
+        semantics the kernels are pinned against (and the watchdog's
+        degrade path uses), so a capacity-bounded server stays
+        bit-identical to the uncapped one on integer tables.  The
+        batch's loads feed the drift tracker FIRST — host traffic is
+        how a cold group earns its way in — and when that staged a
+        paging patch on an un-forced flush, a barrier is triggered so
+        cold-only traffic still reaches a patch-application point.
+        ``forced`` marks the barrier's own drain (never re-enters).
+        """
+        if self._host_queue is None or len(self._host_queue) == 0:
+            return
+        entries = self._host_queue.take()
+        self.stats.host_flushes += 1
+        if self.tracker is not None:
+            self.tracker.observe(
+                self._residency.host_group_loads(entries), len(entries)
+            )
+            self._maybe_stage()
+        rows_of: Dict[str, Tuple[List[int], List[np.ndarray]]] = {}
+        for table, seq, query in entries:
+            seqs, rows = rows_of.setdefault(table, ([], []))
+            seqs.append(seq)
+            rows.append(self._cold_row(table, query))
+        for table, (seqs, rows) in rows_of.items():
+            self._completed[table].append(
+                (np.asarray(seqs, dtype=np.int64), np.stack(rows))
+            )
+        if not forced and self._staged is not None:
+            # cold-dominated traffic may never trip a device flush — the
+            # staged paging patch would otherwise wait forever
+            self._barrier()
+
+    def _cold_row(self, table: str, query) -> np.ndarray:
+        """One query's host gather+sum row (distinct rows, zeros when
+        empty) — the cold-tier twin of the degrade path's kernel."""
+        ids = np.unique(np.asarray(query, dtype=np.int64))
+        tab = self._host_tables[table]
+        row = (tab[ids].sum(axis=0) if ids.size
+               else np.zeros(self.dim, dtype=tab.dtype))
+        return row.astype(tab.dtype, copy=False)
+
+    def _serve_cold_rows(self, table: str, queries) -> np.ndarray:
+        """Stacked host rows for the sync path's cold sub-batch."""
+        return np.stack([self._cold_row(table, q) for q in queries])
 
     # ------------------------------------------------- async flush engine --
 
@@ -1123,6 +1449,10 @@ class ShardedEmbeddingServer:
             self._flush_home(home, forced=True)
         while self._in_flight:
             self._retire_oldest()
+        # queued cold work drains with the pipeline (host rows read the
+        # master image, so ordering vs the patch below is immaterial —
+        # but a drain must hand back every submitted query's row)
+        self._flush_host_queue(forced=True)
         self._apply_staged_patch()
         self.stats.barrier_flushes += 1
 
@@ -1169,8 +1499,7 @@ class ShardedEmbeddingServer:
                 continue
             _, table, seq, query_list = item
             try:
-                self.scheduler.push(table, seq, query_list)
-                self._maybe_flush()
+                self._ingest(table, seq, query_list)
             except Exception as e:
                 # the batch is already requeued; surface the failure at
                 # the caller's next submit()/drain() (retry contract)
@@ -1292,6 +1621,8 @@ class ShardedEmbeddingServer:
                          if self.scheduler is not None else self._buffered),
             "handoff_pushed_back": pushed_back,
             "in_flight": len(self._in_flight),
+            "host_pending": (len(self._host_queue)
+                             if self._host_queue is not None else 0),
             "stashed_errors": len(self._driver_errors),
             "driver_leaked": int(leaked),
         }
@@ -1335,9 +1666,12 @@ class ShardedEmbeddingServer:
         self._completed = {n: [] for n in self.names}
         # sequence ids restart ONLY when no requeued/pending work is
         # still carrying the old ones — resetting with a failed flush's
-        # entries alive would hand new submissions colliding seqs and
-        # scramble the next drain's argsort row order
-        if self.scheduler.pending_total() == 0 and not self._in_flight:
+        # entries alive (or cold queries still queued host-side) would
+        # hand new submissions colliding seqs and scramble the next
+        # drain's argsort row order
+        if (self.scheduler.pending_total() == 0 and not self._in_flight
+                and (self._host_queue is None
+                     or len(self._host_queue) == 0)):
             self._seq = {n: 0 for n in self.names}
         return out
 
@@ -1371,7 +1705,19 @@ class ShardedEmbeddingServer:
             "serve": self.stats.summary(),
             "mode": "shard_map" if self.mesh is not None else "emulated",
             "retry": dataclasses.asdict(self.retry),
+            # process-global jit-dispatch cache pressure (bounded LRUs
+            # in kernels.sharded) — participants churn shows up here
+            "dispatch_cache": dispatch_cache_stats(),
         }
+        if self.tiers is not None:
+            rep["tiers"] = {
+                "capacity_tiles": self._capacity_tiles,
+                "hysteresis": self.tiers.hysteresis,
+                "cold_groups": int(self.plan.cold_groups.size),
+                "cold_tiles": self.plan.cold_tiles,
+                "resident_groups": int(self.plan.resident_group.sum()),
+                "host_queue": self._host_queue.state(),
+            }
         if self._injector is not None:
             rep["faults"] = self._injector.summary()
         if self.scheduler is not None:
