@@ -1,0 +1,521 @@
+"""Open-loop SLO replay harness → the ``load`` section of
+BENCH_serving.json.
+
+Drives the multi-producer front door (DESIGN.md §10) with an
+**open-loop** load generator: N producer threads each follow a seeded
+arrival schedule fixed BEFORE the run — a submission fires at its
+scheduled instant whether or not the server kept up, which is what a
+production SLO actually measures (a closed-loop generator would slow
+down with the server and hide every queueing excursion).  Two arrival
+processes per rate:
+
+  * **poisson** — i.i.d. exponential gaps (the memoryless baseline);
+  * **bursty** — back-to-back clusters of :data:`BURST` arrivals with
+    exponential inter-cluster gaps at the same mean rate (the heavy
+    tail a front door really sees).
+
+The sweep runs each aggregate arrival rate through a ``per-shard``
+threaded server with a WALL-CLOCK flush deadline
+(``FlushPolicy.deadline_s``): a home flushes when its pending count
+fills a batch or when its oldest query has aged ``DEADLINE_S`` seconds
+— whichever comes first.  That makes the sweep show the **knee** the
+bench exists to locate: below the knee, homes never fill inside the
+deadline and the deadline timer serves everything (e2e latency pinned
+near ``DEADLINE_S``); above it, batch fills take over and e2e drops to
+the fill time.  The knee is reported as the aggregate rate where the
+deadline-flush fraction crosses ½ (linear interpolation between swept
+rates, ``None`` when the sweep never crosses — e.g. at CI smoke
+sizes).
+
+Recorded per (arrival process, rate): submit-side and per-flush
+latency percentiles (µs), end-to-end submit→retire latency
+percentiles (ms, the new ``e2e_latency_s`` stat), the deadline /
+batch flush composition, achieved vs offered rate and the maximum
+scheduler lag of the generator itself (open-loop fidelity: a lag
+comparable to the mean gap means the offered rate was not actually
+sustained).  Each point is the best of ``REPEATS`` replays by submit
+p99 (all repeats' p99s recorded as the spread — container timing
+swings the tail 2-4x under ambient load, the BENCH convention).  Every
+replay's merged drain is asserted **bit-identical** to a host NumPy
+oracle evaluated in the deterministic merge order (local seq, then
+producer id) — integer tables make every partial sum exact in f32, so
+a scheduling-dependent merge would fail the bench, not just skew it.
+
+``--check`` is the regenerate-and-diff guard for the committed record:
+it verifies the committed ``load`` section was measured at the pinned
+full-scale config, that its headline ``submit_p99_us`` is still
+100µs-class, then regenerates the record at the CURRENT env scale
+(always routed away from the committed file) and diffs the two
+records' key structure — a schema drift between the code and the
+committed record fails the check before CI ever compares numbers.
+
+Env knobs: ``RECROSS_LOAD_ROWS`` / ``RECROSS_LOAD_HISTORY`` (defaults
+2_500), ``RECROSS_LOAD_BATCH`` (32), ``RECROSS_LOAD_SHARDS`` (4),
+``RECROSS_LOAD_PRODUCERS`` (8), ``RECROSS_LOAD_SUBMITS`` (96 per
+producer), ``RECROSS_LOAD_RATES`` (per-producer arrivals/s, default
+``4,8,16,32,64``), ``RECROSS_LOAD_DEADLINE_S`` (0.1),
+``RECROSS_LOAD_REPEATS`` (3), ``RECROSS_LOAD_SEED`` (0).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import threading
+import time
+
+import numpy as np
+import jax
+
+from benchmarks.common import (
+    bench_is_full_scale,
+    bench_json_path,
+    emit,
+    mesh_for,
+    update_bench_json,
+)
+from repro.data import zipf_queries
+from repro.serve import ShardedEmbeddingServer
+
+JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serving.json")
+
+#: the committed-record configuration; env knobs override for smoke
+#: runs, and ``--check`` pins the committed record to exactly these
+_DEFAULTS = {
+    # the full-scale axis of THIS bench is the front door (producers ×
+    # arrival rates), not the table: kernel-scale latencies live in the
+    # serving/scheduler/tiers sections.  The table is sized so the
+    # interpret-mode flush (~50ms here) keeps service capacity
+    # (~1300 submits/s measured) above the whole sweep — an overloaded
+    # sweep is batch-bound at every rate and shows no deadline knee,
+    # only handoff backpressure.
+    "num_rows": 2_500,
+    "num_history": 2_500,
+    "batch_size": 32,
+    "shards": 4,
+    "producers": 8,
+    "submits_per_producer": 96,
+    "rates_per_producer": [4.0, 8.0, 16.0, 32.0, 64.0],
+    "deadline_s": 0.1,
+    "repeats": 3,
+    "seed": 0,
+}
+
+NUM_ROWS = int(os.environ.get("RECROSS_LOAD_ROWS", _DEFAULTS["num_rows"]))
+NUM_HISTORY = int(
+    os.environ.get("RECROSS_LOAD_HISTORY", _DEFAULTS["num_history"])
+)
+SERVE_BATCH = int(os.environ.get("RECROSS_LOAD_BATCH", _DEFAULTS["batch_size"]))
+NUM_SHARDS = int(os.environ.get("RECROSS_LOAD_SHARDS", _DEFAULTS["shards"]))
+PRODUCERS = int(
+    os.environ.get("RECROSS_LOAD_PRODUCERS", _DEFAULTS["producers"])
+)
+SUBMITS = int(
+    os.environ.get("RECROSS_LOAD_SUBMITS", _DEFAULTS["submits_per_producer"])
+)
+RATES = [
+    float(r)
+    for r in os.environ.get(
+        "RECROSS_LOAD_RATES",
+        ",".join(str(r) for r in _DEFAULTS["rates_per_producer"]),
+    ).split(",")
+    if r.strip()
+]
+DEADLINE_S = float(
+    os.environ.get("RECROSS_LOAD_DEADLINE_S", _DEFAULTS["deadline_s"])
+)
+REPEATS = int(os.environ.get("RECROSS_LOAD_REPEATS", _DEFAULTS["repeats"]))
+SEED = int(os.environ.get("RECROSS_LOAD_SEED", _DEFAULTS["seed"]))
+MEAN_BAG = float(os.environ.get("RECROSS_PIPELINE_MEAN_BAG", 41.32))
+#: arrivals per bursty cluster (inter-cluster gaps keep the mean rate)
+BURST = 8
+GROUP_SIZE = 64
+Q_BLOCK = 8
+DIM = 128
+TABLES = ("t0", "t1")
+#: committed BENCH_serving.json only updates at the full DEFAULT config
+FULL_SCALE = bench_is_full_scale()
+
+
+# ------------------------------------------------------ load generation --
+
+def _arrival_schedule(kind: str, rate: float, n: int, rng) -> np.ndarray:
+    """Cumulative arrival instants (s) of one producer's ``n`` submits.
+
+    ``poisson``: i.i.d. exponential gaps at ``rate``.  ``bursty``:
+    clusters of :data:`BURST` near-simultaneous arrivals; the cluster
+    head's gap is exponential with mean ``BURST/rate`` so the long-run
+    rate matches the poisson process — only the variance differs.
+    """
+    if kind == "poisson":
+        gaps = rng.exponential(1.0 / rate, size=n)
+    else:
+        gaps = rng.exponential(1.0 / (50.0 * rate), size=n)
+        heads = np.arange(n) % BURST == 0
+        gaps[heads] = rng.exponential(BURST / rate, size=int(heads.sum()))
+    return np.cumsum(gaps)
+
+
+def _producer_queries(rng) -> list:
+    """One producer's query stream (tables alternate per submit)."""
+    return list(
+        zipf_queries(NUM_ROWS, SUBMITS, MEAN_BAG, seed=int(rng.integers(2**31)),
+                     num_baskets=max(64, SUBMITS // 4))
+    )
+
+
+def _oracle(itables, queries_by_producer):
+    """Expected drain per table, evaluated in the deterministic merge
+    order — (local seq, producer id), the §10 contract — on the host.
+    Integer tables keep every sum exact in f32, so the comparison is
+    bit-level, not approximate."""
+    per_table = {n: [] for n in TABLES}  # (local, pid, query)
+    for pid, qs in enumerate(queries_by_producer):
+        counts = {n: 0 for n in TABLES}
+        for i, q in enumerate(qs):
+            name = TABLES[i % len(TABLES)]
+            per_table[name].append((counts[name], pid, q))
+            counts[name] += 1
+    out = {}
+    for name, entries in per_table.items():
+        entries.sort(key=lambda e: (e[0], e[1]))
+        out[name] = np.stack([
+            itables[name][np.unique(np.asarray(q, dtype=np.int64))].sum(axis=0)
+            for _l, _p, q in entries
+        ])
+    return out
+
+
+def _replay(itables, ihistories, queries_by_producer, kind, rate, mesh,
+            expect):
+    """One open-loop replay at one (arrival process, per-producer rate).
+
+    Returns the stats record of the run; asserts the merged drain is
+    bit-identical to the host oracle."""
+    server = ShardedEmbeddingServer(
+        itables, ihistories, num_shards=NUM_SHARDS, mesh=mesh,
+        q_block=Q_BLOCK, group_size=GROUP_SIZE, batch_size=SERVE_BATCH,
+        flush_policy="per-shard", threaded=True, max_in_flight=2,
+        flush_deadline_s=DEADLINE_S,
+    )
+    # pid order pinned up front: the merge tiebreak is registration
+    # order, which must not depend on which thread stamps first
+    labels = [f"p{i}" for i in range(PRODUCERS)]
+    for lab in labels:
+        server.register_producer(lab)
+    schedules = [
+        _arrival_schedule(
+            kind, rate, SUBMITS,
+            np.random.default_rng([SEED, hash(kind) % 2**31,
+                                   int(rate * 1000), p]),
+        )
+        for p in range(PRODUCERS)
+    ]
+    lags: list = []
+    errs: list = []
+
+    def body(lab, qs, sched):
+        try:
+            for i, (q, t_arr) in enumerate(zip(qs, sched)):
+                dt = t_arr - (time.perf_counter() - t0)
+                if dt > 0:
+                    time.sleep(dt)
+                lags.append((time.perf_counter() - t0) - t_arr)
+                server.submit(TABLES[i % len(TABLES)], q, producer=lab)
+        except Exception as e:  # pragma: no cover - surfaced below
+            errs.append(e)
+
+    threads = [
+        threading.Thread(target=body, args=(lab, qs, sched), daemon=True)
+        for lab, qs, sched in zip(labels, queries_by_producer, schedules)
+    ]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    t_submit = time.perf_counter() - t0
+    if errs:
+        server.close()
+        raise errs[0]
+    outs = {n: np.asarray(o) for n, o in server.drain().items()}
+    wall = time.perf_counter() - t0
+    server.close()
+    for name in TABLES:
+        np.testing.assert_array_equal(outs[name], expect[name])
+
+    s = server.stats.summary()
+    batches = s["batches"]
+    us = lambda v: {k: x * 1e6 for k, x in v.items()}
+    ms = lambda v: {k: x * 1e3 for k, x in v.items()}
+    total = PRODUCERS * SUBMITS
+    return {
+        "rate_per_producer": rate,
+        "aggregate_rate_per_s": rate * PRODUCERS,
+        "achieved_rate_per_s": (total / t_submit if t_submit > 0 else None),
+        "wall_s": wall,
+        "submit_latency_us": us(s["submit_latency_s"]),
+        "flush_latency_us": us(s["flush_latency_s"]),
+        "e2e_latency_ms": ms(s["e2e_latency_s"]),
+        "batches": batches,
+        "deadline_flushes": s["deadline_flushes"],
+        "barrier_flushes": s["barrier_flushes"],
+        "deadline_fraction": (s["deadline_flushes"] / batches
+                              if batches else None),
+        "max_sched_lag_ms": float(np.max(lags)) * 1e3 if lags else None,
+        "oracle_bit_identical": True,        # asserted above
+    }
+
+
+def _knee(sweep):
+    """Aggregate rate where the deadline-flush fraction crosses ½ —
+    below it the wall deadline serves the traffic, above it batch
+    fills take over.  Linear interpolation between swept rates;
+    ``None`` when the sweep never crosses."""
+    pts = sorted(
+        (e["aggregate_rate_per_s"], e["deadline_fraction"])
+        for e in sweep if e["deadline_fraction"] is not None
+    )
+    for (r0, f0), (r1, f1) in zip(pts, pts[1:]):
+        if (f0 - 0.5) * (f1 - 0.5) <= 0 and f0 != f1:
+            return r0 + (0.5 - f0) * (r1 - r0) / (f1 - f0)
+    return None
+
+
+# ------------------------------------------------------------- measure --
+
+def _measure():
+    """Runs the full sweep; returns ``(record, csv_rows)``."""
+    irng = np.random.default_rng(7)
+    itables = {
+        n: irng.integers(-8, 9, size=(NUM_ROWS, DIM)).astype(np.float32)
+        for n in TABLES
+    }
+    ihistories = {
+        n: zipf_queries(NUM_ROWS, NUM_HISTORY, MEAN_BAG, seed=20 + i,
+                        num_baskets=max(256, NUM_HISTORY // 32))
+        for i, n in enumerate(TABLES)
+    }
+    qrng = np.random.default_rng(SEED)
+    queries_by_producer = [_producer_queries(qrng) for _ in range(PRODUCERS)]
+    expect = _oracle(itables, queries_by_producer)
+
+    rows_out = []
+    arrivals = {}
+    for kind in ("poisson", "bursty"):
+        sweep = []
+        for rate in RATES:
+            # warm per (process, rate): the kernel dispatch is
+            # jit-cached per PADDED shape, and each rate produces its
+            # own mix of partial-batch deadline flushes — an unwarmed
+            # first replay bills XLA compiles as serving latency and
+            # drowns the deadline/batch composition in compile storms
+            _replay(itables, ihistories, queries_by_producer, kind,
+                    rate, None, expect)
+            runs = [
+                _replay(itables, ihistories, queries_by_producer, kind,
+                        rate, None, expect)
+                for _ in range(REPEATS)
+            ]
+            best = min(runs, key=lambda r: r["submit_latency_us"]["p99"])
+            best["submit_p99_us_runs"] = [
+                r["submit_latency_us"]["p99"] for r in runs
+            ]
+            best["e2e_p99_ms_runs"] = [
+                r["e2e_latency_ms"]["p99"] for r in runs
+            ]
+            best["wall_s_runs"] = [r["wall_s"] for r in runs]
+            sweep.append(best)
+            print(
+                f"# load {kind} rate={rate * PRODUCERS:.0f}/s: "
+                f"submit_p99={best['submit_latency_us']['p99']:.0f}us "
+                f"e2e_p50={best['e2e_latency_ms']['p50']:.1f}ms "
+                f"deadline_frac={best['deadline_fraction']}",
+                file=sys.stderr,
+            )
+        knee = _knee(sweep)
+        arrivals[kind] = {
+            "sweep": sweep,
+            "knee_aggregate_per_s": knee,
+        }
+        head = max(e["submit_latency_us"]["p99"] for e in sweep)
+        fr = [e["deadline_fraction"] for e in sweep]
+        rows_out.append({
+            "name": f"load_{kind}",
+            "us_per_call": f"{head:.0f}",
+            "derived": (
+                f"knee_agg_per_s="
+                f"{knee:.0f};" if knee is not None else "knee_agg_per_s=none;"
+            ) + (
+                f"deadline_frac={fr[0]:.2f}->{fr[-1]:.2f};"
+                f"e2e_p50_ms_low_rate="
+                f"{sweep[0]['e2e_latency_ms']['p50']:.1f};"
+                f"e2e_p50_ms_high_rate="
+                f"{sweep[-1]['e2e_latency_ms']['p50']:.1f}"
+            ),
+        })
+
+    record = {
+        "config": {
+            "num_rows": NUM_ROWS,
+            "num_history": NUM_HISTORY,
+            "batch_size": SERVE_BATCH,
+            "shards": NUM_SHARDS,
+            "producers": PRODUCERS,
+            "submits_per_producer": SUBMITS,
+            "rates_per_producer": list(RATES),
+            "deadline_s": DEADLINE_S,
+            "repeats": REPEATS,
+            "seed": SEED,
+            "devices": len(jax.devices()),
+        },
+        "arrivals": arrivals,
+        # the never-blocks headline: worst submit p99 over the poisson
+        # sweep (the acceptance gate tracks this number)
+        "submit_p99_us": max(
+            e["submit_latency_us"]["p99"]
+            for e in arrivals["poisson"]["sweep"]
+        ),
+        "knee_aggregate_per_s": {
+            k: v["knee_aggregate_per_s"] for k, v in arrivals.items()
+        },
+        "mode": "emulated",
+    }
+
+    # one mid-rate shard_map probe when the host presents enough
+    # devices (CI forces 4): records that the front door + wall
+    # deadline hold under shard_map dispatch — the sweep itself stays
+    # emulated (forced host devices distort latency, not correctness)
+    mesh = mesh_for(NUM_SHARDS)
+    if mesh is not None:
+        probe = _replay(itables, ihistories, queries_by_producer,
+                        "poisson", RATES[len(RATES) // 2], mesh, expect)
+        record["shard_map_probe"] = probe
+        rows_out.append({
+            "name": "load_shard_map_probe",
+            "us_per_call": f"{probe['submit_latency_us']['p99']:.0f}",
+            "derived": (
+                f"e2e_p50_ms={probe['e2e_latency_ms']['p50']:.1f};"
+                f"bit_identical=True"
+            ),
+        })
+    else:
+        record["shard_map_probe"] = None
+    return record, rows_out
+
+
+def run() -> list:
+    record, rows_out = _measure()
+    # merge into BENCH_serving.json (the serving bench owns the rest);
+    # CI smoke sizes write to a temp path — never the committed record
+    update_bench_json(
+        bench_json_path(JSON_PATH, full_scale=FULL_SCALE),
+        {"load": record},
+    )
+    return rows_out
+
+
+# --------------------------------------------------------------- check --
+
+def _key_structure_diff(committed, regenerated, path="load"):
+    """Recursive key-structure diff (values ignored; a ``None`` on
+    either side matches any subtree — smoke runs legitimately produce
+    ``None`` knees and probes)."""
+    diffs = []
+    if committed is None or regenerated is None:
+        return diffs
+    if isinstance(committed, dict) or isinstance(regenerated, dict):
+        if not (isinstance(committed, dict) and isinstance(regenerated, dict)):
+            return [f"{path}: committed {type(committed).__name__} vs "
+                    f"regenerated {type(regenerated).__name__}"]
+        for k in sorted(set(committed) | set(regenerated)):
+            if k not in regenerated:
+                diffs.append(f"{path}.{k}: missing from regenerated record")
+            elif k not in committed:
+                diffs.append(f"{path}.{k}: missing from committed record")
+            else:
+                diffs += _key_structure_diff(
+                    committed[k], regenerated[k], f"{path}.{k}"
+                )
+    elif isinstance(committed, list) and isinstance(regenerated, list):
+        if committed and regenerated:
+            diffs += _key_structure_diff(
+                committed[0], regenerated[0], f"{path}[0]"
+            )
+    return diffs
+
+
+def check() -> int:
+    """Regenerate-and-diff guard for the committed ``load`` record.
+
+    1. the committed record exists and was measured at the pinned
+       full-scale config (a stale record from older defaults fails);
+    2. its headline ``submit_p99_us`` is still 100µs-class;
+    3. a regenerated record (CURRENT env scale, routed away from the
+       committed file) has the same key structure — schema drift
+       between code and record fails before CI compares any number.
+    """
+    problems = []
+    try:
+        with open(JSON_PATH) as f:
+            committed = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"load-bench check: cannot read {JSON_PATH}: {e}",
+              file=sys.stderr)
+        return 1
+    rec = committed.get("load")
+    if rec is None:
+        print("load-bench check: BENCH_serving.json has no 'load' section",
+              file=sys.stderr)
+        return 1
+
+    cfg = rec.get("config", {})
+    for key, want in _DEFAULTS.items():
+        got = cfg.get(key)
+        if got != want:
+            problems.append(
+                f"config.{key}: committed {got!r} != pinned default {want!r}"
+            )
+    p99 = rec.get("submit_p99_us")
+    if not isinstance(p99, (int, float)) or not 0 < p99 < 10_000:
+        problems.append(
+            f"submit_p99_us={p99!r} is not 100µs-class (expected 0 < p99 "
+            "< 10000)"
+        )
+
+    regenerated, _rows = _measure()
+    # never the committed path: the regeneration exists to be compared,
+    # not to overwrite the record it is checking
+    update_bench_json(
+        bench_json_path(JSON_PATH, full_scale=False),
+        {"load": regenerated},
+    )
+    problems += _key_structure_diff(rec, regenerated)
+
+    if problems:
+        print("load-bench check FAILED:", file=sys.stderr)
+        for p in problems:
+            print(f"  - {p}", file=sys.stderr)
+        return 1
+    print("load-bench check OK: committed record matches the pinned "
+          "config and the regenerated schema", file=sys.stderr)
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--check", action="store_true",
+        help="verify the committed load record (pinned config + "
+             "regenerate-and-diff) instead of measuring",
+    )
+    args = ap.parse_args()
+    if args.check:
+        raise SystemExit(check())
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

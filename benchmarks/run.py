@@ -20,6 +20,7 @@ from benchmarks import (
     fig10_duplication,
     fig11_cpu_gpu,
     kernel_bench,
+    load_bench,
     pipeline_bench,
     replan_bench,
     scheduler_bench,
@@ -44,6 +45,7 @@ MODULES = {
     "scheduler": scheduler_bench,
     "chaos": chaos_bench,
     "tiers": tier_bench,
+    "load": load_bench,
 }
 
 

@@ -18,6 +18,11 @@ Usage::
         --flush-policy owner-set --threaded   # owner-set homes + driver
                                               # thread (non-blocking submit)
     PYTHONPATH=src python -m repro.launch.serve_sharded --emulate \
+        --flush-policy per-shard --threaded --producers 4
+                                              # 4 concurrent producer
+                                              # threads, per-producer
+                                              # sequence spaces (§10)
+    PYTHONPATH=src python -m repro.launch.serve_sharded --emulate \
         --flush-policy per-shard --threaded \
         --inject compile:2,device:1,poison:1,hang:1 \
         --inject-seed 0 --watchdog 2.0        # seeded chaos replay: the
@@ -81,6 +86,16 @@ def parse_args(argv=None):
                          "every multi-owner set is keyed; 2-3 keeps the "
                          "high-value small-set homes and avoids "
                          "fragmenting near-mesh traffic)")
+    ap.add_argument("--producers", type=int, default=1,
+                    help="concurrent producer threads sharing the server "
+                         "(DESIGN.md §10): the request stream splits "
+                         "round-robin, each thread submits under its own "
+                         "producer label (its own sequence space), and "
+                         "the final drain merges the streams in the "
+                         "deterministic (local_seq, producer_id) order. "
+                         "> 1 requires an async --flush-policy; pair "
+                         "with --threaded for the non-blocking front "
+                         "door")
     ap.add_argument("--threaded", action="store_true",
                     help="run the async engine on a driver thread: "
                          "submit() only validates + enqueues (bounded "
@@ -181,11 +196,17 @@ def build_fault_plan(args, table_names, requests):
         kind, _, n = part.partition(":")
         counts[kind.strip()] = int(n) if n else 1
     per_table = max(1, requests // max(1, len(table_names)))
+    producers = (
+        tuple(f"p{i}" for i in range(args.producers))
+        if args.producers > 1 else ()
+    )
     return FaultPlan.random(
         args.inject_seed, counts,
         horizon=max(4, requests // max(1, args.batch_size)),
-        tables=tuple(table_names), max_seq=per_table,
+        tables=tuple(table_names),
+        max_seq=max(1, per_table // max(1, args.producers)),
         hang_s=args.inject_hang_s,
+        producers=producers,
     )
 
 
@@ -283,19 +304,60 @@ def main(args) -> None:
         pick = np.arange(len(stream)) % len(names)
     flushed = 0
     import time
-    t0 = time.perf_counter()
-    for i, q in enumerate(stream):
-        out = server.submit(names[int(pick[i])], q)
-        if out:
+    if args.producers > 1:
+        # multi-producer front door (DESIGN.md §10): the stream splits
+        # round-robin, each producer thread submits under its own label
+        # (= its own sequence space) and the full drain at the end
+        # merges the streams deterministically
+        if args.flush_policy == "global":
+            raise SystemExit("--producers > 1 requires an async "
+                             "--flush-policy (per-shard/deadline/"
+                             "owner-set)")
+        import threading
+
+        labels = [f"p{i}" for i in range(args.producers)]
+        slices = {
+            lab: [(names[int(pick[i])], stream[i])
+                  for i in range(len(stream))
+                  if i % args.producers == p]
+            for p, lab in enumerate(labels)
+        }
+        # registration order pins producer ids (the merge tiebreak)
+        # independently of which thread wins the first stamp
+        for lab in labels:
+            server.register_producer(lab)
+
+        def run(lab):
+            for name, q in slices[lab]:
+                server.submit(name, q, producer=lab)
+
+        t0 = time.perf_counter()
+        threads = [
+            threading.Thread(target=run, args=(lab,), name=lab)
+            for lab in labels
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        if server.drain():
             flushed += 1
-    if server.flush():
-        flushed += 1
-    wall = time.perf_counter() - t0
+        wall = time.perf_counter() - t0
+    else:
+        t0 = time.perf_counter()
+        for i, q in enumerate(stream):
+            out = server.submit(names[int(pick[i])], q)
+            if out:
+                flushed += 1
+        if server.flush():
+            flushed += 1
+        wall = time.perf_counter() - t0
 
     server.close()
     report = server.report()
     report["flushes"] = flushed
     report["replay_wall_s"] = wall
+    report["producers"] = args.producers
     print(json.dumps(report, indent=1, default=str))
 
 

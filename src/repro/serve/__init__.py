@@ -12,6 +12,11 @@ from repro.serve.faults import (
     PoisonedQueryError,
     RetryPolicy,
 )
+from repro.serve.producers import (
+    DEFAULT_PRODUCER,
+    SEQ_STRIDE,
+    ProducerRegistry,
+)
 from repro.serve.scheduler import POOL, FlushPolicy, FlushScheduler
 from repro.serve.sharded import ShardedEmbeddingServer, ShardedServeStats
 from repro.serve.tiers import HostFetchQueue, ResidencyIndex, TierConfig
@@ -22,6 +27,7 @@ __all__ = [
     "DriftTracker", "LoadObservationCache", "ReplanConfig",
     "FlushPolicy", "FlushScheduler", "POOL",
     "TierConfig", "ResidencyIndex", "HostFetchQueue",
+    "ProducerRegistry", "DEFAULT_PRODUCER", "SEQ_STRIDE",
     "FaultPlan", "FaultSpec", "FaultInjector", "RetryPolicy",
     "ErrorLedger", "FlushTimeout", "InjectedFault", "PoisonedQueryError",
 ]

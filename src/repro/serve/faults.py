@@ -42,9 +42,11 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+from repro.serve.producers import DEFAULT_PRODUCER
 
 
 # --------------------------------------------------------------- errors --
@@ -118,7 +120,12 @@ class FaultSpec:
       times: how many consecutive attempts fail (transient faults heal
         after ``times`` retries; poison is permanent regardless).
       table / seq: the poisoned query's table name and per-table
-        submission sequence id (``"poison"`` only).
+        submission sequence id (``"poison"`` only).  ``seq`` is the
+        producer-LOCAL id (DESIGN.md §10) — what ``submit()`` number
+        within that producer's stream is poisoned.
+      producer: the poisoned query's producer label (``"poison"``
+        only); ``None`` targets the default producer, so
+        single-producer plans read exactly as before.
       hang_s: simulated hang duration in seconds (``"hang"`` only);
         ``None`` = forever.
     """
@@ -128,6 +135,7 @@ class FaultSpec:
     times: int = 1
     table: Optional[str] = None
     seq: Optional[int] = None
+    producer: Optional[object] = None
     hang_s: Optional[float] = None
 
     def __post_init__(self):
@@ -166,10 +174,13 @@ class FaultPlan:
         max_seq: int = 64,
         times: int = 1,
         hang_s: Optional[float] = None,
+        producers: Sequence = (),
     ) -> "FaultPlan":
         """Draws ``counts[kind]`` faults per kind with seam ticks
         uniform in ``[0, horizon)`` and poison targets uniform over
-        ``tables × [0, max_seq)`` — same seed, same schedule.
+        ``producers × tables × [0, max_seq)`` — same seed, same
+        schedule.  An empty ``producers`` targets the default producer
+        (the single-producer plans of PR 6 draw identically).
         """
         rng = np.random.default_rng(seed)
         plan = cls(seed=seed)
@@ -185,6 +196,9 @@ class FaultPlan:
                         kind,
                         table=str(rng.choice(list(tables))),
                         seq=int(rng.integers(0, max(1, max_seq))),
+                        **({"producer": list(producers)[
+                                int(rng.integers(0, len(producers)))]}
+                           if len(producers) else {}),
                     )
                 else:
                     plan.add(
@@ -196,10 +210,21 @@ class FaultPlan:
         return plan
 
     def poisoned(self) -> List[Tuple[str, int]]:
-        """The (table, seq) pairs this plan poisons (chaos benches use
-        it to exclude exactly the offenders from the oracle)."""
+        """The (table, local seq) pairs this plan poisons (chaos
+        benches use it to exclude exactly the offenders from the
+        oracle).  Producer-blind — multi-producer chaos wants
+        :meth:`poisoned_by_producer`."""
         return sorted(
             (s.table, s.seq) for s in self.specs if s.kind == "poison"
+        )
+
+    def poisoned_by_producer(self) -> List[Tuple[object, str, int]]:
+        """``(producer label, table, local seq)`` poison triples;
+        ``producer=None`` specs read as the default producer."""
+        return sorted(
+            (DEFAULT_PRODUCER if s.producer is None else s.producer,
+             s.table, s.seq)
+            for s in self.specs if s.kind == "poison"
         )
 
     def summary(self) -> Dict[str, object]:
@@ -230,10 +255,23 @@ class FaultInjector:
                 continue
             for t in range(s.tick, s.tick + s.times):
                 self._fail_at[s.kind].setdefault(t, s)
-        self._poison = {(s.table, s.seq) for s in plan.specs
-                        if s.kind == "poison"}
+        # poison keys are (table, producer label, LOCAL seq): the seq
+        # decoder bound by the server unpacks the engine's packed ids;
+        # unbound (standalone use), a seq is the default producer's
+        self._poison = {
+            (s.table,
+             DEFAULT_PRODUCER if s.producer is None else s.producer,
+             s.seq)
+            for s in plan.specs if s.kind == "poison"
+        }
+        self._decode: Callable = lambda s: (DEFAULT_PRODUCER, int(s))
         self._attempts: Dict[str, int] = {k: 0 for k in KINDS}
         self.injected: Dict[str, int] = {k: 0 for k in KINDS}
+
+    def bind_decoder(self, decode: Callable) -> None:
+        """Installs the server's ``seq -> (producer, local seq)``
+        decoder (DESIGN.md §10) so poison matching is producer-aware."""
+        self._decode = decode
 
     @classmethod
     def parse(cls, faults) -> Optional["FaultInjector"]:
@@ -259,8 +297,14 @@ class FaultInjector:
 
     def on_compile(self, entries: Sequence[Tuple[str, int, list]]) -> None:
         """Compile seam: raises for a poisoned batch (always) or a
-        scheduled transient compile fault (this attempt)."""
-        hit = [(t, s) for t, s, _q in entries if (t, s) in self._poison]
+        scheduled transient compile fault (this attempt).  Poison
+        matching decodes each entry's packed seq — only the named
+        producer's (table, local seq) fires, never another stream's
+        query that happens to share the local id."""
+        hit = [
+            (t, s) for t, s, _q in entries
+            if (t,) + self._decode(s) in self._poison
+        ]
         if hit:
             self.injected["poison"] += 1
             raise PoisonedQueryError(
@@ -400,9 +444,10 @@ class ErrorLedger:
     retries: int = 0                      # re-dispatch attempts after failures
     backoff_s: float = 0.0                # Σ backoff slept between retries
     bisections: int = 0                   # batch splits hunting an offender
-    quarantined: List[Tuple[str, int, str]] = dataclasses.field(
+    quarantined: List[tuple] = dataclasses.field(
         default_factory=list
-    )                                     # (table, seq, error repr)
+    )                                     # (table, local seq, error repr,
+                                          #  producer label)
     degraded_flushes: int = 0             # served via the host path
     timed_out_flushes: int = 0            # watchdog firings
     patch_failures: int = 0               # staged-patch apply failures
@@ -411,21 +456,40 @@ class ErrorLedger:
     driver_errors_suppressed: int = 0     # stashed beyond the deque bound
     lost_work: Optional[Dict[str, int]] = None   # unserved at close()
 
-    def quarantine(self, table: str, seq: int, err: BaseException) -> None:
-        self.quarantined.append((table, int(seq), repr(err)))
+    def quarantine(
+        self, table: str, seq: int, err: BaseException, producer=None
+    ) -> None:
+        """Records one dropped query.  ``seq`` is the producer-LOCAL
+        id; the error repr stays at index 2 (the shape summary() and
+        the chaos benches pin), with the producer label appended."""
+        self.quarantined.append((
+            table, int(seq), repr(err),
+            DEFAULT_PRODUCER if producer is None else producer,
+        ))
 
     def record_recovery(self, seconds: float) -> None:
         self.recovery_s.append(seconds)
 
     def quarantined_keys(self) -> List[Tuple[str, int]]:
-        return sorted((t, s) for t, s, _e in self.quarantined)
+        """Producer-blind ``(table, local seq)`` pairs — the
+        single-producer chaos contract (matches
+        :meth:`FaultPlan.poisoned` for default-producer plans)."""
+        return sorted((q[0], q[1]) for q in self.quarantined)
+
+    def quarantined_keys_by_producer(self) -> List[Tuple[object, str, int]]:
+        """``(producer label, table, local seq)`` triples — matches
+        :meth:`FaultPlan.poisoned_by_producer`."""
+        return sorted((q[3], q[0], q[1]) for q in self.quarantined)
 
     def summary(self) -> Dict[str, object]:
         return {
             "retries": self.retries,
             "backoff_s": self.backoff_s,
             "bisections": self.bisections,
-            "quarantined": [list(q) for q in self.quarantined],
+            "quarantined": [list(q[:3]) for q in self.quarantined],
+            "quarantined_by_producer": [
+                [str(q[3]), q[0], q[1]] for q in self.quarantined
+            ],
             "degraded_flushes": self.degraded_flushes,
             "timed_out_flushes": self.timed_out_flushes,
             "patch_failures": self.patch_failures,

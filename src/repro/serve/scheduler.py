@@ -48,11 +48,13 @@ DESIGN.md §7.3.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.reduction import BlockUnionTracker
+from repro.serve.producers import DEFAULT_PRODUCER
 
 #: pseudo-home for pooled multi-owner queries, flushed over their owner
 #: union: all of them under ``per-shard`` / ``deadline``, only those
@@ -88,6 +90,15 @@ class FlushPolicy:
         set, on any async kind.  ``parse`` defaults it to
         ``4 × batch_size`` for the ``deadline`` and ``owner-set`` kinds
         and leaves it ``None`` (trigger off) for ``per-shard``.
+      deadline_s: max WALL-CLOCK seconds the oldest pending query of a
+        home may wait before a forced flush (``None`` = trigger off).
+        The tick deadline bounds waiting in *submissions*, which under
+        an open-loop arrival process is rate-independent — a home on a
+        quiet stream can still hold a query for an arbitrarily long
+        wall time.  A wall deadline is what an SLO actually bounds.
+        Only the thread driver can FIRE it while traffic is idle (its
+        idle loop services due homes); the inline engine consults it at
+        submit/flush boundaries only.
       owner_set_max: (``owner-set`` kind) owner sets LARGER than this
         collapse into the :data:`POOL` home instead of getting their
         own.  The subset-flush win scales with how far an owner set
@@ -113,6 +124,7 @@ class FlushPolicy:
     batch_size: int | None = None
     union_budget: int | None = None
     deadline: int | None = None
+    deadline_s: float | None = None
     owner_set_max: int | None = None
     max_in_flight: int = 2
     threaded: bool = False
@@ -121,6 +133,8 @@ class FlushPolicy:
     def __post_init__(self):
         if self.kind not in _KINDS:
             raise ValueError(f"unknown flush policy {self.kind!r}; use {_KINDS}")
+        if self.deadline_s is not None and self.deadline_s <= 0:
+            raise ValueError("deadline_s must be positive (None = trigger off)")
         if self.max_in_flight < 1:
             raise ValueError("max_in_flight must be >= 1")
         if self.threaded and self.kind == "global":
@@ -177,13 +191,26 @@ class FlushScheduler:
       names: table names in that order.
       q_block: the server's query block size (union accounting unit).
       policy: a normalized :class:`FlushPolicy`.
+      seq_decode: ``seq -> (producer label, local seq)`` decoder for
+        the packed per-producer sequence ids (DESIGN.md §10) — feeds
+        the per-producer accounting in :meth:`state`.  ``None`` treats
+        every seq as the default producer's (raw local ids).
     """
 
     def __init__(self, plan, layouts, names: Sequence[str], q_block: int,
-                 policy: FlushPolicy):
+                 policy: FlushPolicy,
+                 seq_decode: Optional[Callable] = None):
         self.q_block = q_block
         self.policy = policy
         self.names = list(names)
+        self._seq_decode = (
+            seq_decode if seq_decode is not None
+            else (lambda s: (DEFAULT_PRODUCER, int(s)))
+        )
+        #: cumulative pushes per producer label (per-producer share of
+        #: the routed stream; pending_by_producer in :meth:`state` is
+        #: the instantaneous complement)
+        self.pushed_by_producer: Dict[str, int] = {}
         self._group_of = {
             name: np.asarray(layout.group_of, dtype=np.int64)
             for name, layout in zip(self.names, layouts)
@@ -203,6 +230,8 @@ class FlushScheduler:
             h: {} for h in homes
         }
         self._first_tick: Dict[Home, int] = {}
+        # wall-clock twin of _first_tick, for the deadline_s trigger
+        self._first_wall: Dict[Home, float] = {}
         self._tick = 0
         self._rr = 0
         self._pool_owners: set = set()
@@ -286,11 +315,16 @@ class FlushScheduler:
         home, groups, owners = self._route(table, query, advance=True)
         if home == POOL:
             self._pool_owners.update(int(o) for o in owners)
+        label = str(self._seq_decode(seq)[0])
+        self.pushed_by_producer[label] = (
+            self.pushed_by_producer.get(label, 0) + 1
+        )
         self._pending.setdefault(home, []).append((table, seq, list(query)))
         self._trackers.setdefault(home, {}).setdefault(
             table, BlockUnionTracker(self.q_block)
         ).add(groups)
         self._first_tick.setdefault(home, self._tick)
+        self._first_wall.setdefault(home, time.monotonic())
         self._tick += 1
         return home
 
@@ -300,11 +334,18 @@ class FlushScheduler:
         dispatch can requeue without resetting the deadline clock."""
         return self._first_tick.get(home)
 
+    def first_wall(self, home: Home):
+        """Wall-clock (``time.monotonic``) twin of :meth:`first_tick`,
+        captured/restored for the same requeue reason when the policy
+        carries a ``deadline_s``."""
+        return self._first_wall.get(home)
+
     def requeue(
         self,
         home: Home,
         entries: List[Tuple[str, int, list]],
         first_tick: int | None = None,
+        first_wall: float | None = None,
     ) -> None:
         """Puts a taken batch back at the FRONT of its home's queue.
 
@@ -337,6 +378,12 @@ class FlushScheduler:
             )
         else:
             self._first_tick.setdefault(home, self._tick)
+        if first_wall is not None:
+            self._first_wall[home] = min(
+                first_wall, self._first_wall.get(home, first_wall)
+            )
+        else:
+            self._first_wall.setdefault(home, time.monotonic())
 
     def record_quarantine(self, n: int) -> None:
         """Counts ``n`` queries permanently dropped by the server's
@@ -364,6 +411,11 @@ class FlushScheduler:
             return "union"
         if (self.policy.deadline is not None
                 and self._tick - self._first_tick[home] >= self.policy.deadline):
+            return "deadline"
+        if (self.policy.deadline_s is not None
+                and home in self._first_wall
+                and time.monotonic() - self._first_wall[home]
+                >= self.policy.deadline_s):
             return "deadline"
         return None
 
@@ -400,6 +452,7 @@ class FlushScheduler:
         self._pending[home] = []
         self._trackers[home] = {}
         self._first_tick.pop(home, None)
+        self._first_wall.pop(home, None)
         if home == POOL:
             owners = sorted(self._pool_owners)
             self._pool_owners = set()
@@ -424,14 +477,22 @@ class FlushScheduler:
         """
         pending_items = list(self._pending.items())
         union_fill = {}
+        pending_by_producer: Dict[str, int] = {}
         for h, q in pending_items:
             if q:
                 trackers = list(self._trackers.get(h, {}).values())
                 union_fill[str(h)] = sum(tr.fill for tr in trackers)
+                for _t, seq, _q in list(q):
+                    label = str(self._seq_decode(seq)[0])
+                    pending_by_producer[label] = (
+                        pending_by_producer.get(label, 0) + 1
+                    )
         return {
             "pending": {str(h): len(q) for h, q in pending_items if q},
             "union_fill": union_fill,
             "tick": self._tick,
             "requeues": self.requeues,
             "quarantined": self.quarantined,
+            "pending_by_producer": pending_by_producer,
+            "pushed_by_producer": dict(self.pushed_by_producer),
         }

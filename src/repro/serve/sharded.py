@@ -54,6 +54,19 @@ join the driver at it; plan patches still apply only at such barriers.
 A flush failure on the driver requeues its batch (same retry contract)
 and surfaces at the next ``submit()``/``drain()``.
 
+**Multi-producer front door** (DESIGN.md §10): ``submit()`` is safe
+under N concurrent producer threads.  Each producer (the ``producer=``
+label, lazily registered) owns a per-table **sequence space**; a stamp
+packs ``(local_seq, producer_id)`` into the one int64 sequence id the
+whole engine already carries (:mod:`repro.serve.producers`), so
+per-producer FIFO is preserved end to end and a full :meth:`drain`
+merges streams in the deterministic ``(local_seq, producer_id)``
+order — a pure function of what was submitted, never of thread
+scheduling.  ``drain(producer=...)`` hands back only that producer's
+rows (no cross-producer head-of-line mixing); :meth:`close` racing
+concurrent submits gives late submitters a clean ``RuntimeError`` and
+lands drained work in the ledger's ``lost_work``.
+
 **Self-healing failure policy** (DESIGN.md §8, default on via
 ``retry=``): a failed compile/dispatch retries in place with bounded
 exponential backoff + seeded jitter; a batch that keeps failing is
@@ -131,6 +144,7 @@ from repro.serve.faults import (
     RetryPolicy,
     latency_percentiles as _latency_percentiles,
 )
+from repro.serve.producers import ProducerRegistry
 from repro.serve.scheduler import POOL, FlushPolicy, FlushScheduler
 from repro.serve.tiers import HostFetchQueue, ResidencyIndex, TierConfig
 
@@ -196,6 +210,9 @@ class ShardedServeStats:
     in_flight_peak: int = 0                # deepest dispatch queue seen
     flush_wall: List[float] = dataclasses.field(default_factory=list)
     submit_wall: List[float] = dataclasses.field(default_factory=list)
+    # submit-stamp → result-materialized, one sample per async query
+    # (quarantined queries never complete, so they never sample)
+    e2e_wall: List[float] = dataclasses.field(default_factory=list)
     # ---- online replanning (DESIGN.md §6) ----
     replans: int = 0                       # patches applied (moves > 0)
     rebases: int = 0                       # no-op patches (load reanchor only)
@@ -308,6 +325,7 @@ class ShardedServeStats:
             },
             "flush_latency_s": _latency_percentiles(self.flush_wall),
             "submit_latency_s": _latency_percentiles(self.submit_wall),
+            "e2e_latency_s": _latency_percentiles(self.e2e_wall),
             "barrier_flushes": self.barrier_flushes,
             "deadline_flushes": self.deadline_flushes,
             "host_compile_s": self.host_compile_s,
@@ -388,8 +406,8 @@ class ShardedEmbeddingServer:
         so a flush's participants are exactly its queries' owners.
         Results are collected with :meth:`drain` (or :meth:`flush`,
         which is a barrier in async mode).  DESIGN.md §7.
-      union_budget / flush_deadline / owner_set_max / max_in_flight:
-        async policy knobs
+      union_budget / flush_deadline / flush_deadline_s / owner_set_max /
+        max_in_flight: async policy knobs
         (see :class:`~repro.serve.scheduler.FlushPolicy`); ignored under
         ``"global"``.
       threaded: run the async engine on a dedicated driver thread
@@ -438,6 +456,7 @@ class ShardedEmbeddingServer:
         flush_policy: str | FlushPolicy = "global",
         union_budget: int | None = None,
         flush_deadline: int | None = None,
+        flush_deadline_s: float | None = None,
         owner_set_max: int | None = None,
         max_in_flight: int = 2,
         threaded: bool = False,
@@ -580,13 +599,15 @@ class ShardedEmbeddingServer:
                 hb, tiers.host_deadline or 4 * hb
             )
         knobs_set = (union_budget is not None or flush_deadline is not None
+                     or flush_deadline_s is not None
                      or owner_set_max is not None or max_in_flight != 2
                      or threaded)
         if isinstance(flush_policy, str):
             if knobs_set:
                 flush_policy = FlushPolicy(
                     kind=flush_policy, union_budget=union_budget,
-                    deadline=flush_deadline, owner_set_max=owner_set_max,
+                    deadline=flush_deadline, deadline_s=flush_deadline_s,
+                    owner_set_max=owner_set_max,
                     max_in_flight=max_in_flight, threaded=threaded,
                 )
         elif knobs_set:
@@ -602,16 +623,20 @@ class ShardedEmbeddingServer:
         self._buffered = 0
         # ---- async flush engine state (DESIGN.md §7); inert under
         # the synchronous "global" policy ----
+        # ---- per-producer sequence spaces (DESIGN.md §10): every
+        # stamped id packs (local_seq, producer_id), so the engine's
+        # int64 seq plumbing carries the producer dimension for free --
+        self._registry = ProducerRegistry()
         self.scheduler: Optional[FlushScheduler] = (
             FlushScheduler(self.plan, self.layouts, self.names,
-                           q_block, self.policy)
+                           q_block, self.policy,
+                           seq_decode=self._registry.decode)
             if self.policy.is_async else None
         )
         self._in_flight: collections.deque = collections.deque()
         self._completed: Dict[str, List[Tuple[np.ndarray, np.ndarray]]] = {
             n: [] for n in self.names
         }
-        self._seq: Dict[str, int] = {n: 0 for n in self.names}
         # per-table row counts: submit()-time validation rejects
         # out-of-range ids BEFORE anything is enqueued, so a malformed
         # query can never poison a buffered batch (the retry contract's
@@ -622,6 +647,10 @@ class ShardedEmbeddingServer:
         # ---- self-healing failure policy + fault injection (§8) ----
         self.retry = RetryPolicy.parse(retry)
         self._injector = FaultInjector.parse(faults)
+        if self._injector is not None:
+            # poison keying speaks (table, producer, LOCAL seq): the
+            # injector decodes the packed ids the engine hands it
+            self._injector.bind_decoder(self._registry.decode)
         self._retry_rng = np.random.default_rng(self.retry.seed)
         # host copies of the logical tables: the watchdog's degraded
         # flush recomputes its rows here (reference gather+sum) — the
@@ -640,6 +669,27 @@ class ShardedEmbeddingServer:
         # bound is counted in the ledger instead of silently overwriting
         self._driver_errors: collections.deque = collections.deque()
         self._suppressed_errors = 0
+        # ---- multi-producer front door state (DESIGN.md §10) ----
+        # stamp lock: registration + seq stamp + closed check + driver
+        # start are one atomic step, so two producers' first submits
+        # cannot race two drivers into existence and a stamp can never
+        # interleave with close() or the drain-time seq reset
+        self._stamp_lock = threading.Lock()
+        # engine lock: serializes the INLINE engine (ingest/flush/
+        # barrier) under concurrent producers; the thread driver never
+        # takes it (the hand-off queue is its serialization)
+        self._engine_lock = threading.RLock()
+        # results lock: _completed appends (driver/host flush) vs the
+        # drain-time extract-and-swap
+        self._results_lock = threading.Lock()
+        self._closed = False
+        # submits past the stamp but not yet delivered (hand-off put in
+        # flight, or inline ingest running) — the seq-reset guard and
+        # close()'s drain loop both key off this being zero
+        self._pending_submits = 0
+        # submit-stamp timestamps, popped when the row materializes —
+        # the e2e_latency_s samples (async paths only)
+        self._e2e_t0: Dict[Tuple[str, int], float] = {}
 
     # ------------------------------------------------------------ serving --
 
@@ -940,7 +990,13 @@ class ShardedEmbeddingServer:
 
     # ----------------------------------------------------------- batching --
 
-    def submit(self, table: str, query: Sequence[int]) -> Dict[str, jax.Array]:
+    def submit(
+        self,
+        table: str,
+        query: Sequence[int],
+        *,
+        producer=None,
+    ) -> Dict[str, jax.Array]:
         """Buffers one query; flush behavior depends on the policy.
 
         Under ``"global"``: auto-flushes (synchronously) at
@@ -954,15 +1010,27 @@ class ShardedEmbeddingServer:
         run on the driver, so submit never blocks on a full in-flight
         pipeline.
 
-        The query is validated HERE, before anything is enqueued: a
-        malformed query (row ids outside the table) raises and leaves
-        every buffer/queue untouched, so retrying the pending work
-        never replays the offender.  Per-call host latency is recorded
-        (``submit_latency_s`` percentiles in the stats summary).
+        ``submit()`` is safe under N concurrent producer threads
+        (DESIGN.md §10): ``producer=`` names the calling stream (any
+        hashable; ``None`` is the default producer), lazily registered
+        on first stamp.  Each producer owns its own per-table sequence
+        space, so one stream's FIFO order never depends on another's
+        thread scheduling; a full :meth:`drain` merges streams in
+        deterministic ``(local_seq, producer_id)`` order and
+        ``drain(producer=...)`` returns one stream's rows alone.
+
+        The query is validated HERE, before anything is enqueued or a
+        sequence id is consumed: a malformed query (row ids outside
+        the table) raises and leaves every buffer/queue untouched, so
+        retrying the pending work never replays the offender.
+        Per-call host latency is recorded (``submit_latency_s``
+        percentiles in the stats summary).
 
         Args:
           table: table name the query reduces over.
           query: ragged row ids (an embedding-bag lookup).
+          producer: producer-stream label (async policies; ``None`` =
+            the default stream).
 
         Returns:
           The flush result (see :meth:`flush`) when a synchronous flush
@@ -971,14 +1039,17 @@ class ShardedEmbeddingServer:
         Raises:
           KeyError: ``table`` is not a served table.
           IndexError: a row id falls outside ``[0, rows)``.
+          RuntimeError: the server was :meth:`close`\\ d.
         """
         t0 = time.perf_counter()
         try:
-            return self._submit(table, query)
+            return self._submit(table, query, producer)
         finally:
             self.stats.record_submit(time.perf_counter() - t0)
 
-    def _submit(self, table: str, query: Sequence[int]) -> Dict[str, jax.Array]:
+    def _submit(
+        self, table: str, query: Sequence[int], producer=None
+    ) -> Dict[str, jax.Array]:
         if table not in self._buffer:
             raise KeyError(f"unknown table {table!r}")
         ids = np.asarray(list(query), dtype=np.int64)
@@ -991,20 +1062,75 @@ class ShardedEmbeddingServer:
                 )
         if self.scheduler is not None:
             self._raise_driver_error()
-            seq = self._seq[table]
-            self._seq[table] = seq + 1
             if self.policy.threaded:
-                if self._driver is None:
-                    self._start_driver()
-                self._handoff.put(("query", table, seq, list(query)))
+                with self._stamp_lock:
+                    # closed-check + stamp + driver-start are one
+                    # atomic step: a close() cannot slip between a
+                    # granted stamp and its hand-off accounting, and
+                    # two producers' first submits cannot race two
+                    # drivers into existence
+                    if self._closed:
+                        raise RuntimeError(
+                            "submit() on a closed server: close() "
+                            "stopped the driver; drain() still serves "
+                            "what was already submitted"
+                        )
+                    seq = self._registry.stamp(producer, table)
+                    if self._driver is None:
+                        self._start_driver()
+                    handoff = self._handoff
+                    self._e2e_t0[(table, seq)] = time.perf_counter()
+                    self._pending_submits += 1
+                try:
+                    handoff.put(("query", table, seq, list(query)))
+                finally:
+                    with self._stamp_lock:
+                        self._pending_submits -= 1
                 return {}
-            self._ingest(table, seq, query)
+            with self._stamp_lock:
+                if self._closed:
+                    raise RuntimeError("submit() on a closed server")
+                seq = self._registry.stamp(producer, table)
+                self._e2e_t0[(table, seq)] = time.perf_counter()
+                self._pending_submits += 1
+            try:
+                # the inline engine is not re-entrant: concurrent
+                # producers serialize here (they may block behind a
+                # flush — the never-blocks contract is the thread
+                # driver's, not the inline engine's)
+                with self._engine_lock:
+                    self._ingest(table, seq, query)
+            finally:
+                with self._stamp_lock:
+                    self._pending_submits -= 1
             return {}
-        self._buffer[table].append(list(query))
-        self._buffered += 1
-        if self._buffered >= self.batch_size:
-            return self.flush()
+        with self._engine_lock:
+            self._buffer[table].append(list(query))
+            self._buffered += 1
+            if self._buffered >= self.batch_size:
+                return self.flush()
         return {}
+
+    def register_producer(self, producer=None) -> int:
+        """Pre-registers a producer label, returning its pid.
+
+        Optional — a first ``submit(producer=...)`` registers lazily —
+        but registration order is the cross-producer merge tiebreak
+        (DESIGN.md §10), so benches/tests that want a reproducible
+        interleave register all labels up front, before any thread
+        races a first stamp.
+        """
+        return self._registry.register(producer)
+
+    def next_seq(self, table: str, producer=None) -> int:
+        """Next LOCAL sequence id ``producer`` (default stream when
+        ``None``) would stamp on ``table``; 0 for a producer that
+        never submitted or after a quiesced drain's reset."""
+        return self._registry.next_seq(table, producer)
+
+    def producers(self) -> List:
+        """Registered producer labels in pid (merge-tiebreak) order."""
+        return self._registry.producers()
 
     def flush(self) -> Dict[str, jax.Array]:
         """Serves and clears all buffered work.
@@ -1110,8 +1236,8 @@ class ShardedEmbeddingServer:
             seqs.append(seq)
             rows.append(self._cold_row(table, query))
         for table, (seqs, rows) in rows_of.items():
-            self._completed[table].append(
-                (np.asarray(seqs, dtype=np.int64), np.stack(rows))
+            self._record_completed(
+                table, np.asarray(seqs, dtype=np.int64), np.stack(rows)
             )
         if not forced and self._staged is not None:
             # cold-dominated traffic may never trip a device flush — the
@@ -1166,13 +1292,15 @@ class ShardedEmbeddingServer:
         if not forced and self.scheduler.due_reason(home) == "deadline":
             self.stats.deadline_flushes += 1
         first_tick = self.scheduler.first_tick(home)
+        first_wall = self.scheduler.first_wall(home)
         entries, participants = self.scheduler.take(home)
         if not entries:
             return
         try:
             admitted = self._heal_dispatch(home, entries, participants)
         except Exception:
-            self.scheduler.requeue(home, entries, first_tick=first_tick)
+            self.scheduler.requeue(home, entries, first_tick=first_tick,
+                                   first_wall=first_wall)
             raise
         # admission is OUTSIDE the requeue guard: a retire failure while
         # trimming the pipeline must not requeue a batch that is already
@@ -1230,7 +1358,9 @@ class ShardedEmbeddingServer:
             # With bisection on, entries is a single isolated query;
             # with it off, the whole batch quarantines (recorded).
             for table, seq, _query in entries:
-                ledger.quarantine(table, seq, last)
+                prod, local = self._registry.decode(seq)
+                ledger.quarantine(table, local, last, producer=prod)
+                self._e2e_t0.pop((table, seq), None)
             self.scheduler.record_quarantine(len(entries))
             return []
         raise last
@@ -1355,7 +1485,21 @@ class ShardedEmbeddingServer:
             e.sbq, self.dim, time.perf_counter() - e.t0, e.n_queries
         )
         for name, out in zip(e.served, outs):
-            self._completed[name].append((e.seqs[name], np.asarray(out)))
+            self._record_completed(name, e.seqs[name], np.asarray(out))
+
+    def _record_completed(
+        self, table: str, seqs: np.ndarray, rows: np.ndarray
+    ) -> None:
+        """Stashes one flush's rows for :meth:`drain`, samples e2e
+        latency, under the results lock (a drain on another thread may
+        be extracting concurrently)."""
+        now = time.perf_counter()
+        for s in seqs:
+            t0 = self._e2e_t0.pop((table, int(s)), None)
+            if t0 is not None:
+                self.stats.e2e_wall.append(now - t0)
+        with self._results_lock:
+            self._completed[table].append((seqs, rows))
 
     def _wait_outputs(self, e: _InFlight) -> List[np.ndarray]:
         """Blocks on one flush's outputs, bounded by the watchdog.
@@ -1412,8 +1556,8 @@ class ShardedEmbeddingServer:
             seqs.append(seq)
             rows.append(row.astype(tab.dtype, copy=False))
         for table, (seqs, rows) in rows_of.items():
-            self._completed[table].append(
-                (np.asarray(seqs, dtype=np.int64), np.stack(rows))
+            self._record_completed(
+                table, np.asarray(seqs, dtype=np.int64), np.stack(rows)
             )
         self.stats.record(
             e.sbq, self.dim, time.perf_counter() - e.t0, e.n_queries
@@ -1433,18 +1577,20 @@ class ShardedEmbeddingServer:
         item (FIFO), then runs this barrier inline — so the ordering
         guarantees are identical to the inline engine's.
         """
-        if (self._driver is not None
-                and threading.current_thread() is not self._driver):
-            done = threading.Event()
-            driver = self._driver
-            self._handoff.put(("barrier", done))
-            # never wait forever on a driver that died or was closed
-            # under us — poll its liveness while waiting for the token
-            while not done.wait(0.1):
-                if self._driver is not driver or not driver.is_alive():
-                    break
-            self._raise_driver_error()
-            return
+        driver = self._driver
+        if (driver is not None
+                and threading.current_thread() is not driver):
+            handoff = self._handoff
+            if handoff is not None:
+                done = threading.Event()
+                handoff.put(("barrier", done))
+                # never wait forever on a driver that died or was
+                # closed under us — poll its liveness while waiting
+                while not done.wait(0.1):
+                    if self._driver is not driver or not driver.is_alive():
+                        break
+                self._raise_driver_error()
+                return
         for home in self.scheduler.homes_with_pending():
             self._flush_home(home, forced=True)
         while self._in_flight:
@@ -1485,6 +1631,11 @@ class ShardedEmbeddingServer:
             except queue.Empty:
                 try:
                     self._retire_ready()
+                    # a wall deadline (policy.deadline_s) must fire even
+                    # when no submission arrives to consult the trigger —
+                    # the idle loop is the only clock a quiet stream has
+                    if self.policy.deadline_s is not None:
+                        self._maybe_flush()
                 except Exception as e:  # device fault surfacing at retire
                     self._stash_driver_error(e)
                 continue
@@ -1495,6 +1646,10 @@ class ShardedEmbeddingServer:
                 except Exception as e:
                     self._stash_driver_error(e)
                 finally:
+                    # task_done BEFORE waking the waiter: the seq-reset
+                    # guard reads unfinished_tasks right after a drain's
+                    # barrier returns, and this token must not count
+                    self._handoff.task_done()
                     done.set()
                 continue
             _, table, seq, query_list = item
@@ -1504,6 +1659,11 @@ class ShardedEmbeddingServer:
                 # the batch is already requeued; surface the failure at
                 # the caller's next submit()/drain() (retry contract)
                 self._stash_driver_error(e)
+            finally:
+                # a popped-but-unprocessed item is invisible to both
+                # empty() and the scheduler — unfinished_tasks is the
+                # counter that still sees it (seq-reset guard)
+                self._handoff.task_done()
 
     def _retire_ready(self) -> None:
         """Retires in-flight flushes whose outputs are already
@@ -1579,21 +1739,31 @@ class ShardedEmbeddingServer:
     _CLOSE_JOIN_S = 30.0
 
     def close(self) -> None:
-        """Stops the thread driver (if running).  Any hand-off items the
-        driver had not yet popped are pushed back into the scheduler,
-        so no submitted query (or its stamped sequence id) is ever
-        dropped — a later :meth:`drain` serves them inline.
+        """Stops the thread driver (if running) and closes the front
+        door: any later :meth:`submit` — including one already racing
+        this call on another thread — gets a clean ``RuntimeError``
+        instead of work that would silently never flush.  Hand-off
+        items the driver had not yet popped are pushed back into the
+        scheduler, so no submitted query (or its stamped sequence id)
+        is ever dropped — a later :meth:`drain` serves them inline
+        (the driver does not restart).
 
         Idempotent and bounded: a second ``close()`` is a no-op, the
         driver join can never hang past :data:`_CLOSE_JOIN_S` (a driver
         wedged in un-watchdogged device work is abandoned — it is a
-        daemon thread — and recorded), and any work still unserved at
-        close (requeued batches, pushed-back hand-off items, unretired
-        in-flight flushes) is summarized into the ledger's
-        ``lost_work`` instead of silently discarded — it stays queued,
-        so a later :meth:`drain` still serves it (the server remains
-        usable; a later submit restarts the driver).
+        daemon thread — and recorded), and a producer blocked in a
+        full hand-off ``put()`` is unblocked by the push-back loop
+        below (its item is drained like the rest), so close can never
+        deadlock against concurrent submitters.  Work still unserved
+        at close (requeued batches, pushed-back hand-off items,
+        unretired in-flight flushes) is summarized into the ledger's
+        ``lost_work`` instead of silently discarded.
         """
+        with self._stamp_lock:
+            already = self._closed
+            self._closed = True
+        if already:
+            return
         leaked = False
         if self._driver is not None:
             self._driver_stop.set()
@@ -1602,14 +1772,23 @@ class ShardedEmbeddingServer:
             self._driver = None
         pushed_back = 0
         if self._handoff is not None:
+            # drain until no producer is still inside put(): every get
+            # below frees a slot, so a submitter blocked on the full
+            # queue completes its put and exits via _pending_submits
             while True:
                 try:
                     item = self._handoff.get_nowait()
                 except queue.Empty:
-                    break
+                    with self._stamp_lock:
+                        if (self._pending_submits == 0
+                                and self._handoff.empty()):
+                            break
+                    time.sleep(0.001)
+                    continue
                 if item[0] == "barrier":
-                    # single-producer contract: a waiter can't also be
-                    # calling close(); wake it defensively regardless
+                    # a concurrent drain()'s token: wake the waiter
+                    # (its barrier re-runs inline once the driver is
+                    # observed gone)
                     item[1].set()
                 else:
                     _, table, seq, query_list = item
@@ -1635,44 +1814,100 @@ class ShardedEmbeddingServer:
     def __exit__(self, *exc) -> None:
         self.close()
 
-    def drain(self) -> Dict[str, jax.Array]:
+    def drain(self, producer=None) -> Dict[str, jax.Array]:
         """Barrier + result hand-off for async policies.
 
         Flushes every pending home, retires the whole in-flight queue,
         applies a staged plan patch (the only legal application point
         besides a triggered barrier), and returns everything served
-        since the previous hand-off, per table in submission order.
-        Under the thread driver this joins the driver at a barrier
-        token; a failure stashed by the driver (or one raised by the
-        barrier's own retry of requeued work) surfaces here — retry by
-        draining again once the transient clears.
+        since the previous hand-off.  Under the thread driver this
+        joins the driver at a barrier token; a failure stashed by the
+        driver (or one raised by the barrier's own retry of requeued
+        work) surfaces here — retry by draining again once the
+        transient clears.
+
+        With ``producer=None`` (a FULL drain) every completed row is
+        returned, merged per table in the deterministic ``(local_seq,
+        producer_id)`` order (DESIGN.md §10) — single-producer streams
+        see exactly the pre-§10 submission order.  With ``producer=``
+        a label, only that producer's rows return (in ITS submission
+        order); every other stream's completed work stays stashed for
+        its own drain — no cross-producer head-of-line result mixing.
 
         Returns:
-          ``{table: (n_queries_since_last_drain, dim)}`` arrays; ``{}``
-          for tables with no completed work.
+          ``{table: (n_queries, dim)}`` arrays; ``{}`` for tables with
+          no completed work (for this producer).
         """
         if self.scheduler is None:
+            if producer is not None:
+                raise ValueError(
+                    "drain(producer=...) needs an async flush policy"
+                )
             return self.flush()
         self._raise_driver_error()
-        self._barrier()
+        if self._driver is not None:
+            self._barrier()
+        else:
+            # inline engine: serialize against concurrent submits
+            with self._engine_lock:
+                self._barrier()
         out: Dict[str, jax.Array] = {}
-        for name in self.names:
-            chunks = self._completed[name]
-            if not chunks:
-                continue
-            seqs = np.concatenate([c[0] for c in chunks])
-            rows = np.concatenate([c[1] for c in chunks])
-            out[name] = jnp.asarray(rows[np.argsort(seqs)])
-        self._completed = {n: [] for n in self.names}
-        # sequence ids restart ONLY when no requeued/pending work is
-        # still carrying the old ones — resetting with a failed flush's
-        # entries alive (or cold queries still queued host-side) would
-        # hand new submissions colliding seqs and scramble the next
-        # drain's argsort row order
-        if (self.scheduler.pending_total() == 0 and not self._in_flight
-                and (self._host_queue is None
-                     or len(self._host_queue) == 0)):
-            self._seq = {n: 0 for n in self.names}
+        with self._results_lock:
+            if producer is None:
+                for name in self.names:
+                    chunks = self._completed[name]
+                    if not chunks:
+                        continue
+                    seqs = np.concatenate([c[0] for c in chunks])
+                    rows = np.concatenate([c[1] for c in chunks])
+                    # packed ids sort as (local_seq, producer_id): the
+                    # cross-producer merge is deterministic, and within
+                    # one producer it is that producer's FIFO
+                    out[name] = jnp.asarray(rows[np.argsort(seqs)])
+                self._completed = {n: [] for n in self.names}
+            else:
+                pid = self._registry.pid(producer)
+                stride = self._registry.stride
+                for name in self.names:
+                    chunks = self._completed[name]
+                    if not chunks or pid is None:
+                        continue
+                    seqs = np.concatenate([c[0] for c in chunks])
+                    rows = np.concatenate([c[1] for c in chunks])
+                    mine = (seqs % stride) == pid
+                    if mine.any():
+                        sel = seqs[mine]
+                        out[name] = jnp.asarray(
+                            rows[mine][np.argsort(sel)]
+                        )
+                    rest = ~mine
+                    self._completed[name] = (
+                        [(seqs[rest], rows[rest])] if rest.any() else []
+                    )
+        # sequence ids restart ONLY at full quiescence — nothing
+        # pending, in flight, queued host-side, stashed for another
+        # producer's drain, or still inside a submit()'s stamped-but-
+        # undelivered window (the hand-off's unfinished_tasks counts
+        # popped-but-unprocessed items too).  Resetting any earlier
+        # would hand new submissions colliding packed seqs and
+        # scramble a later drain's merge order.  Per-producer drains
+        # never reset: other streams' counters are always live.
+        if producer is None:
+            with self._results_lock:
+                with self._stamp_lock:
+                    handoff = self._handoff
+                    busy = (
+                        self._pending_submits > 0
+                        or (handoff is not None
+                            and handoff.unfinished_tasks > 0)
+                    )
+                    if (not busy
+                            and self.scheduler.pending_total() == 0
+                            and not self._in_flight
+                            and (self._host_queue is None
+                                 or len(self._host_queue) == 0)
+                            and not any(self._completed.values())):
+                        self._registry.reset_seqs()
         return out
 
     # ------------------------------------------------------------- report --
@@ -1726,6 +1961,7 @@ class ShardedEmbeddingServer:
                 "batch_size": self.policy.batch_size,
                 "union_budget": self.policy.union_budget,
                 "deadline": self.policy.deadline,
+                "deadline_s": self.policy.deadline_s,
                 "max_in_flight": self.policy.max_in_flight,
                 "in_flight": len(self._in_flight),
                 "threaded": self.policy.threaded,
@@ -1733,7 +1969,9 @@ class ShardedEmbeddingServer:
                 "handoff_pending": (
                     self._handoff.qsize() if self._handoff is not None else 0
                 ),
+                "closed": self._closed,
                 **self.scheduler.state(),
+                "producers": self._registry.state(),
             }
         if self.tracker is not None:
             rep["replan"] = {

@@ -1,0 +1,352 @@
+"""Multi-producer front door (DESIGN.md §10): N concurrent producer
+threads submitting into one server must keep every per-producer stream
+FIFO, merge deterministically — the packed ``(local_seq, producer_id)``
+order, never the OS thread schedule — and survive the two lifecycle
+races a concurrent front door actually hits: ``drain()``'s sequence
+reset while submits are still in flight, and ``close()`` racing live
+submitters.
+
+All identity checks are pinned on integer-valued float tables (every
+partial sum exact in f32), so any scheduling-dependent merge, dropped
+or duplicated stamp, or torn sequence counter fails as a bit-level
+mismatch — not as a tolerance judgment call.
+"""
+
+import threading
+import time
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.reduction import reduce_dense_oracle
+from repro.data import zipf_queries
+from repro.serve import ShardedEmbeddingServer
+from repro.serve.drift import ReplanConfig
+
+ROWS, DIM = 160, 128
+TABLE_CYCLE = ("a", "b")
+
+
+def _int_table(seed):
+    """Integer-valued f32 table: partial sums are exact in float32."""
+    return np.random.default_rng(seed).integers(
+        -8, 9, size=(ROWS, DIM)
+    ).astype(np.float32)
+
+
+TABLES = {"a": _int_table(11), "b": _int_table(12)}
+HISTORIES = {"a": zipf_queries(ROWS, 48, 5.0, seed=13),
+             "b": zipf_queries(ROWS, 48, 5.0, seed=14)}
+
+
+def _server(*, num_shards=2, batch_size=8, threaded=True, **kw):
+    return ShardedEmbeddingServer(
+        TABLES, HISTORIES, num_shards=num_shards, q_block=4,
+        group_size=16, batch_size=batch_size, flush_policy="per-shard",
+        threaded=threaded, **kw,
+    )
+
+
+def _streams(n_producers, n_submits, seed0=100):
+    """One query stream per producer (tables alternate per submit)."""
+    return [
+        list(zipf_queries(ROWS, n_submits, 5.0, seed=seed0 + p,
+                          num_baskets=max(16, n_submits // 4)))
+        for p in range(n_producers)
+    ]
+
+
+def _submit_concurrently(srv, streams, *, labels=None, jitter=0):
+    """Submits every stream from its own thread; returns per-thread
+    exceptions (empty on success).  ``jitter`` sleeps every few
+    submits so lifecycle races (drain/close) can interleave."""
+    labels = labels or [f"p{i}" for i in range(len(streams))]
+    errs = [[] for _ in streams]
+
+    def body(idx):
+        try:
+            for i, q in enumerate(streams[idx]):
+                if jitter and i % 8 == 7:
+                    time.sleep(jitter)
+                srv.submit(TABLE_CYCLE[i % 2], q, producer=labels[idx])
+        except Exception as e:
+            errs[idx].append(e)
+
+    threads = [threading.Thread(target=body, args=(i,), daemon=True)
+               for i in range(len(streams))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+        assert not t.is_alive(), "producer thread wedged"
+    return labels, [e for es in errs for e in es]
+
+
+def _producer_oracle(stream):
+    """Expected per-table FIFO rows of ONE producer's stream."""
+    per = {n: [] for n in TABLE_CYCLE}
+    for i, q in enumerate(stream):
+        per[TABLE_CYCLE[i % 2]].append(q)
+    return {
+        n: np.asarray(reduce_dense_oracle(jnp.asarray(TABLES[n]), qs))
+        for n, qs in per.items() if qs
+    }
+
+
+# ------------------------------------------------------------- stress --
+
+
+def test_multiproducer_stress_fifo_deterministic():
+    """The acceptance stress: 8 producers x 512 submits on the thread
+    driver.  Every producer's ``drain(producer=...)`` must hand back
+    exactly its own stream, in its own submission order, bit-identical
+    to the host oracle — independent of how the OS interleaved the
+    submitting threads."""
+    n_prod, n_sub = 8, 512
+    streams = _streams(n_prod, n_sub)
+    srv = _server(num_shards=4, batch_size=16)
+    labels = [f"p{i}" for i in range(n_prod)]
+    for lab in labels:
+        srv.register_producer(lab)
+    _, errs = _submit_concurrently(srv, streams, labels=labels)
+    assert not errs, errs
+    for lab, stream in zip(labels, streams):
+        out = srv.drain(producer=lab)
+        want = _producer_oracle(stream)
+        assert set(out) == set(want)
+        for n in want:
+            np.testing.assert_array_equal(np.asarray(out[n]), want[n])
+    # every stream handed off: nothing left for a final full drain
+    assert srv.drain() == {}
+    # the scheduler's per-producer accounting saw every submit
+    pushed = srv.scheduler.pushed_by_producer
+    assert all(pushed[lab] == n_sub for lab in labels), pushed
+    srv.close()
+
+
+@pytest.mark.parametrize("num_shards", [1, 2, 4])
+@pytest.mark.parametrize("threaded", [False, True])
+def test_merged_drain_bit_identical_to_single_producer_oracle(
+        num_shards, threaded):
+    """A full drain's cross-producer merge is the deterministic
+    ``(local_seq, producer_id)`` interleave: replaying the SAME logical
+    traffic through a fresh single-producer server in that exact order
+    must produce a bit-identical drain, for every shard count on both
+    the inline engine and the thread driver."""
+    n_prod, n_sub = 4, 24
+    streams = _streams(n_prod, n_sub, seed0=200)
+    srv = _server(num_shards=num_shards, threaded=threaded)
+    for p in range(n_prod):
+        srv.register_producer(f"p{p}")
+    _, errs = _submit_concurrently(srv, streams)
+    assert not errs, errs
+    got = {n: np.asarray(o) for n, o in srv.drain().items()}
+    srv.close()
+
+    # single-producer oracle replay in merge order: position-major,
+    # producer-minor (all producers alternate tables identically, so a
+    # position's table only depends on the position)
+    oracle = _server(num_shards=num_shards, threaded=threaded)
+    for i in range(n_sub):
+        for p in range(n_prod):
+            oracle.submit(TABLE_CYCLE[i % 2], streams[p][i])
+    want = {n: np.asarray(o) for n, o in oracle.drain().items()}
+    oracle.close()
+    assert set(got) == set(want)
+    for n in want:
+        np.testing.assert_array_equal(got[n], want[n])
+
+
+# ------------------------------------------------------ patch barrier --
+
+
+def test_patch_applies_at_fifo_barrier_under_concurrent_producers():
+    """The §7.3 barrier rule under N producers: a drift-staged plan
+    patch may only apply with the pipeline empty — at a barrier token
+    that is FIFO with every producer's hand-off traffic — and every
+    producer's drained stream stays exact across the plan transition."""
+    n_prod = 4
+    streams = [list(zipf_queries(ROWS, 24, 5.0, seed=300 + p))
+               for p in range(n_prod)]
+    perm = np.random.default_rng(34).permutation(ROWS)
+    # drift: every producer's tail traffic permutes to new hot rows
+    streams = [
+        s[:8] + [perm[np.asarray(q, np.int64)] for q in s[8:]]
+        for s in streams
+    ]
+    srv = _server(
+        num_shards=2, batch_size=8, max_in_flight=4,
+        # eq1_batch large enough that Eq. 1 replicates groups even
+        # under drift — otherwise every event is a rebase and nothing
+        # ever stages (same setup as the single-producer spy test)
+        batch_size_for_eq1=512,
+        replan=ReplanConfig(threshold=0.15, half_life=1.0, min_queries=8,
+                            slack_tiles=8),
+    )
+    applied_with_in_flight = []
+    orig_apply = srv._apply_staged_patch
+
+    def spy_apply():
+        if srv._staged is not None:
+            applied_with_in_flight.append(len(srv._in_flight))
+        orig_apply()
+
+    srv._apply_staged_patch = spy_apply
+    labels = [f"p{i}" for i in range(n_prod)]
+    errs = []
+
+    def body(idx):
+        try:
+            for q in streams[idx]:
+                srv.submit("a", q, producer=labels[idx])
+        except Exception as e:
+            errs.append(e)
+
+    threads = [threading.Thread(target=body, args=(i,), daemon=True)
+               for i in range(n_prod)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+        assert not t.is_alive(), "producer thread wedged"
+    assert not errs, errs
+    outs = {lab: srv.drain(producer=lab) for lab in labels}
+    srv.close()
+    assert applied_with_in_flight, "no patch was ever applied"
+    assert all(n == 0 for n in applied_with_in_flight), (
+        "patch applied with flushes in flight"
+    )
+    assert srv.stats.barrier_flushes >= 1
+    for lab, stream in zip(labels, streams):
+        want = np.asarray(
+            reduce_dense_oracle(jnp.asarray(TABLES["a"]), stream)
+        )
+        np.testing.assert_array_equal(np.asarray(outs[lab]["a"]), want)
+
+
+# ---------------------------------------------------- lifecycle races --
+
+
+def test_drain_seq_reset_race_with_concurrent_submits():
+    """Regression: full drains racing a live submitter must never
+    reset the sequence spaces while a stamp is anywhere in flight
+    (stamped-but-unqueued, queued, popped-but-unprocessed, or stashed
+    for a later drain).  A broken guard hands out colliding packed
+    seqs and scrambles a later drain's merge — caught here as a
+    bit-level mismatch of the concatenated drains against the FIFO
+    oracle.  (A reset at GENUINE quiescence mid-stream is legal: the
+    next epoch's seqs restart at 0 only after everything before was
+    already handed off, so concatenation order is unaffected.)"""
+    n_sub = 150
+    stream = list(zipf_queries(ROWS, n_sub, 5.0, seed=400, num_baskets=32))
+    srv = _server(num_shards=2, batch_size=4)
+    done = threading.Event()
+    errs = []
+
+    def body():
+        try:
+            for i, q in enumerate(stream):
+                srv.submit("a", q)
+                if i % 8 == 7:
+                    time.sleep(0.001)  # let drains interleave
+        except Exception as e:
+            errs.append(e)
+        finally:
+            done.set()
+
+    t = threading.Thread(target=body, daemon=True)
+    chunks = []
+    t.start()
+    while not done.is_set():
+        out = srv.drain()
+        if "a" in out:
+            chunks.append(np.asarray(out["a"]))
+    t.join(timeout=60)
+    assert not t.is_alive() and not errs, errs
+    out = srv.drain()
+    if "a" in out:
+        chunks.append(np.asarray(out["a"]))
+    srv.close()
+    got = np.concatenate(chunks)
+    want = np.asarray(reduce_dense_oracle(jnp.asarray(TABLES["a"]), stream))
+    np.testing.assert_array_equal(got, want)
+    # the final drain observed full quiescence: counters restarted
+    assert srv.next_seq("a") == 0
+
+
+def test_close_racing_concurrent_submits():
+    """close() against 4 live submitters: late submits get the clean
+    RuntimeError (never a hang or a silently dropped query), work still
+    queued at close is recorded in ``ledger.lost_work`` and served by a
+    later inline drain, and a second close is an idempotent no-op."""
+    n_prod, n_sub = 4, 60
+    streams = _streams(n_prod, n_sub, seed0=500)
+    # batch far above the traffic: everything stays pending, so the
+    # close must find (and account) undispatched work
+    srv = _server(num_shards=2, batch_size=256)
+    labels = [f"p{i}" for i in range(n_prod)]
+    accepted = [0] * n_prod
+    rejected = [0] * n_prod
+    errs = []
+
+    def body(idx):
+        try:
+            for i, q in enumerate(streams[idx]):
+                try:
+                    srv.submit(TABLE_CYCLE[i % 2], q, producer=labels[idx])
+                    accepted[idx] += 1
+                except RuntimeError as e:
+                    assert "closed server" in str(e)
+                    rejected[idx] += 1
+                time.sleep(0.0005)
+        except Exception as e:
+            errs.append(e)
+
+    threads = [threading.Thread(target=body, args=(i,), daemon=True)
+               for i in range(n_prod)]
+    for t in threads:
+        t.start()
+    time.sleep(0.03)
+    srv.close()
+    for t in threads:
+        t.join(timeout=30)
+        assert not t.is_alive(), "submitter deadlocked against close()"
+    assert not errs, errs
+    assert sum(rejected) > 0, "close() landed after every submit"
+    assert sum(accepted) > 0, "close() landed before any submit"
+    assert srv._driver is None and srv._handoff is None
+    lost = srv.stats.ledger.lost_work
+    assert lost is not None and lost["requeued"] > 0, lost
+    # idempotent double close, bounded
+    t0 = time.perf_counter()
+    srv.close()
+    assert time.perf_counter() - t0 < 2.0
+    # accepted work survives the close: a later drain serves it inline
+    served = 0
+    for lab in labels:
+        for o in srv.drain(producer=lab).values():
+            served += np.asarray(o).shape[0]
+    assert served == sum(accepted)
+
+
+def test_wall_deadline_flushes_idle_stream():
+    """FlushPolicy.deadline_s: a quiet stream's pending queries must
+    flush when their wall age crosses the bound — fired by the thread
+    driver's idle loop, with no further submission to consult the
+    trigger — and the drained rows stay exact."""
+    stream = list(zipf_queries(ROWS, 4, 5.0, seed=600, num_baskets=8))
+    srv = _server(num_shards=2, batch_size=64, flush_deadline_s=0.05)
+    for q in stream:
+        srv.submit("a", q, producer="p0")
+    deadline = time.perf_counter() + 30.0
+    while (srv.stats.deadline_flushes < 1
+           and time.perf_counter() < deadline):
+        time.sleep(0.01)
+    assert srv.stats.deadline_flushes >= 1, (
+        "wall deadline never fired on the idle stream"
+    )
+    out = srv.drain(producer="p0")
+    srv.close()
+    want = np.asarray(reduce_dense_oracle(jnp.asarray(TABLES["a"]), stream))
+    np.testing.assert_array_equal(np.asarray(out["a"]), want)

@@ -376,7 +376,7 @@ def test_submit_validates_ids_before_enqueue(policy):
             srv.submit("a", bad)
     if srv.scheduler is not None:
         assert srv.scheduler.pending_total() == len(good)
-        assert srv._seq["a"] == len(good), "rejected query consumed a seq"
+        assert srv.next_seq("a") == len(good), "rejected query consumed a seq"
     else:
         assert srv._buffered == len(good)
     out = srv.flush()
@@ -410,13 +410,13 @@ def test_seq_reset_guarded_by_requeued_entries():
     with pytest.raises(RuntimeError):
         srv.submit("a", last)  # trips the flush → fails → requeues
     assert srv.scheduler.pending_total() == 8
-    assert srv._seq["a"] == 8
+    assert srv.next_seq("a") == 8
     # a barrier that hands back without flushing (the partial-recovery
     # hazard) must not let drain() reset seqs over live requeued work
     orig_barrier = srv._barrier
     srv._barrier = lambda: None
     assert srv.drain() == {}
-    assert srv._seq["a"] == 8, "seq reset while requeued entries alive"
+    assert srv.next_seq("a") == 8, "seq reset while requeued entries alive"
     srv._barrier = orig_barrier
     srv._compile_and_dispatch = orig
     more = zipf_queries(rows, 3, 5.0, seed=62)
@@ -426,7 +426,7 @@ def test_seq_reset_guarded_by_requeued_entries():
     stream = list(good) + [last] + list(more)
     want = np.asarray(reduce_dense_oracle(jnp.asarray(tables["a"]), stream))
     np.testing.assert_array_equal(np.asarray(out["a"]), want)
-    assert srv._seq["a"] == 0  # clean drain: seqs restart
+    assert srv.next_seq("a") == 0  # clean drain: seqs restart
 
 
 def test_route_is_a_peek():
