@@ -18,8 +18,22 @@ Also records interpret-mode wall times for the flat vs query-blocked
 Pallas kernel (regression tracking only — interpret mode is not TPU
 performance; the grid-cell count is the hardware-independent signal).
 
+The ``scale`` section times the full plan build (blocked co-occurrence →
+epoch-blocked grouping → replication → layout → shard placement) at 1M
+and 10M rows on a :func:`repro.data.scale_trace` template workload,
+recording per-stage wall time and rows/s.  The acceptance gates: the 1M
+epoch-blocked grouping rate must beat a 5x extrapolation of the 100k
+batch-heap rate, and the 10M build must complete under the recorded
+wall budget with O(block) peak intermediates (``block_pairs`` caps the
+enumerated pair buffer; the CSR output itself is necessarily O(edges)).
+
 Env knobs: ``RECROSS_PIPELINE_QUERIES`` / ``RECROSS_PIPELINE_ROWS``
-(defaults 100_000 / 100_000), ``RECROSS_PIPELINE_REF_SAMPLE`` (500).
+(defaults 100_000 / 100_000), ``RECROSS_PIPELINE_REF_SAMPLE`` (500),
+``RECROSS_SCALE_ROWS`` (comma list, default "1000000,10000000"),
+``RECROSS_SCALE_EPOCH`` (64), ``RECROSS_SCALE_BLOCK_PAIRS`` (2**22),
+``RECROSS_SCALE_EXACT_MAX`` (largest size that also runs the exact
+grouping for the quality ratio; default 2_000_000).  Set
+``RECROSS_PLAN_PROGRESS=1`` for live per-stage progress lines.
 """
 
 from __future__ import annotations
@@ -45,9 +59,11 @@ from repro.core import (
     simulate_batch,
 )
 from repro.core.cooccurrence import _reference_build_cooccurrence
+from repro.core.grouping import grouping_quality
 from repro.core.mapping import _reference_query_tile_bitmaps
 from repro.core.simulator import _reference_simulate_batch
-from repro.data import zipf_queries
+from repro.data import scale_trace, zipf_queries
+from repro.dist import plan_shards
 from repro.kernels import crossbar_reduce, crossbar_reduce_blocked
 
 JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_pipeline.json")
@@ -59,6 +75,21 @@ REF_SAMPLE = int(os.environ.get("RECROSS_PIPELINE_REF_SAMPLE", 500))
 MEAN_BAG = float(os.environ.get("RECROSS_PIPELINE_MEAN_BAG", 41.32))
 GROUP_SIZE = 64
 BATCH_SIZE = 256
+
+# ---- 1M/10M plan-build scale section (DESIGN.md §11) -------------------
+SCALE_ROWS = tuple(
+    int(s)
+    for s in os.environ.get("RECROSS_SCALE_ROWS", "1000000,10000000").split(",")
+    if s.strip()
+)
+SCALE_EPOCH = int(os.environ.get("RECROSS_SCALE_EPOCH", 64))
+SCALE_BLOCK_PAIRS = int(os.environ.get("RECROSS_SCALE_BLOCK_PAIRS", 1 << 22))
+#: largest scale size that ALSO runs the exact batch-heap grouping so the
+#: hybrid's quality ratio can be pinned (the exact pass is the expensive
+#: thing the epoch path exists to avoid — don't run it at 10M)
+SCALE_EXACT_MAX = int(os.environ.get("RECROSS_SCALE_EXACT_MAX", 2_000_000))
+SCALE_MEAN_BAG = 32.0
+SCALE_SHARDS = 4
 
 
 def _t(fn, *args, repeats: int = 3, **kw):
@@ -86,6 +117,63 @@ def _t(fn, *args, repeats: int = 3, **kw):
     return stats, out
 
 
+def _scale_build(num_rows: int, extrap_rows_per_s: float) -> dict:
+    """Times one full plan build at ``num_rows`` (single shot — these
+    are wall-budget measurements, not microbenchmarks).
+
+    Returns the per-size record: wall + rows/s per stage, total wall
+    budget, and — when the exact grouping is affordable — the hybrid's
+    intra-group edge-mass quality ratio against it.
+    """
+    num_queries = max(num_rows // 10, 1_000)
+    rec: dict = {
+        "num_rows": num_rows,
+        "num_queries": num_queries,
+        "mean_bag": SCALE_MEAN_BAG,
+        "epoch": SCALE_EPOCH,
+        "block_pairs": SCALE_BLOCK_PAIRS,
+    }
+
+    def stage(name, fn, *args, denom=num_rows, **kw):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        dt = time.perf_counter() - t0
+        rec[name] = {"seconds": dt, "rows_per_s": denom / max(dt, 1e-12)}
+        return out, dt
+
+    qs, _ = stage("trace", scale_trace, num_rows, num_queries,
+                  SCALE_MEAN_BAG, seed=3, denom=num_queries)
+    # blocked build: the enumerated pair intermediate stays O(block_pairs)
+    graph, _ = stage("build_cooccurrence", build_cooccurrence, qs, num_rows,
+                     block_pairs=SCALE_BLOCK_PAIRS)
+    rec["build_cooccurrence"]["edges"] = graph.edge_count()
+    grouping, t_grp = stage("grouping", correlation_aware_grouping, graph,
+                            GROUP_SIZE, epoch=SCALE_EPOCH)
+    rate = num_rows / max(t_grp, 1e-12)
+    rec["grouping"]["num_groups"] = grouping.num_groups
+    rec["grouping"]["speedup_vs_batch_heap_extrapolation"] = (
+        rate / max(extrap_rows_per_s, 1e-12)
+    )
+    if num_rows <= SCALE_EXACT_MAX:
+        exact, t_exact = stage("grouping_exact", correlation_aware_grouping,
+                               graph, GROUP_SIZE)
+        q_hyb = grouping_quality(graph, grouping)
+        q_exact = grouping_quality(graph, exact)
+        rec["grouping"]["quality_ratio_vs_exact"] = q_hyb / max(q_exact, 1)
+        rec["grouping"]["exact_rows_per_s"] = num_rows / max(t_exact, 1e-12)
+    plan, _ = stage("replication", plan_replication, grouping, graph.freq,
+                    BATCH_SIZE)
+    layout, _ = stage("layout", build_layout, grouping, plan, 8)
+    gfreq = grouping.group_freq(graph.freq)
+    _, _ = stage("plan_shards", plan_shards, [layout], [plan], SCALE_SHARDS,
+                 group_freqs=[gfreq], eq1_batch=BATCH_SIZE)
+    rec["total_wall_s"] = sum(
+        v["seconds"] for v in rec.values() if isinstance(v, dict)
+    )
+    rec["grouping_rows_per_s"] = rate
+    return rec
+
+
 def run() -> list:
     rows_out = []
     record: dict = {
@@ -110,6 +198,7 @@ def run() -> list:
     record["build_cooccurrence"] = {
         "vectorized_s_full": t_cooc,
         "spread": st_cooc,
+        "queries_per_s": NUM_QUERIES / max(t_cooc, 1e-12),
         "reference_s_sample": t_cooc_ref,
         "throughput_speedup": sp_cooc,
         "edges": graph.edge_count(),
@@ -128,12 +217,34 @@ def run() -> list:
     record["grouping"] = {
         "seconds": t_group,
         "spread": st_group,
+        "rows_per_s": NUM_ROWS / max(t_group, 1e-12),
         "num_groups": grouping.num_groups,
     }
     record["replication"] = {
         "seconds": t_plan,
         "spread": st_plan,
+        "rows_per_s": NUM_ROWS / max(t_plan, 1e-12),
         "num_tiles": layout.num_tiles,
+    }
+
+    # ---- epoch-blocked grouping vs the exact batch-heap at 100k ---------
+    # same graph, same group size: pins the hybrid's speed AND its
+    # intra-group edge-mass quality ratio on a dense history (DESIGN.md
+    # §11 — the scale section re-pins quality on the 1M template trace)
+    st_group_ep, grouping_ep = _t(
+        correlation_aware_grouping, graph, GROUP_SIZE, epoch=SCALE_EPOCH
+    )
+    t_group_ep = st_group_ep["min"]
+    record["grouping_epoch"] = {
+        "epoch": SCALE_EPOCH,
+        "seconds": t_group_ep,
+        "spread": st_group_ep,
+        "rows_per_s": NUM_ROWS / max(t_group_ep, 1e-12),
+        "speedup_vs_exact": t_group / max(t_group_ep, 1e-12),
+        "quality_ratio_vs_exact": (
+            grouping_quality(graph, grouping_ep)
+            / max(grouping_quality(graph, grouping), 1)
+        ),
     }
 
     # ---- query compile: full history sparse + same-size dense vs loop ----
@@ -145,6 +256,7 @@ def run() -> list:
     record["query_tile_bitmaps"] = {
         "vectorized_sparse_s_full": t_acts,
         "spread": st_acts,
+        "queries_per_s": NUM_QUERIES / max(t_acts, 1e-12),
         "activations_full": acts.num_activations,
         "vectorized_dense_s_sample": t_bm_vec,
         "reference_dense_s_sample": t_bm_ref,
@@ -160,6 +272,7 @@ def run() -> list:
     record["simulate_batch"] = {
         "vectorized_s_full": t_sim,
         "spread": st_sim,
+        "queries_per_s": NUM_QUERIES / max(t_sim, 1e-12),
         "reference_s_sample": t_sim_ref,
         "throughput_speedup": sp_sim,
         "activations": rep.activations,
@@ -202,6 +315,29 @@ def run() -> list:
         kern[f"blocked_q{qb}_grid_cells"] = int(bq.num_blocks * bq.max_tiles)
     record["kernel_interpret"] = kern
 
+    # ---- plan build at 1M/10M rows: the blocked + epoch-blocked path ----
+    # the 5x grouping gate is judged against a straight extrapolation of
+    # THIS run's 100k exact batch-heap rate, so both sides carry the same
+    # container noise
+    extrap = NUM_ROWS / max(t_group, 1e-12)
+    scale_rec: dict = {
+        "batch_heap_extrapolation_rows_per_s": extrap,
+        "sizes": {},
+    }
+    for n in SCALE_ROWS:
+        scale_rec["sizes"][str(n)] = _scale_build(n, extrap)
+    sizes = scale_rec["sizes"].values()
+    scale_rec["meets_5x_grouping_target"] = bool(sizes) and all(
+        s["grouping"]["speedup_vs_batch_heap_extrapolation"] >= 5.0
+        for s in sizes
+    )
+    scale_rec["quality_floor"] = 0.99
+    scale_rec["meets_quality_floor"] = all(
+        s["grouping"].get("quality_ratio_vs_exact", 1.0) >= 0.99
+        for s in sizes
+    )
+    record["scale"] = scale_rec
+
     # CI smoke configs write to a temp path — never the committed record
     with open(bench_json_path(JSON_PATH, full_scale=bench_is_full_scale()), "w") as f:
         json.dump(record, f, indent=1)
@@ -237,6 +373,27 @@ def run() -> list:
             f"q8={kern['blocked_q8_grid_cells']}"
         ),
     })
+    rows_out.append({
+        "name": "grouping_epoch_100k",
+        "us_per_call": f"{t_group_ep * 1e6:.0f}",
+        "derived": (
+            f"speedup={record['grouping_epoch']['speedup_vs_exact']:.2f}x;"
+            f"quality={record['grouping_epoch']['quality_ratio_vs_exact']:.4f}"
+        ),
+    })
+    for n, s in scale_rec["sizes"].items():
+        g = s["grouping"]
+        rows_out.append({
+            "name": f"plan_build_scale_{n}",
+            "us_per_call": f"{s['total_wall_s'] * 1e6:.0f}",
+            "derived": (
+                f"grouping={g['rows_per_s']:.0f}rows/s"
+                f"({g['speedup_vs_batch_heap_extrapolation']:.1f}x"
+                f" vs extrapolated batch-heap);"
+                f"cooc={s['build_cooccurrence']['seconds']:.2f}s;"
+                f"total={s['total_wall_s']:.1f}s"
+            ),
+        })
     return rows_out
 
 

@@ -18,10 +18,19 @@ Measures the acceptance contract of the drift-aware replanning datapath
   * an end-to-end :class:`~repro.serve.sharded.ShardedEmbeddingServer`
     drift replay recording the replan counters.
 
+The ``patch_scale`` subsection times :func:`compute_plan_patch` alone at
+100k/1M/10M rows (frequency-grouped Zipf tables, no images): best-of-3
+latency for the full-scan evaluation, for the drifted-``candidates``
+evaluation the server path uses (DESIGN.md §11), and for a no-op patch —
+each asserted field-identical to the retained
+``_reference_compute_plan_patch`` oracle.  The gate: millisecond regime
+(< 100 ms) at 10M rows.
+
 Runs per shard count (``RECROSS_REPLAN_SHARDS``, default "2,4");
 emulation unless the host presents enough devices.  Env knobs:
 ``RECROSS_REPLAN_ROWS`` / ``RECROSS_REPLAN_HISTORY`` (default 20_000),
-``RECROSS_REPLAN_BATCH`` (32).
+``RECROSS_REPLAN_BATCH`` (32), ``RECROSS_PATCH_SCALE_ROWS`` (comma
+list, default "100000,1000000,10000000").
 """
 
 from __future__ import annotations
@@ -48,6 +57,8 @@ from repro.core import (
     plan_replication,
     shard_block_queries,
 )
+from repro.core.cooccurrence import CoOccurrenceGraph
+from repro.core.grouping import frequency_grouping
 from repro.data import zipf_queries
 from repro.dist import (
     apply_plan_patch,
@@ -55,6 +66,7 @@ from repro.dist import (
     compute_plan_patch,
     plan_shards,
 )
+from repro.dist.replan import _reference_compute_plan_patch
 from repro.kernels import crossbar_reduce_sharded, patch_shard_images
 
 JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serving.json")
@@ -65,6 +77,13 @@ PROBE_BATCH = int(os.environ.get("RECROSS_REPLAN_BATCH", 32))
 SHARD_COUNTS = tuple(
     int(s) for s in os.environ.get("RECROSS_REPLAN_SHARDS", "2,4").split(",")
 )
+PATCH_SCALE_ROWS = tuple(
+    int(s)
+    for s in os.environ.get(
+        "RECROSS_PATCH_SCALE_ROWS", "100000,1000000,10000000"
+    ).split(",")
+    if s.strip()
+)
 MEAN_BAG = float(os.environ.get("RECROSS_PIPELINE_MEAN_BAG", 41.32))
 #: committed BENCH_serving.json only updates at the full DEFAULT config
 FULL_SCALE = bench_is_full_scale()
@@ -72,6 +91,113 @@ GROUP_SIZE = 64
 Q_BLOCK = 8
 DIM = 128
 EQ1_BATCH = 256
+
+
+def _patch_equal(a, b) -> bool:
+    """Field-identical PlanPatch comparison (the bench's oracle gate)."""
+    return (
+        a.promoted == b.promoted
+        and a.demoted == b.demoted
+        and a.dma == b.dma
+        and a.freed == b.freed
+        and a.new_capacity == b.new_capacity
+        and a.moved == b.moved
+        and a.fetched == b.fetched
+        and a.evicted == b.evicted
+        and a.fetch_dma == b.fetch_dma
+        and a.deferred == b.deferred
+        and np.array_equal(a.drifted_load, b.drifted_load)
+    )
+
+
+def _best_of(fn, repeats: int = 3):
+    """(best wall seconds, {min, median, max, repeats}, last result)."""
+    times, out = [], None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        times.append(time.perf_counter() - t0)
+    ts = sorted(times)
+    return ts[0], {
+        "min": ts[0], "median": ts[len(ts) // 2], "max": ts[-1],
+        "repeats": repeats,
+    }, out
+
+
+def _patch_scale_size(num_rows: int) -> dict:
+    """compute_plan_patch latency at ``num_rows`` (no device images —
+    the patch is pure plan math; capacity comes from the plan itself).
+
+    The table is an edgeless Zipf-frequency graph put through
+    :func:`frequency_grouping` — plan SHAPE at scale is what the patch
+    cost depends on, not co-access structure.  Drift boosts 64 cold
+    groups and collapses 64 replicated ones, so the patch does real
+    promote/demote work at every size.
+    """
+    rng = np.random.default_rng(0)
+    ranks = rng.permutation(num_rows).astype(np.float64) + 1.0
+    freq = (1e7 / ranks ** 1.05).astype(np.int64) + 1
+    graph = CoOccurrenceGraph(
+        num_rows=num_rows,
+        freq=freq,
+        indptr=np.zeros(num_rows + 1, dtype=np.int64),
+        indices=np.empty(0, dtype=np.int64),
+        weights=np.empty(0, dtype=np.int64),
+        num_queries=int(num_rows // 10),
+    )
+    grouping = frequency_grouping(graph, GROUP_SIZE)
+    plan = plan_replication(grouping, graph.freq, EQ1_BATCH)
+    t0 = time.perf_counter()
+    layout = build_layout(grouping, plan, 8)
+    layout_s = time.perf_counter() - t0
+    gfreq = grouping.group_freq(graph.freq)
+    t0 = time.perf_counter()
+    sp = plan_shards([layout], [plan], 4, group_freqs=[gfreq],
+                     eq1_batch=EQ1_BATCH)
+    shards_s = time.perf_counter() - t0
+
+    # the candidates contract (DESIGN.md §11) holds when segment totals
+    # are preserved — the server rescales its decayed estimate to the
+    # plan's training total — so the drift moves mass rather than adding
+    # it: collapse 64 replicated groups and hand their mass to the 64
+    # coldest
+    repl = np.flatnonzero(sp.replicated_group)
+    cold = np.argsort(gfreq, kind="stable")[:64]
+    hot = repl[: min(64, repl.size)]
+    drift = gfreq.astype(np.float64)
+    drift[hot] *= 0.02
+    drift[cold] += float(gfreq[hot].sum()) * 0.98 / max(cold.size, 1)
+    candidates = np.union1d(cold, hot)
+
+    t_full, sp_full, patch = _best_of(lambda: compute_plan_patch(
+        sp, drift, eq1_batch=EQ1_BATCH))
+    t_cand, sp_cand, patch_c = _best_of(lambda: compute_plan_patch(
+        sp, drift, eq1_batch=EQ1_BATCH, candidates=candidates))
+    t_noop, sp_noop, _ = _best_of(lambda: compute_plan_patch(
+        sp, gfreq, eq1_batch=EQ1_BATCH, candidates=np.empty(0, np.int64)))
+    t0 = time.perf_counter()
+    ref = _reference_compute_plan_patch(sp, drift, eq1_batch=EQ1_BATCH)
+    ref_s = time.perf_counter() - t0
+    assert _patch_equal(patch, ref), "patch diverged from reference oracle"
+    assert _patch_equal(patch_c, ref), "candidates patch != full-scan patch"
+    return {
+        "num_rows": num_rows,
+        "num_groups": sp.num_groups,
+        "num_tiles": int(layout.num_tiles),
+        "layout_s": layout_s,
+        "plan_shards_s": shards_s,
+        "promoted": len(patch.promoted),
+        "demoted": len(patch.demoted),
+        "patch_full_scan_ms": t_full * 1e3,
+        "patch_full_scan_spread_s": sp_full,
+        "patch_candidates_ms": t_cand * 1e3,
+        "patch_candidates_spread_s": sp_cand,
+        "patch_noop_ms": t_noop * 1e3,
+        "patch_noop_spread_s": sp_noop,
+        "reference_ms": ref_s * 1e3,
+        "speedup_vs_reference": ref_s / max(t_full, 1e-12),
+        "matches_reference": True,
+    }
 
 
 def _stream_group_freq(stream, layout) -> np.ndarray:
@@ -188,6 +314,28 @@ def run() -> list:
     record["shards"] = shards_rec
     worst = max(r["patch_fraction"] for r in shards_rec.values())
     record["never_full_rebuild"] = bool(worst < 1.0)
+
+    # ---- compute_plan_patch latency vs table size (DESIGN.md §11) -------
+    patch_scale = {"sizes": {}}
+    for n in PATCH_SCALE_ROWS:
+        patch_scale["sizes"][str(n)] = _patch_scale_size(n)
+    patch_scale["millisecond_regime"] = all(
+        s["patch_full_scan_ms"] < 100.0 and s["patch_candidates_ms"] < 100.0
+        for s in patch_scale["sizes"].values()
+    )
+    record["patch_scale"] = patch_scale
+    for n, s in patch_scale["sizes"].items():
+        rows_out.append({
+            "name": f"replan_patch_scale_{n}",
+            "us_per_call": f"{s['patch_full_scan_ms'] * 1e3:.0f}",
+            "derived": (
+                f"candidates={s['patch_candidates_ms']:.2f}ms;"
+                f"noop={s['patch_noop_ms']:.2f}ms;"
+                f"ref={s['reference_ms']:.1f}ms"
+                f"({s['speedup_vs_reference']:.1f}x);"
+                f"promote={s['promoted']};demote={s['demoted']}"
+            ),
+        })
 
     # ---- end-to-end server drift replay --------------------------------
     from repro.serve import ReplanConfig, ShardedEmbeddingServer

@@ -24,6 +24,19 @@ offline preprocessing, exactly as in the paper (the ReRAM image is
 computed once, then written to the crossbars before inference).
 ``_reference_build_cooccurrence`` keeps the original dict-of-Counters loop
 as the equivalence oracle for the property tests.
+
+At 10M-row scale the all-at-once pair enumeration is the memory wall:
+the flat pair list is O(sum of k² over distinct patterns), which dwarfs
+the unique-edge output.  ``build_cooccurrence(..., block_pairs=...)``
+caps the enumerated intermediate: distinct patterns are walked in chunks
+whose pair budget is at most ``block_pairs`` (always at least one
+pattern), each chunk is counted into a sorted (packed key, weight) run,
+and runs are consolidated with an LSM-style geometric merge so the
+accumulated state never exceeds O(unique edges) while each merge only
+touches runs of comparable size.  Integer weight addition is associative
+and the final key order is the same ascending packed order, so the
+blocked build is bit-identical to the unblocked one for every block
+size ≥ 1 pattern.
 """
 
 from __future__ import annotations
@@ -33,6 +46,8 @@ import dataclasses
 from typing import Dict, Iterable, List, Sequence, Tuple
 
 import numpy as np
+
+from repro.core.progress import StageProgress
 
 Query = Sequence[int]
 
@@ -308,11 +323,23 @@ def _dedup_identical_queries(
     )
 
 
+def _check_pair_key_capacity(num_rows: int) -> None:
+    """Packed pair keys are ``i * num_rows + j`` — both < num_rows, so the
+    encoding needs ``num_rows**2 < 2**63``.  Raised *before* any pair
+    allocation so a too-tall table fails loudly and instantly."""
+    if num_rows > 3_037_000_499:  # isqrt(2^63): packed keys would wrap
+        raise NotImplementedError(
+            f"num_rows={num_rows} exceeds int64 pair-key packing "
+            f"(limit 3_037_000_499 rows)"
+        )
+
+
 def build_cooccurrence(
     queries: Iterable[Query],
     num_rows: int,
     *,
     max_pairs_per_query: int | None = None,
+    block_pairs: int | None = None,
 ) -> CoOccurrenceGraph:
     """Builds frequency + co-occurrence graph from a lookup history.
 
@@ -332,37 +359,116 @@ def build_cooccurrence(
         default unbounded enumeration is what the paper does).  The first
         pairs in (left, right) position order are kept, matching the
         reference implementation's truncation.
+      block_pairs: cap on the number of pairs enumerated at once.  None
+        enumerates every pair of every pattern in one flat array (fastest
+        when it fits); an integer walks the patterns in chunks of at most
+        ``block_pairs`` pairs (at least one pattern per chunk) so the
+        peak intermediate is O(block_pairs), not O(total pairs).  The
+        result is bit-identical for every value.
 
     Returns:
       A :class:`CoOccurrenceGraph`.
     """
+    _check_pair_key_capacity(num_rows)
+    if block_pairs is not None and block_pairs < 1:
+        raise ValueError("block_pairs must be >= 1")
     rows, lengths, nq = _dedup_within_queries(queries, num_rows)
     rows, lengths, mult = _dedup_identical_queries(rows, lengths)
     freq = np.bincount(
         rows, weights=np.repeat(mult, lengths).astype(np.float64),
         minlength=num_rows,
     ).astype(np.int64)
-    left, right = _enumerate_pairs(rows, lengths, max_pairs_per_query)
-    if left.size:
-        if num_rows > 3_037_000_499:  # isqrt(2^63): packed keys would wrap
-            raise NotImplementedError(
-                f"num_rows={num_rows} exceeds int64 pair-key packing"
-            )
-        ppq = lengths * (lengths - 1) // 2
-        if max_pairs_per_query is not None:
-            ppq = np.minimum(ppq, max_pairs_per_query)
+    ppq = lengths * (lengths - 1) // 2
+    if max_pairs_per_query is not None:
+        ppq = np.minimum(ppq, max_pairs_per_query)
+    total_pairs = int(ppq.sum())
+    if total_pairs == 0:
+        e = np.empty(0, np.int64)
+        return CoOccurrenceGraph.from_pair_counts(num_rows, e, e, e, freq, nq)
+    if block_pairs is None or block_pairs >= total_pairs:
+        left, right = _enumerate_pairs(rows, lengths, max_pairs_per_query)
         pair_w = np.repeat(mult, ppq)
         keys = rows[left] * np.int64(num_rows) + rows[right]
-        pi, pj, w = _count_weighted_keys(keys, pair_w, num_rows)
+        uk, w = _count_packed_keys(keys, pair_w, num_rows)
     else:
-        pi = pj = w = np.empty(0, np.int64)
-    return CoOccurrenceGraph.from_pair_counts(num_rows, pi, pj, w, freq, nq)
+        uk, w = _blocked_pair_counts(
+            rows, lengths, mult, ppq, num_rows, max_pairs_per_query, block_pairs
+        )
+    return CoOccurrenceGraph.from_pair_counts(
+        num_rows, uk // num_rows, uk % num_rows, w, freq, nq
+    )
 
 
-def _count_weighted_keys(
+def _merge_key_runs(
+    a: Tuple[np.ndarray, np.ndarray], b: Tuple[np.ndarray, np.ndarray]
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Merges two sorted-unique (keys, weights) runs, summing weights."""
+    k = np.concatenate([a[0], b[0]])
+    w = np.concatenate([a[1], b[1]])
+    order = np.argsort(k, kind="stable")  # two sorted runs: mergesort is O(n)
+    k, w = k[order], w[order]
+    starts = np.ones(k.size, dtype=bool)
+    starts[1:] = k[1:] != k[:-1]
+    idx = np.flatnonzero(starts)
+    return k[idx], np.add.reduceat(w, idx)
+
+
+def _blocked_pair_counts(
+    rows: np.ndarray,
+    lengths: np.ndarray,
+    mult: np.ndarray,
+    ppq: np.ndarray,
+    num_rows: int,
+    max_pairs_per_query: int | None,
+    block_pairs: int,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Pair counting with an O(block_pairs) enumerated intermediate.
+
+    Walks the distinct patterns in chunks whose summed pair budget stays
+    ≤ ``block_pairs`` (always ≥ 1 pattern so a bag wider than the block
+    still makes progress), counts each chunk into a sorted-unique
+    (packed key, weight) run, and consolidates runs with a geometric
+    merge stack: a run is folded into its neighbor whenever the neighbor
+    is less than twice its size, so every edge participates in
+    O(log #chunks) merges and the resident runs total O(unique edges).
+    """
+    row_starts = np.cumsum(lengths) - lengths
+    cum = np.cumsum(ppq)
+    total = int(cum[-1])
+    progress = StageProgress("cooc", total, unit="pairs")
+    runs: List[Tuple[np.ndarray, np.ndarray]] = []
+    p0 = 0
+    num_patterns = int(lengths.size)
+    nr = np.int64(num_rows)
+    while p0 < num_patterns:
+        base = int(cum[p0 - 1]) if p0 else 0
+        p1 = max(int(np.searchsorted(cum, base + block_pairs, side="right")), p0 + 1)
+        r0 = int(row_starts[p0])
+        r1 = int(row_starts[p1 - 1] + lengths[p1 - 1])
+        left, right = _enumerate_pairs(
+            rows[r0:r1], lengths[p0:p1], max_pairs_per_query
+        )
+        if left.size:
+            pair_w = np.repeat(mult[p0:p1], ppq[p0:p1])
+            keys = rows[r0:r1][left] * nr + rows[r0:r1][right]
+            runs.append(_count_packed_keys(keys, pair_w, num_rows))
+            while len(runs) >= 2 and runs[-2][0].size < 2 * runs[-1][0].size:
+                runs[-2:] = [_merge_key_runs(runs[-2], runs[-1])]
+        progress.tick(int(cum[p1 - 1]))
+        p0 = p1
+    progress.finish(total)
+    while len(runs) >= 2:
+        runs[-2:] = [_merge_key_runs(runs[-2], runs[-1])]
+    if not runs:  # pragma: no cover - total_pairs > 0 guarantees a run
+        return np.empty(0, np.int64), np.empty(0, np.int64)
+    return runs[0]
+
+
+def _count_packed_keys(
     keys: np.ndarray, weights: np.ndarray, num_rows: int
-) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """Sums ``weights`` per unique packed pair key, sorted by key.
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Sums ``weights`` per unique packed pair key; returns sorted
+    (keys, weights).
 
     Hot path packs the weight into the key's low bits so one value-only
     ``np.sort`` + ``np.add.reduceat`` replaces argsort/unique indirection
@@ -382,7 +488,15 @@ def _count_weighted_keys(
     else:  # pragma: no cover - enormous-multiplicity guard
         uk, inv = np.unique(keys, return_inverse=True)
         w = np.bincount(inv, weights=weights.astype(np.float64)).astype(np.int64)
-    return uk // num_rows, uk % num_rows, w.astype(np.int64)
+    return uk, w.astype(np.int64)
+
+
+def _count_weighted_keys(
+    keys: np.ndarray, weights: np.ndarray, num_rows: int
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(i, j, weight) form of :func:`_count_packed_keys` (legacy callers)."""
+    uk, w = _count_packed_keys(keys, weights, num_rows)
+    return uk // num_rows, uk % num_rows, w
 
 
 def _reference_build_cooccurrence(

@@ -28,17 +28,34 @@ production-grade refinements that do not change the algorithm's semantics:
 per-edge-push loop as the equivalence oracle; the batch-heap pass is
 bit-identical (pop order is the same total order on ``(-weight, id)``,
 see the invariant note on :func:`correlation_aware_grouping`).
+
+**Epoch-blocked formulation (DESIGN.md §11).** At 10M rows the scalar
+pop loop is the plan-build wall: every pick costs one heap pop plus one
+CSR push, ~15 interpreter-bound microseconds each.  ``epoch > 1``
+switches to a blocked pass that amortises that overhead over whole
+rounds: each round bulk-extracts up to ``epoch`` picks from the heap's
+top batches — the validated prefix of each batch that outranks the
+true second-best head is consumed in ONE vectorized compare — then
+pushes the merged CSR neighbourhoods of every pick in the round as a
+single scatter-add (``np.subtract.at`` on the packed accumulator) and
+one pre-sorted batch.  ``epoch=1`` reproduces the scalar pop-push
+interleaving exactly (bit-identical to the oracle, pinned in tests);
+``epoch>1`` trades pick-by-pick weight accumulation inside a round for
+throughput, with the grouping-quality bound (total intra-group
+co-occurrence mass >= 99% of the oracle's, :func:`grouping_quality`)
+pinned in tests and recorded by ``benchmarks/pipeline_bench.py``.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro.core.cooccurrence import CoOccurrenceGraph
+from repro.core.progress import StageProgress
 
 
 @dataclasses.dataclass
@@ -70,21 +87,55 @@ class Grouping:
         return out
 
 
+def _check_heap_key_capacity(graph: CoOccurrenceGraph, shift: int) -> None:
+    """Loud overflow guard on the packed grouping heap keys.
+
+    A candidate's packed key is ``j - weight_into[j] << shift`` where
+    ``weight_into[j]`` accumulates edge weights into the current group
+    — bounded by the total edge-weight mass of the graph.  If that
+    bound shifted up cannot fit int64 alongside the id, a >= 2^20-row /
+    heavy-history table would silently alias (weight bits bleeding into
+    id bits); fail loudly instead.
+    """
+    total_w = int(graph.weights.sum()) if graph.weights.size else 0
+    if (total_w << shift) + graph.num_rows >= 1 << 63:
+        raise ValueError(
+            "grouping heap keys overflow int64: "
+            f"num_rows={graph.num_rows} (id shift {shift}) with total "
+            f"co-occurrence mass {total_w} cannot pack into one key; "
+            "shard the lookup history or scale weights down"
+        )
+
+
 def correlation_aware_grouping(
-    graph: CoOccurrenceGraph, group_size: int
+    graph: CoOccurrenceGraph, group_size: int, *, epoch: int = 1
 ) -> Grouping:
     """Algorithm 1: correlation-aware embedding grouping.
 
     Args:
       graph: co-occurrence graph from the lookup history.
       group_size: rows per group (= crossbar height / tile rows).
+      epoch: picks extracted per bulk round.  ``1`` (default) is the
+        scalar batch-heap pass, bit-identical to the retained oracle.
+        ``>1`` runs the epoch-blocked pass (module docstring): up to
+        ``epoch`` picks are admitted per round before their merged
+        neighbourhoods are pushed, trading exact pick-by-pick weight
+        accumulation for vectorized throughput under the pinned
+        >= 99% intra-group co-occurrence mass bound.
 
     Returns:
       A :class:`Grouping` covering every row exactly once.
     """
     if group_size < 1:
         raise ValueError("group_size must be >= 1")
+    if epoch < 1:
+        raise ValueError("epoch must be >= 1")
     n = graph.num_rows
+    _check_heap_key_capacity(graph, max(n.bit_length(), 1))
+    if epoch > 1:
+        groups, cold = _epoch_blocked_pass(graph, group_size, epoch)
+        groups = _repack_short_groups(groups, group_size, extra_loose=cold)
+        return _grouping_from_groups(groups, n, group_size, check_cover=True)
     grouped = np.zeros(n, dtype=bool)  # groupedIndices
     groups: List[List[int]] = []
 
@@ -248,15 +299,286 @@ def correlation_aware_grouping(
     # connected component is exhausted. Pack those rows together so that
     # only the final group may be short (keeps the crossbar image dense).
     groups = _repack_short_groups(groups, group_size)
+    return _grouping_from_groups(groups, n, group_size, check_cover=True)
 
-    group_of = np.full(n, -1, dtype=np.int32)
-    slot_of = np.full(n, -1, dtype=np.int32)
-    for g, rows in enumerate(groups):
-        for s, r in enumerate(rows):
-            group_of[r] = g
-            slot_of[r] = s
-    assert (group_of >= 0).all(), "every row must be grouped"
-    return Grouping(groups=groups, group_of=group_of, slot_of=slot_of, group_size=group_size)
+
+def _slice_positions(starts: np.ndarray, ends: np.ndarray) -> Optional[np.ndarray]:
+    """Concatenated index positions covering ``[starts[i], ends[i])``.
+
+    The vectorized multi-slice gather: one cumsum builds the positions
+    of every CSR slice of a round's picks without a Python-level loop
+    over picks.  Returns ``None`` when every slice is empty.
+    """
+    lens = ends - starts
+    nz = lens > 0
+    if not nz.any():
+        return None
+    s, e, l = starts[nz], ends[nz], lens[nz]
+    offs = np.cumsum(l)
+    delta = np.ones(int(offs[-1]), dtype=np.int64)
+    delta[0] = s[0]
+    if l.size > 1:
+        delta[offs[:-1]] = s[1:] - e[:-1] + 1
+    return np.cumsum(delta)
+
+
+def _epoch_blocked_pass(
+    graph: CoOccurrenceGraph, group_size: int, epoch: int
+) -> tuple[List[List[int]], np.ndarray]:
+    """Epoch-blocked grouping rounds (module docstring; DESIGN.md §11).
+
+    Per round: extract up to the round budget of valid picks from the
+    heap, then scatter-subtract the merged CSR neighbourhoods of ALL of
+    the round's picks into the packed accumulator in one pass
+    (``np.subtract.at`` handles duplicate neighbour ids across picks)
+    and push them as one pre-sorted batch.  The round budget ramps
+    geometrically (1, 2, 4, ... ``epoch``): the first picks define the
+    group's core, where pick-by-pick weight accumulation matters most;
+    tail fill tolerates blocking.  Extraction is hybrid: a valid head
+    whose following ``budget`` keys all outrank the true second-best
+    batch head (the smaller of the root's children — the epoch
+    boundary) is consumed as one vectorized prefix validation; thin
+    prefixes fall back to the scalar pop, and stale runs reuse the
+    scalar pass's streak-gated bulk sweep.  Stale entries are stale
+    forever within a seed (weights only grow, grouped only flips on),
+    so skipped prefixes never need revisiting — the same lazy-deletion
+    invariant as the scalar pass.  With ``epoch=1`` every round takes
+    exactly one pick before its push and the pass is bit-identical to
+    the oracle (pinned in tests).
+
+    Memory: no ``indptr.tolist()`` / ``order.tolist()`` materialisation
+    — the seed walk filters frequency-order chunks against ``grouped``
+    so a 10M-row table never builds a 10M-element Python list.
+    """
+    n = graph.num_rows
+    SHIFT = max(n.bit_length(), 1)
+    SCALE = 1 << SHIFT
+    MASK = np.int64(SCALE - 1)
+    MASKI = SCALE - 1
+    packed = np.arange(n, dtype=np.int64)
+    wscale = graph.weights.astype(np.int64) * SCALE
+    grouped = np.zeros(n, dtype=bool)
+    grouped_b = bytearray(n)
+    indptr = graph.indptr.astype(np.int64, copy=False)
+    indices = graph.indices
+    order = graph.nodes_by_frequency()
+    heappush, heappop, heapreplace = (
+        heapq.heappush, heapq.heappop, heapq.heapreplace
+    )
+    deg = np.diff(indptr)
+    groups: List[List[int]] = []
+    cold: List[np.ndarray] = []
+    progress = StageProgress("grouping", n)
+    done = 0
+    SEED_CHUNK = 1 << 16
+
+    for base in range(0, n, SEED_CHUNK):
+        chunk = order[base : base + SEED_CHUNK]
+        chunk = chunk[~grouped[chunk]]
+        # ---- bulk cold tail: rows with NO co-occurrence edges can
+        # never be candidates nor gain weight — the scalar walk would
+        # make each a singleton group.  Collect them vectorized (in
+        # frequency order) and let the repack chunk them, instead of
+        # paying per-seed Python overhead for the (at scale, dominant)
+        # edgeless majority.
+        zmask = deg[chunk] == 0
+        if zmask.any():
+            zrows = chunk[zmask]
+            grouped[zrows] = True
+            cold.append(zrows)
+            done += int(zrows.size)
+            chunk = chunk[~zmask]
+        for seed in chunk.tolist():
+            if grouped_b[seed]:
+                continue
+            current: List[int] = [seed]
+            grouped_b[seed] = 1
+            grouped[seed] = True
+            heap: List[tuple] = []
+            touched: List[np.ndarray] = []
+            seq = 0
+            ramp = 1
+            pend1 = seed                       # scalar pending pick
+            pend_arrs: List[np.ndarray] = []   # multi-pick rounds
+
+            while len(current) < group_size:
+                # ---- merged push of the last round's picks.  The
+                # single-pick round keeps the scalar pass's direct CSR
+                # slice; multi-pick rounds gather every pick's slice in
+                # one cumsum (multi-slice gather) and scatter-subtract
+                # once.  Duplicate ids across picks ride along as extra
+                # batch entries at the same (post-accumulate) key — the
+                # first pop groups the id, the rest fail the check.
+                if pend1 >= 0:
+                    lo, hi = int(indptr[pend1]), int(indptr[pend1 + 1])
+                    pend1 = -1
+                    if hi > lo:
+                        nbr = indices[lo:hi]
+                        live = ~grouped[nbr]
+                        ids = nbr[live]
+                        if ids.size:
+                            pk = packed[ids] - wscale[lo:hi][live]
+                            packed[ids] = pk
+                            touched.append(ids)
+                            if pk.size > 1:
+                                pk.sort()
+                            heappush(heap, (int(pk[0]), seq, 0, pk))
+                            seq += 1
+                elif pend_arrs:
+                    parr = (pend_arrs[0] if len(pend_arrs) == 1
+                            else np.concatenate(pend_arrs))
+                    pend_arrs = []
+                    pos = _slice_positions(indptr[parr], indptr[parr + 1])
+                    if pos is not None:
+                        ids = indices[pos]
+                        live = ~grouped[ids]
+                        ids = ids[live]
+                        if ids.size:
+                            np.subtract.at(packed, ids, wscale[pos[live]])
+                            touched.append(ids)
+                            pk = packed[ids]
+                            if pk.size > 1:
+                                pk.sort()
+                            heappush(heap, (int(pk[0]), seq, 0, pk))
+                            seq += 1
+
+                # round budget: geometric ramp capped by `epoch` and by
+                # the space left in the group
+                budget = min(ramp, epoch, group_size - len(current))
+                ramp += ramp
+                picks_s: List[int] = []
+                stale_s, stale_run = -1, 0
+                while budget > 0 and heap:
+                    key, s, k, keys = heap[0]
+                    j = key & MASKI
+                    if not grouped_b[j] and packed[j] == key:
+                        # valid head.  Rich-prefix probe: if the next
+                        # `budget` keys of this batch all outrank the
+                        # second-best head, one vectorized validation
+                        # admits the whole run.
+                        if budget > 1 and keys.size - k > 1:
+                            if len(heap) > 2:
+                                limit = (heap[1][0] if heap[1][0] < heap[2][0]
+                                         else heap[2][0])
+                            elif len(heap) > 1:
+                                limit = heap[1][0]
+                            else:
+                                limit = None
+                            probe = min(k + budget, keys.size) - 1
+                            if limit is None or keys[probe] <= limit:
+                                hi_k = (
+                                    int(np.searchsorted(keys, limit, side="right"))
+                                    if limit is not None else keys.size
+                                )
+                                seg = keys[k:hi_k]
+                                j_arr = seg & MASK
+                                ok = np.nonzero(
+                                    ~grouped[j_arr] & (packed[j_arr] == seg)
+                                )[0]
+                                if ok.size > 1:
+                                    # duplicate ids carry EQUAL keys,
+                                    # adjacent in the sorted prefix — one
+                                    # validation must not admit a row twice
+                                    vk = seg[ok]
+                                    ok = ok[np.concatenate(
+                                        ([True], vk[1:] != vk[:-1])
+                                    )]
+                                take = ok[:budget]
+                                picks = j_arr[take]
+                                grouped[picks] = True
+                                pl = picks.tolist()
+                                for p in pl:
+                                    grouped_b[p] = 1
+                                current.extend(pl)
+                                pend_arrs.append(picks)
+                                budget -= int(take.size)
+                                nk = k + int(take[-1]) + 1
+                                if nk < keys.size:
+                                    heapreplace(heap, (int(keys[nk]), s, nk, keys))
+                                else:
+                                    heappop(heap)
+                                continue
+                        # thin prefix: scalar take of the head
+                        k += 1
+                        if k < keys.size:
+                            heapreplace(heap, (int(keys[k]), s, k, keys))
+                        else:
+                            heappop(heap)
+                        grouped_b[j] = 1
+                        grouped[j] = True
+                        current.append(j)
+                        picks_s.append(j)
+                        budget -= 1
+                        continue
+                    # stale head: scalar advance + the scalar pass's
+                    # streak-gated bulk sweep (staleness is permanent)
+                    stale_run = stale_run + 1 if s == stale_s else 1
+                    stale_s = s
+                    k += 1
+                    nk = k
+                    if stale_run >= 8 and keys.size - k > 16:
+                        if len(heap) > 2:
+                            limit = (heap[1][0] if heap[1][0] < heap[2][0]
+                                     else heap[2][0])
+                        elif len(heap) > 1:
+                            limit = heap[1][0]
+                        else:
+                            limit = None
+                        hi_k = (
+                            int(np.searchsorted(keys, limit, side="right"))
+                            if limit is not None else keys.size
+                        )
+                        if hi_k > k:
+                            seg = keys[k:hi_k]
+                            j_arr = seg & MASK
+                            ok = np.nonzero(
+                                ~grouped[j_arr] & (packed[j_arr] == seg)
+                            )[0]
+                            # position at the first still-valid entry
+                            nk = k + int(ok[0]) if ok.size else hi_k
+                    if nk < keys.size:
+                        heapreplace(heap, (int(keys[nk]), s, nk, keys))
+                    else:
+                        heappop(heap)
+
+                if picks_s:
+                    if not pend_arrs and len(picks_s) == 1:
+                        pend1 = picks_s[0]
+                    else:
+                        pend_arrs.append(np.asarray(picks_s, dtype=np.int64))
+                elif not pend_arrs:
+                    break  # candidates exhausted: group stays short
+
+            groups.append(current)
+            done += len(current)
+            if touched:
+                cat = np.concatenate(touched)
+                packed[cat] = cat
+        progress.tick(done)
+    progress.finish(done)
+    cold_arr = np.concatenate(cold) if cold else _EMPTY_I64
+    return groups, cold_arr
+
+
+
+_EMPTY_I64 = np.empty(0, dtype=np.int64)
+
+
+def grouping_quality(graph: CoOccurrenceGraph, grouping: Grouping) -> int:
+    """Total intra-group co-occurrence mass of a grouping.
+
+    Sum of edge weights whose endpoints share a group — the objective
+    Algorithm 1 greedily maximises.  The epoch-blocked pass ships with
+    ``grouping_quality(epoch_pass) >= 0.99 * grouping_quality(oracle)``
+    pinned in tests and recorded in BENCH_pipeline.json.
+    """
+    if graph.indices.size == 0:
+        return 0
+    rows = np.repeat(
+        np.arange(graph.num_rows, dtype=np.int64), np.diff(graph.indptr)
+    )
+    same = grouping.group_of[rows] == grouping.group_of[graph.indices]
+    return int(graph.weights[same].sum())
 
 
 def _reference_correlation_aware_grouping(
@@ -320,10 +642,22 @@ def _reference_correlation_aware_grouping(
 
 
 def frequency_grouping(graph: CoOccurrenceGraph, group_size: int) -> Grouping:
-    """Baseline [33]: group rows purely by descending access frequency."""
-    order = [int(i) for i in graph.nodes_by_frequency()]
-    groups = [order[i : i + group_size] for i in range(0, len(order), group_size)]
-    return _grouping_from_groups(groups, graph.num_rows, group_size)
+    """Baseline [33]: group rows purely by descending access frequency.
+
+    Fully vectorized (the 10M-row replan bench builds its layout here):
+    row ``order[i]`` lands in group ``i // group_size`` slot
+    ``i % group_size`` — two scatters instead of a per-row loop.
+    """
+    order = graph.nodes_by_frequency()
+    n = graph.num_rows
+    rank = np.arange(n, dtype=np.int64)
+    group_of = np.empty(n, dtype=np.int32)
+    slot_of = np.empty(n, dtype=np.int32)
+    group_of[order] = (rank // group_size).astype(np.int32)
+    slot_of[order] = (rank % group_size).astype(np.int32)
+    olist = order.tolist()
+    groups = [olist[i : i + group_size] for i in range(0, n, group_size)]
+    return Grouping(groups=groups, group_of=group_of, slot_of=slot_of, group_size=group_size)
 
 
 def naive_grouping(num_rows: int, group_size: int) -> Grouping:
@@ -332,27 +666,55 @@ def naive_grouping(num_rows: int, group_size: int) -> Grouping:
         list(range(i, min(i + group_size, num_rows)))
         for i in range(0, num_rows, group_size)
     ]
-    return _grouping_from_groups(groups, num_rows, group_size)
+    ids = np.arange(num_rows, dtype=np.int64)
+    group_of = (ids // group_size).astype(np.int32)
+    slot_of = (ids % group_size).astype(np.int32)
+    return Grouping(groups=groups, group_of=group_of, slot_of=slot_of, group_size=group_size)
 
 
 def _grouping_from_groups(
-    groups: List[List[int]], num_rows: int, group_size: int
+    groups: List[List[int]],
+    num_rows: int,
+    group_size: int,
+    check_cover: bool = False,
 ) -> Grouping:
+    """Builds the ``group_of`` / ``slot_of`` scatters from a group list.
+
+    Vectorized: one concatenate over the group lists + two scatters —
+    the per-row Python loop was itself seconds at 10M rows.
+    """
+    lens = np.fromiter((len(g) for g in groups), dtype=np.int64, count=len(groups))
+    total = int(lens.sum())
     group_of = np.full(num_rows, -1, dtype=np.int32)
     slot_of = np.full(num_rows, -1, dtype=np.int32)
-    for g, rows in enumerate(groups):
-        for s, r in enumerate(rows):
-            group_of[r] = g
-            slot_of[r] = s
+    if total:
+        rows = np.concatenate([np.asarray(g, dtype=np.int64) for g in groups])
+        gid = np.repeat(np.arange(len(groups), dtype=np.int64), lens)
+        starts = np.concatenate(([0], np.cumsum(lens)[:-1]))
+        slot = np.arange(total, dtype=np.int64) - np.repeat(starts, lens)
+        group_of[rows] = gid.astype(np.int32)
+        slot_of[rows] = slot.astype(np.int32)
+    if check_cover:
+        assert (group_of >= 0).all(), "every row must be grouped"
     return Grouping(groups=groups, group_of=group_of, slot_of=slot_of, group_size=group_size)
 
 
 def _repack_short_groups(
-    groups: List[List[int]], group_size: int
+    groups: List[List[int]],
+    group_size: int,
+    extra_loose: Optional[np.ndarray] = None,
 ) -> List[List[int]]:
-    """Merges short groups into full ones without splitting full groups."""
+    """Merges short groups into full ones without splitting full groups.
+
+    ``extra_loose`` appends additional ungrouped rows (the epoch pass's
+    bulk-collected zero-degree cold tail, in frequency order) to the
+    loose pool before chunking — equivalent to those rows having formed
+    singleton groups at the end of the walk.
+    """
     full = [g for g in groups if len(g) == group_size]
     loose: List[int] = [r for g in groups if len(g) < group_size for r in g]
+    if extra_loose is not None and extra_loose.size:
+        loose.extend(extra_loose.tolist())
     for i in range(0, len(loose), group_size):
         full.append(loose[i : i + group_size])
     return full

@@ -172,12 +172,27 @@ class ActivationSet:
         return int(per_q.max()) if per_q.size else 0
 
 
+def _check_ent_key_capacity(layout: CrossbarLayout, batch: int) -> None:
+    """Wordline entries pack as ``(qid * num_tiles + tile) * tile_rows +
+    slot`` — the product must fit int64 or keys silently alias.  Raised
+    before any entry allocation; ``block_queries`` shrinks the packed
+    ``qid`` range, which is how huge batches stay under the limit."""
+    span = batch * layout.num_tiles * layout.tile_rows
+    if span >= 1 << 63:
+        raise ValueError(
+            f"entry keys would overflow int64: batch={batch} x "
+            f"num_tiles={layout.num_tiles} x tile_rows={layout.tile_rows} "
+            f">= 2^63; compile with block_queries to bound the packed range"
+        )
+
+
 def compile_activations(
     layout: CrossbarLayout,
     queries: Sequence[Sequence[int]],
     *,
     balance_replicas: bool = True,
     replica_block: int = 1,
+    block_queries: int | None = None,
 ) -> ActivationSet:
     """Query batch → sparse activation set, fully vectorized.
 
@@ -196,20 +211,92 @@ def compile_activations(
     spread a block's queries over replica tiles of identical data,
     inflating the block's tile union and defeating the DMA amortization.
     Numerics are unaffected either way (replicas hold identical rows).
+
+    ``block_queries`` compiles the batch in chunks of that many
+    consecutive queries so the peak intermediate (flattened ids, packed
+    touch/entry keys) is O(chunk), not O(batch) — the per-group
+    round-robin offset is carried across chunks, so the output is
+    bit-identical to the one-shot compile for every chunk size.  Chunk
+    boundaries are rounded up to ``replica_block`` multiples so a
+    coarsened round-robin unit never straddles a chunk.
     """
     if replica_block < 1:
         raise ValueError("replica_block must be >= 1")
-    from repro.core.cooccurrence import flatten_ragged, segment_ranks
+    if block_queries is not None and block_queries < 1:
+        raise ValueError("block_queries must be >= 1")
+    from repro.core.cooccurrence import flatten_ragged
 
-    flat, lens, batch = flatten_ragged(queries)
+    arrays = [np.asarray(q, dtype=np.int64).ravel() for q in queries]
+    batch = len(arrays)
     empty = np.empty(0, np.int64)
-    if flat.size == 0:
+    if block_queries is None or block_queries >= batch:
+        _check_ent_key_capacity(layout, max(batch, 1))
+        flat, lens, _ = flatten_ragged(arrays)
+        if flat.size == 0:
+            return ActivationSet(
+                act_qid=empty, act_tile=empty, act_rows=empty,
+                ent_qid=empty, ent_tile=empty, ent_slot=empty,
+                batch=batch, num_tiles=layout.num_tiles,
+                tile_rows=layout.tile_rows,
+            )
+        rr = _rr_state(layout, balance_replicas)
+        parts = [_compile_chunk(layout, flat, lens, balance_replicas,
+                                replica_block, rr, 0)]
+    else:
+        # round the chunk up to a replica_block multiple so coarsened
+        # round-robin units (replica_block consecutive queries) are whole
+        step = -(-block_queries // replica_block) * replica_block
+        _check_ent_key_capacity(layout, step)
+        rr = _rr_state(layout, balance_replicas)
+        parts = []
+        for q0 in range(0, batch, step):
+            chunk = arrays[q0:q0 + step]
+            flat, lens, _ = flatten_ragged(chunk)
+            if flat.size == 0:
+                continue
+            parts.append(_compile_chunk(layout, flat, lens, balance_replicas,
+                                        replica_block, rr, q0))
+    if not parts:
         return ActivationSet(
             act_qid=empty, act_tile=empty, act_rows=empty,
             ent_qid=empty, ent_tile=empty, ent_slot=empty,
             batch=batch, num_tiles=layout.num_tiles, tile_rows=layout.tile_rows,
         )
-    qid = np.repeat(np.arange(batch, dtype=np.int64), lens)
+    cat = [np.concatenate([p[k] for p in parts]) for k in range(6)]
+    return ActivationSet(
+        act_qid=cat[0], act_tile=cat[1], act_rows=cat[2],
+        ent_qid=cat[3], ent_tile=cat[4], ent_slot=cat[5],
+        batch=batch, num_tiles=layout.num_tiles, tile_rows=layout.tile_rows,
+    )
+
+
+def _rr_state(layout: CrossbarLayout, balance_replicas: bool) -> np.ndarray | None:
+    """Per-group round-robin touch counters carried across query chunks."""
+    if not balance_replicas:
+        return None
+    return np.zeros(layout.num_groups, dtype=np.int64)
+
+
+def _compile_chunk(
+    layout: CrossbarLayout,
+    flat: np.ndarray,
+    lens: np.ndarray,
+    balance_replicas: bool,
+    replica_block: int,
+    rr: np.ndarray | None,
+    qid_base: int,
+) -> tuple[np.ndarray, ...]:
+    """Compiles one consecutive query chunk; updates ``rr`` in place.
+
+    ``qid_base`` must be a ``replica_block`` multiple.  Returns the six
+    activation/entry arrays with global query ids; within-chunk order is
+    (query, tile[, slot]) ascending, so chunks concatenate into the
+    globally sorted order the one-shot compile produces.
+    """
+    from repro.core.cooccurrence import segment_ranks
+
+    chunk_batch = int(lens.size)
+    qid = np.repeat(np.arange(chunk_batch, dtype=np.int64), lens)
     group = layout.group_of[flat].astype(np.int64)
     slot = layout.slot_of[flat].astype(np.int64)
 
@@ -221,13 +308,14 @@ def compile_activations(
     t_group = uniq_touch % num_groups
     if balance_replicas:
         # round-robin unit: a (query, group) touch, or a (block, group)
-        # touch when replica_block > 1
+        # touch when replica_block > 1; qid_base is a replica_block
+        # multiple, so local block ids coincide with global ones shifted.
         if replica_block > 1:
             ukey = (t_qid // replica_block) * num_groups + t_group
             units, uinv = np.unique(ukey, return_inverse=True)
             u_group = units % num_groups
         else:
-            units, uinv = None, None
+            uinv = None
             u_group = t_group
         # rank of each unit within its group, in batch order: unit keys are
         # sorted by (unit, group), so a stable sort by group preserves batch
@@ -239,7 +327,9 @@ def compile_activations(
         ).astype(np.int64)
         rank = np.empty(g_sorted.size, dtype=np.int64)
         rank[order] = segment_ranks(run_lengths)
+        rank += rr[u_group]  # carry from earlier chunks
         replica = rank % layout.copies[u_group].astype(np.int64)
+        rr += run_lengths
         if uinv is not None:
             replica = replica[uinv]
     else:
@@ -259,16 +349,14 @@ def compile_activations(
     # popcount per activation: ent entries grouped by (qid, tile); the
     # unique (qid, tile) keys come out sorted — matching np.nonzero order
     act_key, act_rows = np.unique(e_qt, return_counts=True)
-    return ActivationSet(
-        act_qid=(act_key // layout.num_tiles).astype(np.int64),
-        act_tile=(act_key % layout.num_tiles).astype(np.int64),
-        act_rows=act_rows.astype(np.int64),
-        ent_qid=e_qid.astype(np.int64),
-        ent_tile=e_tile.astype(np.int64),
-        ent_slot=e_slot.astype(np.int64),
-        batch=batch,
-        num_tiles=layout.num_tiles,
-        tile_rows=layout.tile_rows,
+    base = np.int64(qid_base)
+    return (
+        (act_key // layout.num_tiles).astype(np.int64) + base,
+        (act_key % layout.num_tiles).astype(np.int64),
+        act_rows.astype(np.int64),
+        e_qid.astype(np.int64) + base,
+        e_tile.astype(np.int64),
+        e_slot.astype(np.int64),
     )
 
 

@@ -61,18 +61,29 @@ class ReplicationPlan:
 
 
 def log_scaled_copies(
-    group_freq: np.ndarray, batch_size: int, *, base_copies: int = 1
+    group_freq: np.ndarray,
+    batch_size: int,
+    *,
+    base_copies: int = 1,
+    total: float | None = None,
 ) -> np.ndarray:
     """Eq. 1 of the paper, vectorized over groups.
 
     ``num_copies = floor(log(freq)/log(freq_total) * log(batch))`` *extra*
     copies on top of the mandatory one.  Groups with zero recorded accesses
     get the base copy only.
+
+    ``total`` overrides the normalizing ``freq_total`` (default: the sum
+    of ``group_freq``).  The online replanner passes the full segment's
+    mass while evaluating Eq. 1 on only the drifted *subset* of groups —
+    the copy count of group ``g`` depends on the rest of the table only
+    through this total, so a subset evaluation with the full-table total
+    is exact.
     """
     if batch_size < 1:
         raise ValueError("batch_size must be >= 1")
     freq = np.asarray(group_freq, dtype=np.float64)
-    total = freq.sum()
+    total = float(freq.sum()) if total is None else float(total)
     out = np.full(freq.shape, base_copies, dtype=np.int32)
     if total <= 1.0 or batch_size == 1:
         return out

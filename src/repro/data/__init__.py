@@ -2,11 +2,12 @@ from repro.data.synthetic import (
     SyntheticWorkload,
     WORKLOADS,
     make_workload,
+    scale_trace,
     zipf_queries,
 )
 from repro.data.pipeline import QueryBatcher, TokenBatcher
 
 __all__ = [
-    "SyntheticWorkload", "WORKLOADS", "make_workload", "zipf_queries",
-    "QueryBatcher", "TokenBatcher",
+    "SyntheticWorkload", "WORKLOADS", "make_workload", "scale_trace",
+    "zipf_queries", "QueryBatcher", "TokenBatcher",
 ]

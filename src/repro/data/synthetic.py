@@ -153,3 +153,122 @@ def make_workload(
         seed=seed,
     )
     return wl, rows, qs
+
+
+def scale_trace(
+    num_rows: int,
+    num_queries: int,
+    mean_bag: float,
+    *,
+    num_templates: int | None = None,
+    zipf_a: float = 1.05,
+    num_clusters: int | None = None,
+    in_cluster_p: float = 0.85,
+    template_zipf: float = 1.1,
+    seed: int = 0,
+) -> List[np.ndarray]:
+    """Fully vectorized lookup trace for plan-build scale benches.
+
+    :func:`zipf_queries` draws every fresh basket with an
+    ``rng.choice(num_rows, p=pop)`` — O(num_rows) PER BASKET, unusable
+    beyond ~100k rows.  This generator keeps the same two-level
+    structure (Zipf-popular template baskets over Zipf-popular interest
+    clusters) but samples everything in flat array passes, so a 10M-row
+    / 1M-query trace builds in seconds:
+
+    * rows are ranked by global Zipf popularity and bucketed into
+      clusters; within a cluster, popularity order is inherited,
+    * every template picks a cluster by cluster popularity, draws
+      ``1 + Poisson(mean_bag - 1)`` lookups, each in-cluster w.p.
+      ``in_cluster_p`` (by inverse-CDF Zipf rank over the cluster) else
+      global, then dedups — one packed sort over the whole flat draw,
+    * the query stream samples template ids from a Zipf over templates;
+      queries share the template arrays by reference, so the trace
+      costs O(num_templates * mean_bag + num_queries) memory.
+
+    Identical queries ARE the point: the co-occurrence build collapses
+    them to (pattern, multiplicity) before pair enumeration, which is
+    what bounds the 10M-row build.
+    """
+    if num_rows < 1 or num_queries < 0:
+        raise ValueError("num_rows must be >= 1 and num_queries >= 0")
+    rng = np.random.default_rng(seed)
+    nt = num_templates or max(64, num_rows // 64)
+    if not num_clusters:
+        num_clusters = max(8, num_rows // 256)
+    C = int(num_clusters)
+
+    # global popularity ordering: porder[r] = row with popularity rank r
+    pop = zipf_popularity(num_rows, zipf_a, rng)
+    porder = np.argsort(-pop, kind="stable").astype(np.int64)
+
+    # cluster bucketing, rows within a cluster kept in popularity order:
+    # sort rows by (cluster, popularity rank)
+    cluster_of = rng.integers(0, C, size=num_rows)
+    prank = np.empty(num_rows, dtype=np.int64)
+    prank[porder] = np.arange(num_rows, dtype=np.int64)
+    by_cluster = np.lexsort((prank, cluster_of))
+    cl_sorted = cluster_of[by_cluster]
+    cl_start = np.searchsorted(cl_sorted, np.arange(C + 1))
+    cl_size = np.diff(cl_start)
+
+    def zipf_ranks(m: np.ndarray, u: np.ndarray, a: float) -> np.ndarray:
+        """Inverse-CDF Zipf(a) rank in [0, m) per draw (continuous
+        approximation; exact enough for a synthetic workload)."""
+        m = np.maximum(m.astype(np.float64), 1.0)
+        if abs(a - 1.0) < 1e-9:
+            r = np.power(m, u) - 1.0
+        else:
+            r = np.power((np.power(m, 1.0 - a) - 1.0) * u + 1.0, 1.0 / (1.0 - a)) - 1.0
+        return np.minimum(r.astype(np.int64), (m - 1).astype(np.int64))
+
+    # template cluster choices, Zipf-weighted by cluster popularity mass
+    cl_mass = np.zeros(C)
+    np.add.at(cl_mass, cl_sorted, pop[by_cluster])
+    cl_rank = np.argsort(-cl_mass, kind="stable")
+    tpl_c = cl_rank[zipf_ranks(np.full(nt, C), rng.random(nt), template_zipf)]
+    tpl_c = tpl_c[cl_size[tpl_c] > 0]
+    nt = tpl_c.size
+
+    # flat item draws for all templates at once
+    lens = 1 + rng.poisson(max(mean_bag - 1.0, 0.0), size=nt)
+    tid = np.repeat(np.arange(nt, dtype=np.int64), lens)
+    total = int(lens.sum())
+    c_of_draw = tpl_c[tid]
+    u = rng.random(total)
+    in_c = rng.random(total) < in_cluster_p
+    rows_flat = np.empty(total, dtype=np.int64)
+    # in-cluster: Zipf rank within the draw's cluster bucket
+    r_in = zipf_ranks(cl_size[c_of_draw[in_c]], u[in_c], zipf_a)
+    rows_flat[in_c] = by_cluster[cl_start[c_of_draw[in_c]] + r_in]
+    # global: Zipf rank over the whole table
+    out_c = ~in_c
+    rows_flat[out_c] = porder[
+        zipf_ranks(np.full(int(out_c.sum()), num_rows), u[out_c], zipf_a)
+    ]
+
+    # per-template dedup in ONE packed sort: (template, row) ascending,
+    # then drop adjacent duplicates within a template
+    if total and num_rows > ((1 << 63) - 1) // max(total, 1):
+        raise ValueError(
+            f"scale_trace pack overflow: {nt} templates x {num_rows} rows"
+        )
+    key = tid * np.int64(num_rows) + rows_flat
+    key = np.sort(key)
+    keep = np.empty(total, dtype=bool)
+    keep[0] = True
+    np.not_equal(key[1:], key[:-1], out=keep[1:])
+    key = key[keep]
+    tid_d = key // num_rows
+    rows_d = key - tid_d * num_rows
+    tlens = np.bincount(tid_d, minlength=nt)
+    ends = np.cumsum(tlens)
+    starts = ends - tlens
+    templates = [rows_d[s:e] for s, e in zip(starts.tolist(), ends.tolist())]
+    templates = [t for t in templates if t.size]
+
+    # query stream: Zipf-popular template picks, shared by reference
+    pick = zipf_ranks(
+        np.full(num_queries, len(templates)), rng.random(num_queries), template_zipf
+    )
+    return [templates[i] for i in pick.tolist()]

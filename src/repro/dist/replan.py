@@ -124,6 +124,10 @@ class PlanPatch:
         kept separate so paged-tile/byte accounting is exact.
       evicted_tiles: Σ copies over ``evicted`` (slot-count the
         evictions return to the free-list).
+      deferred: fused group ids whose Eq.-1 target said replicate but
+        whose promotion was deferred by the fixed paging budget.  They
+        stay sharded-once; callers tracking drift candidates must keep
+        them live (their target status can outlast their drift mark).
     """
 
     promoted: List[int]
@@ -141,6 +145,7 @@ class PlanPatch:
         default_factory=list
     )
     evicted_tiles: int = 0
+    deferred: List[int] = dataclasses.field(default_factory=list)
 
     @property
     def num_moved_groups(self) -> int:
@@ -231,6 +236,48 @@ def _group_tile_base(plan: ShardPlan) -> np.ndarray:
     return base
 
 
+def _eq1_targets(
+    plan: ShardPlan,
+    load: np.ndarray,
+    eq1_batch: int,
+    candidates: np.ndarray | None,
+) -> np.ndarray:
+    """(G,) bool — groups Eq. 1 says to replicate on the drifted load.
+
+    With ``candidates`` only those groups (plus every currently
+    replicated group, so demotion checks stay complete) are evaluated;
+    everything else reports False.  Exact under the server's drift
+    protocol: a group untouched since the last evaluation has a weakly
+    *decreasing* rescaled load against a constant segment total, so a
+    group that was not an Eq.-1 target then cannot have become one —
+    see DESIGN.md §11.
+    """
+    S = plan.num_shards
+    threshold = max(S, 2)
+    target = np.zeros(plan.num_groups, dtype=bool)
+    if candidates is None:
+        for seg in plan.tables:
+            gs = slice(seg.group_offset, seg.group_offset + seg.num_groups)
+            target[gs] = log_scaled_copies(load[gs], eq1_batch) >= threshold
+        return target
+    cand = np.union1d(
+        np.asarray(candidates, dtype=np.int64),
+        np.nonzero(plan.replicated_group)[0],
+    )
+    if cand.size and (cand[0] < 0 or cand[-1] >= plan.num_groups):
+        raise ValueError("candidate group id out of range")
+    for seg in plan.tables:
+        lo = seg.group_offset
+        hi = lo + seg.num_groups
+        cs = cand[np.searchsorted(cand, lo):np.searchsorted(cand, hi)]
+        if cs.size:
+            # subset evaluation at the full segment's normalizing mass
+            target[cs] = log_scaled_copies(
+                load[cs], eq1_batch, total=float(load[lo:hi].sum())
+            ) >= threshold
+    return target
+
+
 def compute_plan_patch(
     plan: ShardPlan,
     drifted_load: np.ndarray,
@@ -239,8 +286,18 @@ def compute_plan_patch(
     capacity: int | None = None,
     shrink_slack: int | None = None,
     paging: PagingPolicy | None = None,
+    candidates: np.ndarray | None = None,
 ) -> PlanPatch:
     """Diffs the live plan against Eq. 1 evaluated on the drifted load.
+
+    Scale-invariant: the work is O(changed groups) plus vectorized
+    NumPy over the slots the patch actually touches — per-shard slot
+    occupancy is one int array scatter, free slots one ``flatnonzero``,
+    and a patch that changes no replication class never materializes
+    slot state at all.  At 10M rows (~10⁵ groups) a drift window's
+    patch computes in milliseconds; the retained
+    :func:`_reference_compute_plan_patch` oracle is the bit-exact
+    specification the tests diff against.
 
     Args:
       plan: the currently-serving :class:`ShardPlan`.
@@ -265,12 +322,288 @@ def compute_plan_patch(
         the fixed ``paging.capacity_tiles`` budget, hysteresis-gated;
         promotions that would exceed the budget are deferred instead of
         growing the image.
+      candidates: optional fused group ids whose replication class may
+        have changed (the server passes
+        :meth:`~repro.serve.drift.DriftTracker.drifted_groups`).  Eq. 1
+        is then evaluated only on ``candidates ∪ replicated`` instead
+        of all G groups, which is what makes the patch scale-invariant;
+        exact whenever every group whose load *rose* since the last
+        evaluation is included (see :func:`_eq1_targets`).  ``None``
+        scans every group.
 
     Returns:
       A :class:`PlanPatch`.  Pure host-side computation — no device
       arrays are touched, so it can run while a flush executes on
       device (the double-buffered staging in
       :class:`repro.serve.sharded.ShardedEmbeddingServer`).
+    """
+    load = np.asarray(drifted_load, dtype=np.float64)
+    if load.shape != (plan.num_groups,):
+        raise ValueError(
+            f"drifted load has shape {load.shape}, plan has "
+            f"{plan.num_groups} groups"
+        )
+    S = plan.num_shards
+    tile_base = _group_tile_base(plan)
+    copies = plan.group_copies
+    if paging is not None:
+        capacity = int(paging.capacity_tiles)
+    elif capacity is None:
+        capacity = plan.max_local_tiles
+
+    target = _eq1_targets(plan, load, eq1_batch, candidates)
+
+    # cold (host-only) groups cannot jump straight to replicated: they
+    # must page in first (sharded-once), and may promote a later patch
+    promoted = np.nonzero(
+        target & ~plan.replicated_group & plan.resident_group
+    )[0]
+    demote_ids = np.nonzero(~target & plan.replicated_group)[0]
+
+    if (promoted.size == 0 and demote_ids.size == 0
+            and paging is None and shrink_slack is None):
+        # class-unchanged rebase: no slot state needed at all
+        return PlanPatch(
+            promoted=[], demoted=[], dma=[], freed=[],
+            new_capacity=capacity, drifted_load=load.copy(),
+        )
+
+    # drifted load + resident-tile pressure of the placement that stays
+    # put; promoted groups leave their owner's tally (their work
+    # round-robins after the patch).  bincount accumulates in the same
+    # element order np.add.at would, so the float sums are bit-equal.
+    stays = plan.shard_of_group >= 0
+    stays[promoted] = False
+    owner_of_stays = plan.shard_of_group[stays].astype(np.int64)
+    shard_load = np.bincount(
+        owner_of_stays, weights=load[stays], minlength=S
+    ).tolist()
+    shard_tiles = np.bincount(
+        owner_of_stays, weights=copies[stays].astype(np.float64), minlength=S
+    ).astype(np.int64).tolist()
+
+    # demotions: the fresh planner's rule restricted to the moved
+    # groups — greedy descending drifted load; loaded groups to the
+    # least-loaded shard (tile pressure breaks ties), but the typical
+    # demoted group has COOLED to ~zero load, where frequency balance
+    # says nothing: those place on the least-TILE-loaded shard, the
+    # cold-tail memory balance that is half the point of sharding.
+    demoted: List[Tuple[int, int]] = []
+    shard_ids = range(S)
+    order = demote_ids[np.argsort(-load[demote_ids], kind="stable")]
+    for g in order.tolist():
+        if load[g] > 0:
+            s = int(min(shard_ids,
+                        key=lambda i: (shard_load[i], shard_tiles[i], i)))
+        else:
+            s = int(min(shard_ids, key=lambda i: (shard_tiles[i], i)))
+        demoted.append((g, s))
+        shard_load[s] += load[g]
+        shard_tiles[s] += int(copies[g])
+
+    # slot bookkeeping, vectorized: per-shard occupancy (slot → fused
+    # tile, -1 free) built with one nonzero + scatter instead of S
+    # Python dicts; demotions free non-owner slots first, promotions
+    # then fill the lowest free slot per shard (deterministic), growing
+    # the capacity only when a shard has no free slot left
+    width = max(capacity, plan.max_local_tiles)
+    if promoted.size:
+        width += int(copies[promoted].sum())
+    occ = np.full((S, width), -1, dtype=np.int64)
+    srows, tcols = np.nonzero(plan.local_tile_of >= 0)
+    occ[srows, plan.local_tile_of[srows, tcols]] = tcols
+    freed: List[Tuple[int, int]] = []
+    for g, o in demoted:
+        for t in range(int(tile_base[g]), int(tile_base[g] + copies[g])):
+            for s in range(S):
+                if s == o:
+                    continue
+                slot = int(plan.local_tile_of[s, t])
+                if slot < 0:
+                    raise ValueError(
+                        f"replicated group {g}: shard {s} does not hold "
+                        f"tile {t}"
+                    )
+                occ[s, slot] = -1
+                freed.append((s, slot))
+    free = [np.flatnonzero(occ[s, :capacity] < 0).tolist() for s in range(S)]
+    grow = [capacity] * S
+    dma: List[Tuple[int, int, int]] = []
+    dma_index: dict = {}                   # (shard, slot) → index into dma
+    kept_promoted: List[int] = []
+    deferred: List[int] = []
+    for g in promoted.tolist():
+        owner = int(plan.shard_of_group[g])
+        c = int(copies[g])
+        if paging is not None and any(
+            len(free[s]) < c for s in range(S) if s != owner
+        ):
+            # fixed hot-tier budget: a promotion that would grow the
+            # image is deferred (the group stays sharded-once; Eq. 1
+            # will re-target it once evictions open slots)
+            deferred.append(g)
+            continue
+        kept_promoted.append(g)
+        for t in range(int(tile_base[g]), int(tile_base[g] + c)):
+            for s in range(S):
+                if s == owner:
+                    continue
+                if free[s]:
+                    slot = free[s].pop(0)
+                else:
+                    slot = grow[s]
+                    grow[s] += 1
+                occ[s, slot] = t
+                dma_index[(s, slot)] = len(dma)
+                dma.append((s, slot, t))
+    promoted = np.asarray(kept_promoted, dtype=np.int64)
+
+    # ---- paging (tiered storage, DESIGN.md §9): swap the drifted-hot
+    # cold groups into the fixed budget, hysteresis-gated ---------------
+    fetched: List[Tuple[int, int]] = []
+    evicted: List[int] = []
+    fetch_dma: List[Tuple[int, int, int]] = []
+    evicted_tiles = 0
+    if paging is not None:
+        # post-patch owner map (promotions → -1, demotions → new owner)
+        own = plan.shard_of_group.copy()
+        for g, o in demoted:
+            own[g] = o
+        own[promoted] = -1
+        # eviction candidates: sharded-once residents per shard,
+        # coldest first (a group fetched THIS patch is not a candidate —
+        # within-patch anti-thrash on top of the hysteresis gate).
+        # lexsort (ids last ⇒ secondary key) matches the reference's
+        # (load, gid) tuple sort per shard.
+        res_ids = np.nonzero(own >= 0)[0]
+        vorder = np.lexsort((res_ids, load[res_ids], own[res_ids]))
+        v_ids = res_ids[vorder]
+        v_shard = own[res_ids][vorder]
+        vict_g = [v_ids[v_shard == s] for s in range(S)]
+        vict_l = [load[v] for v in vict_g]
+        vpos = [0] * S                      # consumed prefix per shard
+        cold_ids = np.nonzero(own == COLD)[0]
+        cold_ids = cold_ids[load[cold_ids] > paging.min_fetch_load]
+        cold_order = cold_ids[np.argsort(-load[cold_ids], kind="stable")]
+        for g in cold_order.tolist():
+            c = int(copies[g])
+            if (paging.max_fetch_tiles is not None
+                    and len(fetch_dma) + c > paging.max_fetch_tiles):
+                break
+            fits = [s for s in range(S) if len(free[s]) >= c]
+            if fits:
+                s = min(fits, key=lambda i: (shard_load[i], shard_tiles[i], i))
+            else:
+                # pick the shard whose coldest victims free ≥ c slots at
+                # the least evicted load, every victim hysteresis-gated
+                best = None               # (victim load Σ, shard, victims)
+                for cs in range(S):
+                    have = len(free[cs])
+                    picks: List[int] = []
+                    vload = 0.0
+                    pos = vpos[cs]
+                    while have < c and pos < vict_g[cs].size:
+                        lv = float(vict_l[cs][pos])
+                        gv = int(vict_g[cs][pos])
+                        if load[g] <= paging.hysteresis * lv:
+                            break         # not hot enough to displace
+                        picks.append(gv)
+                        vload += lv
+                        have += int(copies[gv])
+                        pos += 1
+                    if have >= c and (best is None or (vload, cs) < best[:2]):
+                        best = (vload, cs, picks, pos)
+                if best is None:
+                    continue              # nothing evictable for this one
+                _, s, picks, pos = best
+                vpos[s] = pos
+                for gv in picks:
+                    o = int(own[gv])
+                    for t in range(int(tile_base[gv]),
+                                   int(tile_base[gv] + copies[gv])):
+                        slot = int(plan.local_tile_of[o, t])
+                        if slot < 0:
+                            raise ValueError(
+                                f"evicting group {gv}: shard {o} does not "
+                                f"hold tile {t}"
+                            )
+                        occ[o, slot] = -1
+                        bisect.insort(free[o], slot)
+                        freed.append((o, slot))
+                    evicted.append(gv)
+                    evicted_tiles += int(copies[gv])
+                    own[gv] = COLD
+                    shard_load[o] -= float(load[gv])
+                    shard_tiles[o] -= int(copies[gv])
+            for t in range(int(tile_base[g]), int(tile_base[g] + c)):
+                slot = free[s].pop(0)
+                occ[s, slot] = t
+                fetch_dma.append((s, slot, t))
+            fetched.append((g, s))
+            own[g] = s
+            shard_load[s] += float(load[g])
+            shard_tiles[s] += c
+
+    new_capacity = max(grow)
+    moved: List[Tuple[int, int, int, int]] = []
+    if (shrink_slack is not None and paging is None
+            and new_capacity <= capacity):
+        # slack age-out: compact the stack down to the busiest shard's
+        # resident count + requested headroom.  Tiles above the new
+        # depth relocate into free holes below it (one master-image DMA
+        # each); a promotion landing above it just retargets its DMA.
+        # Only legal when nothing grew this patch.
+        depth = min(
+            capacity,
+            int((occ >= 0).sum(axis=1).max()) + int(shrink_slack),
+        )
+        for s in range(S):
+            over = (np.flatnonzero(occ[s, depth:] >= 0) + depth).tolist()
+            free_low = np.flatnonzero(occ[s, :depth] < 0).tolist()
+            for old in over:
+                new = free_low.pop(0)
+                t = int(occ[s, old])
+                occ[s, old] = -1
+                occ[s, new] = t
+                idx = dma_index.pop((s, old), None)
+                if idx is not None:
+                    dma[idx] = (s, new, t)   # incoming tile, not resident
+                    dma_index[(s, new)] = idx
+                else:
+                    moved.append((s, t, old, new))
+        new_capacity = depth
+    return PlanPatch(
+        promoted=promoted.tolist(),
+        demoted=demoted,
+        dma=dma,
+        freed=freed,
+        new_capacity=new_capacity,
+        drifted_load=load.copy(),
+        moved=moved,
+        fetched=fetched,
+        evicted=evicted,
+        fetch_dma=fetch_dma,
+        evicted_tiles=evicted_tiles,
+        deferred=deferred,
+    )
+
+
+def _reference_compute_plan_patch(
+    plan: ShardPlan,
+    drifted_load: np.ndarray,
+    *,
+    eq1_batch: int,
+    capacity: int | None = None,
+    shrink_slack: int | None = None,
+    paging: PagingPolicy | None = None,
+) -> PlanPatch:
+    """Original dict-of-slots implementation (equivalence oracle).
+
+    Semantically identical to :func:`compute_plan_patch` with
+    ``candidates=None``, but builds per-shard ``{slot: tile}`` dicts and
+    Python free-slot sets over the whole image — O(S·T) work per call
+    regardless of how small the patch is.  Retained as the oracle the
+    property tests diff the vectorized implementation against.
     """
     load = np.asarray(drifted_load, dtype=np.float64)
     if load.shape != (plan.num_groups,):
@@ -357,6 +690,7 @@ def compute_plan_patch(
     dma: List[Tuple[int, int, int]] = []
     dma_index: dict = {}                   # (shard, slot) → index into dma
     kept_promoted: List[int] = []
+    deferred: List[int] = []
     for g in promoted.tolist():
         owner = int(plan.shard_of_group[g])
         c = int(copies[g])
@@ -366,6 +700,7 @@ def compute_plan_patch(
             # fixed hot-tier budget: a promotion that would grow the
             # image is deferred (the group stays sharded-once; Eq. 1
             # will re-target it once evictions open slots)
+            deferred.append(g)
             continue
         kept_promoted.append(g)
         for t in range(int(tile_base[g]), int(tile_base[g] + c)):
@@ -504,6 +839,7 @@ def compute_plan_patch(
         evicted=evicted,
         fetch_dma=fetch_dma,
         evicted_tiles=evicted_tiles,
+        deferred=deferred,
     )
 
 

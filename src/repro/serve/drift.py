@@ -100,6 +100,10 @@ class DriftTracker:
         self.observed_queries = 0
         self.observations = 0
         self._alpha = 0.5 ** (1.0 / max(self.half_life, 1e-9))
+        # groups with any observed traffic since the last replan
+        # evaluation — the candidate set compute_plan_patch needs to
+        # stay scale-invariant (everything else only decayed)
+        self._dirty = np.zeros(base.shape[0], dtype=bool)
 
     @property
     def ready(self) -> bool:
@@ -121,12 +125,34 @@ class DriftTracker:
                 f"{self.decayed.shape}"
             )
         self.decayed = self._alpha * self.decayed + loads
+        self._dirty |= loads > 0.0
         self.observed_queries += int(num_queries)
         self.observations += 1
 
     def load(self) -> np.ndarray:
         """Snapshot of the decayed ``(G,)`` load estimate."""
         return self.decayed.copy()
+
+    def drifted_groups(self) -> np.ndarray:
+        """Fused group ids with observed traffic since the last
+        :meth:`reset_drifted` — the exact ``candidates`` set for
+        :func:`repro.dist.replan.compute_plan_patch`: every other
+        group's estimate has only decayed, so its Eq.-1 copy count
+        cannot have risen (DESIGN.md §11)."""
+        return np.nonzero(self._dirty)[0]
+
+    def reset_drifted(self) -> None:
+        """Clears the drift marks — call when a replan evaluation has
+        consumed them (whether or not the patch changed anything)."""
+        self._dirty[:] = False
+
+    def mark_drifted(self, group_ids) -> None:
+        """Re-marks groups as drift candidates: deferred promotions and
+        dropped patches leave groups whose Eq.-1 target status must
+        survive the evaluation that consumed their marks."""
+        ids = np.asarray(group_ids, dtype=np.int64)
+        if ids.size:
+            self._dirty[ids] = True
 
     def drift_from(self, reference_load, segments=None) -> float:
         """Total-variation distance to a reference load, both normalized.

@@ -118,6 +118,14 @@ class ProducerRegistry:
             pid = self._register_locked(producer)
             space = self._next[pid]
             local = space.get(table, 0)
+            # packed gseq = local * stride + pid must stay in int64:
+            # past the boundary two submissions would alias the same
+            # gseq and the drain merge would silently reorder
+            if (local + 1) * self.stride > (1 << 63) - 1:
+                raise OverflowError(
+                    f"sequence capacity exhausted: local seq {local} at "
+                    f"stride {self.stride} would overflow the packed gseq"
+                )
             space[table] = local + 1
             return local * self.stride + pid
 

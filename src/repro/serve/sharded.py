@@ -893,8 +893,13 @@ class ShardedEmbeddingServer:
                     raise
                 if self._patch_fail_streak > self.retry.patch_retries:
                     self.stats.ledger.patches_dropped += 1
-                    self._staged = None
+                    dropped, self._staged = self._staged, None
                     self._patch_fail_streak = 0
+                    if self.tracker is not None and dropped.promoted:
+                        # the drop discards promotions whose Eq.-1
+                        # target status may persist: restore their
+                        # drift marks so the next evaluation sees them
+                        self.tracker.mark_drifted(dropped.promoted)
                 return
         patch, self._staged = self._staged, None
         self._patch_fail_streak = 0
@@ -972,13 +977,28 @@ class ShardedEmbeddingServer:
             self.tiers.paging_policy(self._capacity_tiles)
             if self.tiers is not None else None
         )
+        # scale-invariant patch math: only the groups with observed
+        # traffic since the last evaluation (plus the replicated set,
+        # added inside) can change replication class — every other
+        # group's estimate merely decayed (DESIGN.md §11)
+        candidates = self.tracker.drifted_groups()
+        self.tracker.reset_drifted()
         patch = compute_plan_patch(
             self.plan, drifted,
             eq1_batch=self._eq1_batch,
             capacity=int(self.shard_images.shape[1]),
             shrink_slack=shrink,
             paging=paging,
+            candidates=candidates,
         )
+        if patch.deferred:
+            # deferred promotions stay candidates: their Eq.-1 target
+            # status outlives the marks this evaluation consumed
+            self.tracker.mark_drifted(patch.deferred)
+        if patch.fetched:
+            # freshly-resident groups may already be Eq.-1 targets; the
+            # next evaluation must reconsider them even if untouched
+            self.tracker.mark_drifted([g for g, _ in patch.fetched])
         if patch.is_noop():
             # drift without a class change: reanchor group_load so the
             # greedy demotion targets and the drift statistic both track

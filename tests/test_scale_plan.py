@@ -1,0 +1,338 @@
+"""Plan-build-at-scale regressions (DESIGN.md §11).
+
+Pins the three contracts the 10M-row plan build rests on:
+
+* **blocked co-occurrence** — ``build_cooccurrence(block_pairs=...)``
+  is bit-identical to the unblocked build for EVERY block size,
+  including blocks smaller than a single bag's pair count (the chunker
+  must still take whole patterns) and a single-chunk degenerate;
+* **epoch-blocked grouping** — ``epoch=1`` is bit-identical to the
+  retained scalar oracle; ``epoch>1`` covers every row exactly once,
+  is deterministic, and holds the >= 99% intra-group co-occurrence
+  mass bound on the template trace the scale bench runs;
+* **blocked query compile** — ``compile_activations(block_queries=...)``
+  is bit-identical across chunk sizes x replica blocking, chunk
+  boundaries never splitting a round-robin unit;
+
+plus the loud capacity guards on every packed-key encoding (pair keys,
+grouping heap keys, wordline entry keys, producer gseqs) and the
+scale-invariant ``compute_plan_patch`` candidates path against the
+retained reference oracle.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    build_cooccurrence,
+    build_layout,
+    compile_activations,
+    correlation_aware_grouping,
+    plan_replication,
+    query_tile_bitmaps,
+)
+from repro.core.cooccurrence import (
+    CoOccurrenceGraph,
+    _check_pair_key_capacity,
+)
+from repro.core.grouping import (
+    _reference_correlation_aware_grouping,
+    frequency_grouping,
+    grouping_quality,
+)
+from repro.core.mapping import _check_ent_key_capacity
+from repro.data import scale_trace, zipf_queries
+from repro.dist import compute_plan_patch, plan_shards
+from repro.dist.replan import _reference_compute_plan_patch
+from repro.serve.producers import ProducerRegistry
+
+EQ1_BATCH = 64
+
+
+def _graphs_equal(a: CoOccurrenceGraph, b: CoOccurrenceGraph) -> bool:
+    return (
+        a.num_rows == b.num_rows
+        and a.num_queries == b.num_queries
+        and np.array_equal(a.freq, b.freq)
+        and np.array_equal(a.indptr, b.indptr)
+        and np.array_equal(a.indices, b.indices)
+        and np.array_equal(a.weights, b.weights)
+    )
+
+
+def _groupings_equal(a, b) -> bool:
+    return (
+        a.group_size == b.group_size
+        and a.groups == b.groups
+        and np.array_equal(a.group_of, b.group_of)
+        and np.array_equal(a.slot_of, b.slot_of)
+    )
+
+
+def _acts_equal(a, b) -> bool:
+    return (
+        (a.batch, a.num_tiles, a.tile_rows) == (b.batch, b.num_tiles, b.tile_rows)
+        and np.array_equal(a.act_qid, b.act_qid)
+        and np.array_equal(a.act_tile, b.act_tile)
+        and np.array_equal(a.act_rows, b.act_rows)
+        and np.array_equal(a.ent_qid, b.ent_qid)
+        and np.array_equal(a.ent_tile, b.ent_tile)
+        and np.array_equal(a.ent_slot, b.ent_slot)
+    )
+
+
+def _patches_equal(a, b) -> bool:
+    return (
+        a.promoted == b.promoted
+        and a.demoted == b.demoted
+        and a.dma == b.dma
+        and a.freed == b.freed
+        and a.new_capacity == b.new_capacity
+        and a.moved == b.moved
+        and a.fetched == b.fetched
+        and a.evicted == b.evicted
+        and a.fetch_dma == b.fetch_dma
+        and a.deferred == b.deferred
+        and np.array_equal(a.drifted_load, b.drifted_load)
+    )
+
+
+# ------------------------------------------- blocked co-occurrence --
+
+
+def test_blocked_cooc_bit_identity_across_block_sizes():
+    qs = zipf_queries(500, 300, 8.0, seed=2)
+    full = build_cooccurrence(qs, 500)
+    for bp in (1, 7, 100, 4096, 10**9):
+        assert _graphs_equal(build_cooccurrence(qs, 500, block_pairs=bp), full)
+
+
+def test_blocked_cooc_block_smaller_than_one_bag():
+    # one bag of 50 rows = 1225 pairs; block_pairs=1 must still take the
+    # whole pattern per chunk (>= 1 pattern/chunk), never split a bag
+    rng = np.random.default_rng(0)
+    qs = [rng.choice(200, size=50, replace=False)] * 3 + [
+        np.asarray(q) for q in zipf_queries(200, 40, 6.0, seed=1)
+    ]
+    full = build_cooccurrence(qs, 200)
+    assert _graphs_equal(build_cooccurrence(qs, 200, block_pairs=1), full)
+
+
+def test_blocked_cooc_degenerate_histories():
+    # no pairs at all (all bags singleton) and an empty history: the
+    # blocked path must agree without ever entering the chunk loop
+    singles = [np.asarray([i % 10]) for i in range(20)]
+    assert _graphs_equal(
+        build_cooccurrence(singles, 10, block_pairs=4),
+        build_cooccurrence(singles, 10),
+    )
+    assert _graphs_equal(
+        build_cooccurrence([], 10, block_pairs=4),
+        build_cooccurrence([], 10),
+    )
+    with pytest.raises(ValueError):
+        build_cooccurrence(singles, 10, block_pairs=0)
+
+
+def test_blocked_cooc_respects_max_pairs_cap():
+    qs = zipf_queries(300, 120, 9.0, seed=5)
+    full = build_cooccurrence(qs, 300, max_pairs_per_query=10)
+    for bp in (1, 64, 10**8):
+        assert _graphs_equal(
+            build_cooccurrence(qs, 300, max_pairs_per_query=10, block_pairs=bp),
+            full,
+        )
+
+
+# ---------------------------------------- epoch-blocked grouping ----
+
+
+def test_epoch1_bit_identical_to_scalar_oracle():
+    qs = zipf_queries(800, 600, 10.0, seed=4)
+    g = build_cooccurrence(qs, 800)
+    assert _groupings_equal(
+        correlation_aware_grouping(g, 32),
+        _reference_correlation_aware_grouping(g, 32),
+    )
+
+
+def test_epoch_grouping_covers_deterministically():
+    qs = zipf_queries(4000, 3000, 10.0, seed=6)
+    g = build_cooccurrence(qs, 4000)
+    for ep in (4, 64):
+        a = correlation_aware_grouping(g, 32, epoch=ep)
+        # exactly-once cover
+        seen = np.concatenate([np.asarray(grp) for grp in a.groups])
+        assert seen.size == 4000 and np.array_equal(np.sort(seen),
+                                                    np.arange(4000))
+        # deterministic
+        assert _groupings_equal(a, correlation_aware_grouping(g, 32, epoch=ep))
+    with pytest.raises(ValueError):
+        correlation_aware_grouping(g, 32, epoch=0)
+
+
+def test_epoch_grouping_quality_floor_on_scale_trace():
+    # the template-trace workload the scale bench runs: the hybrid must
+    # keep >= 99% of the exact batch-heap's intra-group co-occurrence
+    # mass (DESIGN.md §11 quality contract)
+    qs = scale_trace(100_000, 20_000, 32.0, seed=3)
+    g = build_cooccurrence(qs, 100_000, block_pairs=1 << 20)
+    exact_q = grouping_quality(g, correlation_aware_grouping(g, 64))
+    for ep in (16, 64):
+        hyb = correlation_aware_grouping(g, 64, epoch=ep)
+        assert grouping_quality(g, hyb) / max(exact_q, 1) >= 0.99
+
+
+# ------------------------------------------ blocked query compile ----
+
+
+def _small_layout(seed=0, rows=240, dim=32):
+    qs = zipf_queries(rows, 160, 6.0, seed=seed)
+    g = build_cooccurrence(qs, rows)
+    grouping = correlation_aware_grouping(g, 16)
+    plan = plan_replication(grouping, g.freq, EQ1_BATCH,
+                            area_budget_ratio=1.5)
+    return build_layout(grouping, plan, dim), qs
+
+
+def test_blocked_compile_bit_identity():
+    layout, qs = _small_layout()
+    batch = [np.asarray(q) for q in qs[:40]]
+    batch[7] = np.asarray([], dtype=np.int64)  # empty query mid-batch
+    for rb in (1, 4):
+        full = compile_activations(layout, batch, replica_block=rb)
+        for bq in (1, 3, 64, 10**6):
+            blk = compile_activations(layout, batch, replica_block=rb,
+                                      block_queries=bq)
+            assert _acts_equal(blk, full), (rb, bq)
+    # dense bitmap oracle agrees with the blocked sparse compile
+    bm, _counts = query_tile_bitmaps(layout, batch)
+    blk = compile_activations(layout, batch, block_queries=5)
+    scattered = np.zeros_like(bm)
+    scattered[blk.ent_qid, blk.ent_tile, blk.ent_slot] = 1
+    assert np.array_equal(scattered, bm)
+
+
+def test_blocked_compile_round_robin_spans_chunks():
+    # replicated groups must round-robin ACROSS chunk boundaries: with
+    # balancing on, per-tile assignment counts must match the unblocked
+    # compile even when every chunk holds a single round-robin unit
+    layout, qs = _small_layout(seed=3)
+    batch = [np.asarray(q) for q in qs[:60]]
+    full = compile_activations(layout, batch, balance_replicas=True)
+    blk = compile_activations(layout, batch, balance_replicas=True,
+                              block_queries=1)
+    assert _acts_equal(blk, full)
+    off = compile_activations(layout, batch, balance_replicas=False,
+                              block_queries=2)
+    assert _acts_equal(
+        off, compile_activations(layout, batch, balance_replicas=False)
+    )
+
+
+def test_blocked_compile_all_empty_batch():
+    layout, _ = _small_layout(seed=1)
+    batch = [np.asarray([], dtype=np.int64)] * 4
+    assert _acts_equal(
+        compile_activations(layout, batch, block_queries=2),
+        compile_activations(layout, batch),
+    )
+
+
+# ----------------------------------------------- capacity guards ----
+
+
+def test_pair_key_capacity_guard():
+    _check_pair_key_capacity(3_037_000_499)  # boundary fits
+    with pytest.raises(NotImplementedError):
+        _check_pair_key_capacity(3_037_000_500)
+    # checked up front in build_cooccurrence — before any O(rows) alloc
+    with pytest.raises(NotImplementedError):
+        build_cooccurrence([np.asarray([0, 1])], 4_000_000_000)
+
+
+def test_grouping_heap_key_capacity_guard():
+    # total edge mass << shift must not bleed into the id bits
+    w = np.asarray([1 << 61, 1 << 61], dtype=np.int64)
+    g = CoOccurrenceGraph(
+        num_rows=4,
+        freq=np.asarray([2, 2, 0, 0], dtype=np.int64),
+        indptr=np.asarray([0, 1, 2, 2, 2], dtype=np.int64),
+        indices=np.asarray([1, 0], dtype=np.int64),
+        weights=w,
+        num_queries=2,
+    )
+    with pytest.raises(ValueError, match="heap keys overflow"):
+        correlation_aware_grouping(g, 2)
+
+
+def test_ent_key_capacity_guard():
+    layout, _ = _small_layout(seed=2)
+    _check_ent_key_capacity(layout, 1024)  # sane batch fits
+    huge = (1 << 63) // (layout.num_tiles * layout.tile_rows) + 1
+    with pytest.raises(ValueError, match="block_queries"):
+        _check_ent_key_capacity(layout, huge)
+
+
+def test_producer_gseq_capacity_guard():
+    reg = ProducerRegistry(stride=1 << 40)
+    assert reg.stamp("p", "t") == 0  # normal stamp fine
+    pid = reg.pid("p")
+    reg._next[pid]["t"] = 1 << 23  # (local+1) * 2^40 > 2^63 - 1
+    with pytest.raises(OverflowError, match="sequence capacity"):
+        reg.stamp("p", "t")
+
+
+# ------------------------------ scale-invariant plan patch math ------
+
+
+def _patch_setup(seed, num_rows=3000, S=3):
+    rng = np.random.default_rng(seed)
+    ranks = rng.permutation(num_rows).astype(np.float64) + 1.0
+    freq = (1e6 / ranks ** 1.05).astype(np.int64) + 1
+    g = CoOccurrenceGraph(
+        num_rows=num_rows, freq=freq,
+        indptr=np.zeros(num_rows + 1, dtype=np.int64),
+        indices=np.empty(0, dtype=np.int64),
+        weights=np.empty(0, dtype=np.int64),
+        num_queries=num_rows // 10,
+    )
+    grouping = frequency_grouping(g, 16)
+    plan = plan_replication(grouping, g.freq, EQ1_BATCH)
+    layout = build_layout(grouping, plan, 8)
+    gfreq = grouping.group_freq(g.freq)
+    sp = plan_shards([layout], [plan], S, group_freqs=[gfreq],
+                     eq1_batch=EQ1_BATCH)
+    return sp, gfreq
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_patch_matches_reference_oracle(seed):
+    sp, gfreq = _patch_setup(seed)
+    rng = np.random.default_rng(seed + 100)
+    repl = np.flatnonzero(sp.replicated_group)
+    cold = np.argsort(gfreq, kind="stable")[:12]
+    hot = repl[: min(12, repl.size)]
+    drift = gfreq.astype(np.float64)
+    drift[hot] *= 0.02
+    drift[cold] += float(gfreq[hot].sum()) * 0.98 / max(cold.size, 1)
+    for kw in ({}, {"shrink_slack": 1},
+               {"capacity": int(sp.max_local_tiles) + 4}):
+        ref = _reference_compute_plan_patch(sp, drift, eq1_batch=EQ1_BATCH,
+                                            **kw)
+        new = compute_plan_patch(sp, drift, eq1_batch=EQ1_BATCH, **kw)
+        assert _patches_equal(new, ref), kw
+        # mass-preserving drift: the candidates path is EXACT, not a
+        # heuristic (DESIGN.md §11)
+        cand = compute_plan_patch(sp, drift, eq1_batch=EQ1_BATCH,
+                                  candidates=np.union1d(cold, hot), **kw)
+        assert _patches_equal(cand, ref), kw
+
+
+def test_patch_noop_with_empty_candidates():
+    sp, gfreq = _patch_setup(7)
+    p = compute_plan_patch(sp, gfreq.astype(np.float64),
+                           eq1_batch=EQ1_BATCH,
+                           candidates=np.empty(0, dtype=np.int64))
+    assert not p.promoted and not p.demoted and not p.dma and not p.freed
+    assert np.array_equal(p.drifted_load, gfreq.astype(np.float64))
