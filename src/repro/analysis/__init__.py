@@ -1,0 +1,59 @@
+"""Correctness tooling for the ReCross serving stack (DESIGN.md §12).
+
+Three passes keep the invariants that PRs 3–9 layered into the serving
+stack machine-checked instead of enforced-by-example:
+
+* :mod:`repro.analysis.invariants` — runtime validators for the
+  documented §5/§6/§9 structural rules (per-shard slot uniqueness,
+  frozen ``group_copies``/tile space, residency↔tier consistency,
+  evict/fetch disjointness, packed-key capacity).  Opt-in via the
+  ``RECROSS_VALIDATE=1`` environment variable; wired into plan build,
+  patch apply-barriers and drain quiescence (default-on in the test
+  suite through ``conftest.py``).
+* :mod:`repro.analysis.races` — a static AST pass over ``repro/serve``
+  that extracts which locks guard which ``self._*`` attributes,
+  reports attributes touched both inside and outside their dominant
+  lock and any lock-acquisition-order violation against the blessed
+  order (DESIGN.md §5), plus :class:`~repro.analysis.races.LockMonitor`
+  — a runtime wrapper recording *real* acquisition orders under the
+  multiproducer stress tests to cross-check the static graph.
+* :mod:`repro.analysis.lint` — repo-specific AST lint rules (packed-key
+  arithmetic must route through the PR-9 guard helpers, no unseeded
+  randomness in ``src``/``benchmarks``, every ``_reference_*`` oracle
+  referenced by a test, no wall-clock reads in deterministic
+  merge/ordering paths, ``PlanPatch`` mutated only via
+  ``apply_plan_patch``, public ``serve``/``dist`` docstring coverage).
+
+CLI gate: ``python -m repro.analysis --strict`` runs the lint and the
+static lock pass and exits nonzero on any finding (the CI ``analysis``
+job).
+"""
+
+from repro.analysis.invariants import (
+    InvariantViolation,
+    validate_patch,
+    validate_plan,
+    validate_server_state,
+    validation_enabled,
+)
+from repro.analysis.lint import Finding, run_lint
+from repro.analysis.races import (
+    LockMonitor,
+    LockOrderError,
+    analyze_locks,
+    monitor_server,
+)
+
+__all__ = [
+    "InvariantViolation",
+    "validate_plan",
+    "validate_patch",
+    "validate_server_state",
+    "validation_enabled",
+    "Finding",
+    "run_lint",
+    "analyze_locks",
+    "LockMonitor",
+    "LockOrderError",
+    "monitor_server",
+]

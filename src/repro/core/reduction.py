@@ -138,6 +138,18 @@ def _pad_to_blocks(
     return ids, bms, nb
 
 
+def _check_block_key_capacity(n_outer: int, n_inner: int, what: str) -> None:
+    """Packed block keys ``outer * n_inner + inner`` must fit in int64.
+
+    Only reachable with absurd block counts, but wraparound here would
+    silently merge unrelated (block, tile) pairs instead of raising.
+    """
+    if n_outer and n_inner and n_outer > ((1 << 63) - 1) // n_inner:
+        raise OverflowError(
+            f"{what}: {n_outer} x {n_inner} packed keys overflow int64"
+        )
+
+
 def _padded_width(width: int, max_tiles: int | None, what: str) -> int:
     """Union width → tile-axis allocation: sublane-friendly multiple of 8.
 
@@ -181,6 +193,7 @@ def block_compiled_queries(
     vt = ids[vq, vs].astype(np.int64)
     vblk = vq // q_block
     num_tiles = int(vt.max()) + 1 if vt.size else 1
+    _check_block_key_capacity(max(nb, 1), num_tiles, "block_compiled_queries")
     key = vblk * np.int64(num_tiles) + vt
     uniq = np.unique(key)
     ub = (uniq // num_tiles).astype(np.int64)
@@ -350,6 +363,7 @@ def shard_block_queries(
         raise ValueError("plan does not hold an activated tile on its owner")
 
     Lmax = max(int(plan.max_local_tiles), 1)
+    _check_block_key_capacity(P * nb_safe, Lmax, "shard_block_queries")
     key = (pos_own * nb_safe + vblk) * Lmax + lt
     uniq = np.unique(key)
     usb = uniq // Lmax

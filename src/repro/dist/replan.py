@@ -149,6 +149,7 @@ class PlanPatch:
 
     @property
     def num_moved_groups(self) -> int:
+        """Groups changing replication class (promoted + demoted)."""
         return len(self.promoted) + len(self.demoted)
 
     @property
@@ -177,6 +178,7 @@ class PlanPatch:
                     or self.fetched or self.evicted)
 
     def summary(self) -> dict:
+        """Patch size counters for logs/reports."""
         return {
             "promoted_groups": len(self.promoted),
             "demoted_groups": len(self.demoted),
@@ -850,6 +852,16 @@ def apply_plan_patch(plan: ShardPlan, patch: PlanPatch) -> ShardPlan:
     between flushes).  Only placement arrays change: the fused tile
     space, table segments and ``group_copies`` carry over by reference.
     """
+    # opt-in structural validation at the apply barrier
+    # (RECROSS_VALIDATE=1, DESIGN.md §12); lazy import: analysis
+    # imports this module at its own top level
+    from repro.analysis.invariants import validation_enabled
+
+    if validation_enabled():
+        from repro.analysis.invariants import validate_patch
+
+        validate_patch(plan, patch)
+
     S = plan.num_shards
     tile_base = _group_tile_base(plan)
     copies = plan.group_copies
@@ -913,7 +925,7 @@ def apply_plan_patch(plan: ShardPlan, patch: PlanPatch) -> ShardPlan:
             )
         local[s, t] = new
 
-    return ShardPlan(
+    out = ShardPlan(
         num_shards=S,
         tables=plan.tables,
         replicated_group=replicated,
@@ -925,3 +937,8 @@ def apply_plan_patch(plan: ShardPlan, patch: PlanPatch) -> ShardPlan:
         group_copies=copies,
         capacity_tiles=plan.capacity_tiles,
     )
+    if validation_enabled():
+        from repro.analysis.invariants import validate_plan
+
+        validate_plan(out)
+    return out

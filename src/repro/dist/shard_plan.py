@@ -76,6 +76,7 @@ class TableSegment:
 
     @property
     def tile_end(self) -> int:
+        """One past the segment's last fused tile id."""
         return self.tile_offset + self.num_tiles
 
 
@@ -123,10 +124,12 @@ class ShardPlan:
 
     @property
     def num_groups(self) -> int:
+        """Fused group count ``G`` across all tables."""
         return int(self.replicated_group.shape[0])
 
     @property
     def num_tiles(self) -> int:
+        """Fused physical tile count ``T`` across all tables."""
         return int(self.shard_of_tile.shape[0])
 
     @property
@@ -144,6 +147,7 @@ class ShardPlan:
 
     @property
     def replicated_tiles(self) -> int:
+        """Fused tiles stored on every shard."""
         return int((self.shard_of_tile == -1).sum())
 
     @property
@@ -159,6 +163,7 @@ class ShardPlan:
 
     @property
     def cold_tiles(self) -> int:
+        """Fused tiles outside the hot tier (host-resident only)."""
         return int((self.shard_of_tile == COLD).sum())
 
     def shard_tiles(self, shard: int) -> np.ndarray:
@@ -404,7 +409,7 @@ def plan_shards(
         local_tile_of[s, resident] = np.arange(resident.size, dtype=np.int32)
         local_num_tiles[s] = resident.size
 
-    return ShardPlan(
+    plan = ShardPlan(
         num_shards=num_shards,
         tables=segs,
         replicated_group=replicated,
@@ -416,6 +421,15 @@ def plan_shards(
         group_copies=copies,
         capacity_tiles=capacity_tiles,
     )
+    # opt-in structural validation (RECROSS_VALIDATE=1, DESIGN.md §12);
+    # lazy import: analysis imports this module at its own top level
+    from repro.analysis.invariants import validation_enabled
+
+    if validation_enabled():
+        from repro.analysis.invariants import validate_plan
+
+        validate_plan(plan)
+    return plan
 
 
 def build_fused_image(

@@ -20,6 +20,8 @@ import numpy as np
 
 @dataclasses.dataclass
 class Request:
+    """One generation request moving through the continuous batcher."""
+
     uid: int
     prompt: np.ndarray          # (prompt_len,) int32
     max_new_tokens: int
@@ -32,12 +34,15 @@ class Request:
 
 @dataclasses.dataclass
 class ServeMetrics:
+    """Request-level serving metrics (TTFT, latency, token counts)."""
+
     completed: int = 0
     ttft_s: List[float] = dataclasses.field(default_factory=list)
     latency_s: List[float] = dataclasses.field(default_factory=list)
     tokens_out: int = 0
 
     def summary(self) -> Dict[str, float]:
+        """Mean TTFT/latency plus completion counters."""
         return {
             "completed": self.completed,
             "tokens_out": self.tokens_out,
@@ -62,6 +67,7 @@ class RequestBatcher:
         self.last_tokens = np.zeros(batch_size, np.int32)
 
     def submit(self, req: Request) -> None:
+        """Enqueues a request for admission on the next tick."""
         req.submitted_at = time.time()
         self.queue.append(req)
 
@@ -100,4 +106,5 @@ class RequestBatcher:
 
     @property
     def idle(self) -> bool:
+        """True when no request is queued or occupying a slot."""
         return not self.queue and all(s is None for s in self.slots)

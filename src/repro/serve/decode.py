@@ -66,6 +66,11 @@ def decode_step(
     enc: Optional[jax.Array] = None,
     readonly_cache: bool = True,
 ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One decode step, dispatched by model family.
+
+    Returns ``(logits, updated cache)``; with ``readonly_cache`` the
+    attention families return the input cache untouched (donation-free
+    serving path)."""
     if cfg.family in ("dense", "moe", "audio"):
         if readonly_cache:
             return _decode_attn_family_readonly(params, cfg, tokens, cache)

@@ -160,6 +160,7 @@ class FaultPlan:
         self.specs: List[FaultSpec] = list(specs)
 
     def add(self, kind: str, **kw) -> "FaultPlan":
+        """Appends one fault spec; chainable."""
         self.specs.append(FaultSpec(kind, **kw))
         return self
 
@@ -228,6 +229,7 @@ class FaultPlan:
         )
 
     def summary(self) -> Dict[str, object]:
+        """Fault counts by kind plus the poisoned-key list."""
         by_kind: Dict[str, int] = {}
         for s in self.specs:
             by_kind[s.kind] = by_kind.get(s.kind, 0) + 1
@@ -338,6 +340,7 @@ class FaultInjector:
             raise InjectedPatchFault("injected: plan patch apply failure")
 
     def summary(self) -> Dict[str, object]:
+        """Plan summary plus per-seam attempt/injection counters."""
         return {
             "plan": self.plan.summary(),
             "attempts": dict(self._attempts),
@@ -405,6 +408,7 @@ class RetryPolicy:
 
     @classmethod
     def parse(cls, policy) -> "RetryPolicy":
+        """``None`` → defaults; a RetryPolicy passes through."""
         if policy is None:
             return cls()
         if isinstance(policy, RetryPolicy):
@@ -468,6 +472,7 @@ class ErrorLedger:
         ))
 
     def record_recovery(self, seconds: float) -> None:
+        """Accounts one fault-to-healthy recovery interval."""
         self.recovery_s.append(seconds)
 
     def quarantined_keys(self) -> List[Tuple[str, int]]:
@@ -482,6 +487,7 @@ class ErrorLedger:
         return sorted((q[3], q[0], q[1]) for q in self.quarantined)
 
     def summary(self) -> Dict[str, object]:
+        """Failure/recovery counters for reports and chaos benches."""
         return {
             "retries": self.retries,
             "backoff_s": self.backoff_s,

@@ -63,6 +63,7 @@ def make_ring_cache(cfg: ModelConfig, batch: int, window: int, *, layers: int):
 
 
 def make_mamba_state(cfg: ModelConfig, batch: int, *, layers: int, head_dim: int = 64):
+    """Zero-initialized Mamba SSM + conv state for ``layers`` layers."""
     d_inner = 2 * cfg.d_model
     heads = d_inner // head_dim
     return {
@@ -72,6 +73,7 @@ def make_mamba_state(cfg: ModelConfig, batch: int, *, layers: int, head_dim: int
 
 
 def make_xlstm_state(cfg: ModelConfig, batch: int, *, n_slstm: int, n_mlstm: int):
+    """Zero-initialized xLSTM state (mLSTM matrix + sLSTM vectors)."""
     d, H = cfg.d_model, cfg.num_heads
     hd = d // H
     return {
@@ -114,4 +116,5 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int, *, window: int = 4096
 
 
 def cache_bytes(cache) -> int:
+    """Total bytes across every array leaf of a cache pytree."""
     return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))

@@ -74,6 +74,8 @@ class ProducerRegistry:
 
     def __init__(self, *, stride: int = SEQ_STRIDE):
         self.stride = int(stride)
+        # lock order (DESIGN.md §5): innermost — acquired after any of
+        # the server's three locks, never holds another lock inside
         self._lock = threading.Lock()
         self._pid: Dict[Hashable, int] = {}
         self._label: List[Hashable] = []
@@ -137,14 +139,14 @@ class ProducerRegistry:
         producer's rather than raising — their pid names no space.
         """
         pid = int(gseq) % self.stride
-        if pid < len(self._label):
-            return self._label[pid], int(gseq) // self.stride
+        if pid < len(self._label):  # unlocked: _label is append-only
+            return self._label[pid], int(gseq) // self.stride  # unlocked: see above
         return DEFAULT_PRODUCER, int(gseq) // self.stride
 
     def pid(self, producer: Optional[Hashable]) -> Optional[int]:
         """pid of a label, ``None`` when it never registered."""
         label = DEFAULT_PRODUCER if producer is None else producer
-        return self._pid.get(label)
+        return self._pid.get(label)  # unlocked: _pid only ever grows
 
     def next_seq(self, table: str, producer: Optional[Hashable] = None) -> int:
         """Next LOCAL sequence the label would stamp on ``table`` (0
@@ -168,7 +170,7 @@ class ProducerRegistry:
 
     def producers(self) -> List[Hashable]:
         """Registered labels in pid (registration) order."""
-        return list(self._label)
+        return list(self._label)  # unlocked: _label is append-only
 
     def state(self) -> Dict[str, object]:
         """Report snapshot: labels + per-space next-seq counters."""

@@ -162,10 +162,12 @@ class FlushPolicy:
 
     @property
     def is_async(self) -> bool:
+        """True for every policy but the synchronous ``"global"``."""
         return self.kind != "global"
 
     @property
     def owner_set_routing(self) -> bool:
+        """True when flush homes are owner-set tuples, not shards."""
         return self.kind == "owner-set"
 
 
@@ -424,6 +426,7 @@ class FlushScheduler:
         return self.due_reason(home) is not None
 
     def due_homes(self) -> List[Home]:
+        """Homes whose pending work should flush now."""
         return [h for h in self._pending if self.due(h)]
 
     def fill(self, home: Home) -> int:
@@ -432,9 +435,11 @@ class FlushScheduler:
         return sum(tr.fill for tr in self._trackers[home].values())
 
     def homes_with_pending(self) -> List[Home]:
+        """Homes holding at least one undelivered query."""
         return [h for h, q in self._pending.items() if q]
 
     def pending_total(self) -> int:
+        """Queries buffered across every home (0 = quiesced)."""
         return sum(len(q) for q in self._pending.values())
 
     # --------------------------------------------------------------- take --

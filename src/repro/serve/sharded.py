@@ -234,6 +234,8 @@ class ShardedServeStats:
     ledger: ErrorLedger = dataclasses.field(default_factory=ErrorLedger)
 
     def record(self, sbq, dim: int, wall_s: float, queries: int) -> None:
+        """Accounts one served batch: grid cells, widths, combine
+        traffic (scaled to the flush's participant set), wall time."""
         cells = sbq.grid_cells_per_shard()
         self.batches += 1
         self.queries += queries
@@ -288,6 +290,8 @@ class ShardedServeStats:
                 if self.host_compile_s > 0 else 0.0)
 
     def record_patch(self, patch: PlanPatch, tile_bytes: int = 0) -> None:
+        """Accounts one applied plan patch (replan vs rebase, moved
+        tiles, promotions/demotions, paging traffic)."""
         # paging accounting rides every applied patch: fetches DMA host
         # master bytes onto the device, evictions only free slots
         fetched = len(getattr(patch, "fetch_dma", ()) or ())
@@ -303,6 +307,8 @@ class ShardedServeStats:
         self.demoted_groups += len(patch.demoted)
 
     def summary(self) -> Dict[str, float]:
+        """Flat metrics dict for reports/benches (counters, latency
+        percentiles, paging and failure accounting)."""
         return {
             "num_shards": self.num_shards,
             "q_block": self.q_block,
@@ -674,13 +680,17 @@ class ShardedEmbeddingServer:
         # start are one atomic step, so two producers' first submits
         # cannot race two drivers into existence and a stamp can never
         # interleave with close() or the drain-time seq reset
+        # lock order (DESIGN.md §5): 3rd — after engine/results, before
+        # the registry's lock
         self._stamp_lock = threading.Lock()
         # engine lock: serializes the INLINE engine (ingest/flush/
         # barrier) under concurrent producers; the thread driver never
         # takes it (the hand-off queue is its serialization)
+        # lock order (DESIGN.md §5): outermost — taken before any other
         self._engine_lock = threading.RLock()
         # results lock: _completed appends (driver/host flush) vs the
         # drain-time extract-and-swap
+        # lock order (DESIGN.md §5): 2nd — after engine, before stamp
         self._results_lock = threading.Lock()
         self._closed = False
         # submits past the stamp but not yet delivered (hand-off put in
@@ -1070,7 +1080,7 @@ class ShardedEmbeddingServer:
     def _submit(
         self, table: str, query: Sequence[int], producer=None
     ) -> Dict[str, jax.Array]:
-        if table not in self._buffer:
+        if table not in self._buffer:  # unlocked: key set frozen at init
             raise KeyError(f"unknown table {table!r}")
         ids = np.asarray(list(query), dtype=np.int64)
         if ids.size:
@@ -1171,13 +1181,16 @@ class ShardedEmbeddingServer:
         """
         if self.scheduler is not None:
             return self.drain()
-        if self._buffered == 0:
-            return {}
-        batch = {n: q for n, q in self._buffer.items() if q}
-        out = self.serve(batch)
-        self._buffer = {n: [] for n in self.names}
-        self._buffered = 0
-        return out
+        # engine lock: a user-called flush must not interleave with a
+        # concurrent global-mode submit() appending to the buffer
+        with self._engine_lock:
+            if self._buffered == 0:
+                return {}
+            batch = {n: q for n, q in self._buffer.items() if q}
+            out = self.serve(batch)
+            self._buffer = {n: [] for n in self.names}
+            self._buffered = 0
+            return out
 
     # ------------------------------------------- tiered host path (§9) ----
 
@@ -1815,9 +1828,14 @@ class ShardedEmbeddingServer:
                     self.scheduler.push(table, seq, query_list)
                     pushed_back += 1
             self._handoff = None
+        if self.scheduler is not None:
+            requeued = self.scheduler.pending_total()
+        else:
+            # engine lock: snapshot vs a concurrent global-mode submit
+            with self._engine_lock:
+                requeued = self._buffered
         unserved = {
-            "requeued": (self.scheduler.pending_total()
-                         if self.scheduler is not None else self._buffered),
+            "requeued": requeued,
             "handoff_pushed_back": pushed_back,
             "in_flight": len(self._in_flight),
             "host_pending": (len(self._host_queue)
@@ -1927,10 +1945,28 @@ class ShardedEmbeddingServer:
                             and (self._host_queue is None
                                  or len(self._host_queue) == 0)
                             and not any(self._completed.values())):
+                        # opt-in structural validation at quiescence
+                        # (RECROSS_VALIDATE=1, DESIGN.md §12) — the
+                        # one moment every invariant must hold at once
+                        from repro.analysis.invariants import (
+                            validation_enabled,
+                        )
+
+                        if validation_enabled():
+                            from repro.analysis.invariants import (
+                                validate_server_state,
+                            )
+
+                            validate_server_state(self, quiesced=True)
                         self._registry.reset_seqs()
         return out
 
     # ------------------------------------------------------------- report --
+
+    def _snapshot_closed(self) -> bool:
+        """Reads the closed flag under the stamp lock that guards it."""
+        with self._stamp_lock:
+            return self._closed
 
     def report(self) -> Dict[str, object]:
         """Serving + placement accounting for dashboards and benches.
@@ -1989,7 +2025,7 @@ class ShardedEmbeddingServer:
                 "handoff_pending": (
                     self._handoff.qsize() if self._handoff is not None else 0
                 ),
-                "closed": self._closed,
+                "closed": self._snapshot_closed(),
                 **self.scheduler.state(),
                 "producers": self._registry.state(),
             }

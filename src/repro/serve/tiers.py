@@ -100,6 +100,7 @@ class TierConfig:
         return max(1, int(np.floor(self.capacity_frac * uncapped_depth)))
 
     def paging_policy(self, capacity_tiles: int) -> PagingPolicy:
+        """Resolved per-plan paging policy at a concrete capacity."""
         return PagingPolicy(
             capacity_tiles=int(capacity_tiles),
             hysteresis=float(self.hysteresis),
@@ -134,6 +135,7 @@ class ResidencyIndex:
 
     @property
     def any_cold(self) -> bool:
+        """True when at least one group lives outside the hot tier."""
         return not bool(self._resident.all())
 
     def groups_of(self, table: str, query: np.ndarray) -> np.ndarray:
@@ -191,6 +193,7 @@ class HostFetchQueue:
         return len(self._entries)
 
     def push(self, table: str, seq: int, query: np.ndarray, tick: int) -> None:
+        """Buffers one cold-routed query for the host gather."""
         if self._first_tick is None:
             self._first_tick = int(tick)
         self._entries.append((table, int(seq), query))
@@ -206,12 +209,14 @@ class HostFetchQueue:
         return None
 
     def take(self) -> List[Tuple[str, int, np.ndarray]]:
+        """Drains and returns every buffered entry (resets deadline)."""
         out = self._entries
         self._entries = []
         self._first_tick = None
         return out
 
     def state(self) -> dict:
+        """Queue depth + policy snapshot for reports."""
         return {"pending": len(self._entries),
                 "first_tick": self._first_tick,
                 "batch": self.batch, "deadline": self.deadline}

@@ -3,6 +3,10 @@
 * Falls back to the deterministic hypothesis stub when the real
   `hypothesis` package is absent (this container does not ship it; the
   CI workflow installs the real one when available).
+* Defaults ``RECROSS_VALIDATE=1`` so the structural validators
+  (``repro.analysis.invariants``, DESIGN.md §12) run at plan build,
+  patch apply-barriers and drain quiescence in every test; export
+  ``RECROSS_VALIDATE=0`` to profile without them.
 * Provides a stdlib per-test hang watchdog when `pytest-timeout` is
   absent: CI passes ``--timeout=600 --timeout-method=thread`` via
   ``PYTEST_ADDOPTS`` (a wedged driver thread or never-retiring flush
@@ -18,6 +22,8 @@ import os
 import sys
 
 import pytest
+
+os.environ.setdefault("RECROSS_VALIDATE", "1")
 
 try:
     import hypothesis  # noqa: F401
